@@ -1,0 +1,84 @@
+"""Shared benchmark plumbing: the paper's synthetic problems at CPU scale,
+run loops with bits-vs-metric traces, CSV emission."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dasha, marina, theory
+from repro.core.compressors import RandK
+from repro.core.node_compress import NodeCompressor
+from repro.core.oracles import FiniteSumProblem, StochasticProblem
+from repro.data.pipeline import synthetic_classification
+
+N_NODES = 5          # the paper uses 5 nodes throughout Appendix A
+
+
+def glm_problem(d: int = 60, m: int = 64, key: int = 0) -> FiniteSumProblem:
+    """Nonconvex GLM classification (paper A.1/A.2), synthetic stand-in for
+    mushrooms / real-sim (offline container)."""
+    feats, labels = synthetic_classification(jax.random.PRNGKey(key),
+                                             N_NODES, m, d)
+
+    def loss(x, a, y):
+        return (1.0 - 1.0 / (1.0 + jnp.exp(y * jnp.dot(a, x)))) ** 2
+
+    return FiniteSumProblem(loss=loss, features=feats, labels=labels)
+
+
+def logreg_nonconvex_problem(d: int = 60, m: int = 64, key: int = 1,
+                             lam: float = 1e-3, sigma: float = 0.3
+                             ) -> StochasticProblem:
+    """Logistic regression + nonconvex regularizer (paper A.3) with additive
+    gradient noise standing in for the sampling noise."""
+    feats, labels = synthetic_classification(jax.random.PRNGKey(key),
+                                             N_NODES, m, d)
+    fa = feats.reshape(N_NODES * m, d)
+    la = labels.reshape(N_NODES * m)
+
+    def loss(x, xi, i):
+        a = jax.lax.dynamic_slice_in_dim(fa, i * m, m, 0)
+        y = jax.lax.dynamic_slice_in_dim(la, i * m, m, 0)
+        z = -jax.nn.log_sigmoid(y * (a @ x))
+        reg = lam * jnp.sum(x * x / (1 + x * x))
+        return jnp.mean(z) + reg + xi @ x
+
+    def sample(k, i, batch):
+        return sigma * jax.random.normal(k, (batch, d)) / jnp.sqrt(d)
+
+    def full_grad_f(x):
+        gfun = jax.grad(lambda xx, i: loss(xx, jnp.zeros(d), i))
+        return jnp.mean(jnp.stack([gfun(x, i) for i in range(N_NODES)]), 0)
+
+    return StochasticProblem(loss=loss, sample=sample, n=N_NODES,
+                             true_grad=full_grad_f)
+
+
+def lipschitz_glm(problem: FiniteSumProblem) -> float:
+    a = problem.features
+    return float(jnp.mean(jnp.sum(a * a, -1)) * 2.0)
+
+
+def tune_gamma(run_fn, gammas) -> Dict:
+    """Paper protocol: fine-tune the stepsize over powers of two, keep the
+    run with the best final metric."""
+    best = None
+    for g in gammas:
+        out = run_fn(g)
+        if not jnp.isfinite(out["final"]):
+            continue
+        if best is None or out["final"] < best["final"]:
+            best = dict(out, gamma=g)
+    return best or {"final": float("nan"), "gamma": None}
+
+
+def emit(rows: List[Dict]) -> None:
+    if not rows:
+        return
+    keys = list(rows[0].keys())
+    print(",".join(keys))
+    for r in rows:
+        print(",".join(str(r.get(k, "")) for k in keys))

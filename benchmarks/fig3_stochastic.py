@@ -1,0 +1,79 @@
+"""Figure 3: stochastic setting — DASHA-MVR / DASHA-SYNC-MVR / VR-MARINA
+(online), B=1, parameters tied to the common ratio sigma^2/(n eps B) as in
+the paper (footnote 4)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import (N_NODES, emit, logreg_nonconvex_problem,
+                               tune_gamma)
+from repro.core import dasha, marina, theory
+from repro.core.compressors import RandK
+from repro.core.node_compress import NodeCompressor
+
+D, ROUNDS, B = 60, 1500, 1
+SIGMA2 = 0.09        # additive-noise variance (see common.py)
+
+
+def run():
+    problem = logreg_nonconvex_problem(D)
+    rows = []
+    for ratio in (1e2, 1e3):          # sigma^2 / (n eps B)
+        eps = SIGMA2 / (N_NODES * ratio * B)
+        for K in (6, 20):
+            comp = NodeCompressor(RandK(D, K), N_NODES)
+            omega = comp.omega
+            b = theory.mvr_b(omega, N_NODES, B, eps, SIGMA2)
+            p_sync = theory.sync_mvr_p(K, D, N_NODES, B, eps, SIGMA2)
+            p_mar = min(K / D, N_NODES * eps * B / SIGMA2)
+
+            def run_mvr(gamma):
+                hp = dasha.DashaHyper(gamma=gamma,
+                                      a=theory.momentum_a(omega),
+                                      variant="mvr", b=b, batch=B)
+                st = dasha.init(jnp.zeros(D), N_NODES, jax.random.PRNGKey(1),
+                                problem=problem, init_mode="stoch",
+                                batch_init=max(int(B / max(b, 1e-3)), 1))
+                st, trace, bits = dasha.run(st, hp, problem, comp, ROUNDS)
+                return {"final": float(jnp.mean(trace[-100:])),
+                        "bits": bits}
+
+            def run_sync(gamma):
+                hp = dasha.DashaHyper(gamma=gamma,
+                                      a=theory.momentum_a(omega),
+                                      variant="sync_mvr", p=p_sync, batch=B,
+                                      batch_sync=32)
+                st = dasha.init(jnp.zeros(D), N_NODES, jax.random.PRNGKey(1),
+                                problem=problem, init_mode="stoch",
+                                batch_init=32)
+                st, trace, bits = dasha.run(st, hp, problem, comp, ROUNDS)
+                return {"final": float(jnp.mean(trace[-100:])),
+                        "bits": bits}
+
+            def run_vr_online(gamma):
+                hp = marina.MarinaHyper(gamma=gamma, p=p_mar,
+                                        variant="vr_online", batch=B,
+                                        batch_sync=32)
+                st = marina.init(jnp.zeros(D), jax.random.PRNGKey(1),
+                                 problem)
+                st, trace, bits = marina.run(st, hp, problem, comp, ROUNDS)
+                return {"final": float(jnp.mean(trace[-100:])),
+                        "bits": bits}
+
+            gamma0 = theory.gamma_dasha_mvr(2.0, 2.0, 1.0, omega, N_NODES,
+                                            B, b)
+            gammas = [gamma0 * 2 ** i for i in range(0, 9)]
+            for name, fn in [("dasha_mvr", run_mvr),
+                             ("dasha_sync_mvr", run_sync),
+                             ("vr_marina_online", run_vr_online)]:
+                best = tune_gamma(fn, gammas)
+                rows.append({"bench": "fig3_stochastic", "ratio": ratio,
+                             "k": K, "method": name, "gamma": best["gamma"],
+                             "grad_sq_tail": best["final"],
+                             "coords_sent": float(best["bits"][-1])})
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,43 @@
+"""Pallas kernel micro-bench: fused dasha_update vs the unfused jnp chain.
+
+On this CPU container the kernel runs in interpret mode (Python body), so
+wall-times are NOT meaningful — we report the structural numbers instead:
+HBM bytes per element for fused vs unfused (the kernel's reason to exist)
+plus a correctness residual vs ref.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.kernels import ops, ref
+
+
+def run():
+    d = 1 << 20
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    grad, h, gl = (jax.random.normal(k, (d,)) for k in ks[:3])
+    mask = jax.random.bernoulli(ks[3], 1 / 32, (d,)).astype(jnp.float32)
+    a, scale = 1 / 63, 32.0
+
+    m, hn, gln = ops.dasha_update(grad, h, gl, mask, a, scale)
+    e_m, e_hn, e_gln = ref.dasha_update_ref(grad, h, gl, mask, a, scale)
+    resid = float(jnp.max(jnp.abs(m - e_m)) + jnp.max(jnp.abs(gln - e_gln)))
+
+    # HBM traffic per element (fp32): unfused chain materialises
+    # delta (w), m (w+r), g_new (w), h copy (w) + reads of grad/h/gl/mask
+    unfused_bytes = 4 * (4 + 5)          # 4 reads + 5 writes/reads of temps
+    fused_bytes = 4 * (4 + 3)            # 4 reads + 3 writes, one pass
+    return [{
+        "bench": "kernel", "kernel": "dasha_update", "d": d,
+        "max_resid_vs_ref": f"{resid:.2e}",
+        "unfused_bytes_per_elt": unfused_bytes,
+        "fused_bytes_per_elt": fused_bytes,
+        "hbm_saving": f"{unfused_bytes / fused_bytes:.2f}x",
+        "note": "interpret-mode on CPU; timing only meaningful on TPU",
+    }]
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,47 @@
+"""Roofline report (deliverable g): reads the dry-run JSON produced by
+``repro.launch.dryrun --json results/dryrun_all.json`` and prints the
+per-(arch x shape) roofline table.  If the JSON is missing, prints a hint
+(the dry-run needs its own process: 512 placeholder devices)."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+
+CANDIDATES = ("results/dryrun_all.json", "results/dryrun_single.json")
+
+
+def run():
+    path = next((p for p in CANDIDATES if os.path.exists(p)), None)
+    if path is None:
+        return [{"bench": "roofline", "note":
+                 "run `PYTHONPATH=src python -m repro.launch.dryrun "
+                 "--json results/dryrun_all.json` first"}]
+    rows = []
+    with open(path) as f:
+        data = json.load(f)
+    for r in data:
+        if r.get("status") != "ok":
+            rows.append({"bench": "roofline", "arch": r["arch"],
+                         "shape": r["shape"], "status": r["status"],
+                         "bottleneck": r.get("why", r.get("error", ""))[:60],
+                         "t_compute_s": "", "t_memory_s": "",
+                         "t_collective_s": "", "peak_gb": "",
+                         "useful_flops_ratio": ""})
+            continue
+        rows.append({
+            "bench": "roofline", "arch": r["arch"], "shape": r["shape"],
+            "status": f"ok[{r['mesh']}]", "bottleneck": r["bottleneck"],
+            "t_compute_s": f"{r['t_compute_s']:.3e}",
+            "t_memory_s": f"{r['t_memory_s']:.3e}",
+            "t_collective_s": f"{r['t_collective_s']:.3e}",
+            "peak_gb": round(r["peak_gb"], 2),
+            "useful_flops_ratio":
+                round(r["useful_flops_ratio"], 3)
+                if r.get("useful_flops_ratio") else ""})
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,49 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig1,table1]
+
+Each module exposes ``run() -> list[dict]``; rows are printed as CSV with a
+leading `bench` column.  The roofline report reads the dry-run JSON (run
+``repro.launch.dryrun`` separately — it needs 512 placeholder devices).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks.common import emit
+
+BENCHES = ["fig1_gradient", "fig2_finite_sum", "fig3_stochastic",
+           "fig4_dnn", "fig5_quadratic_pl", "table1_complexity",
+           "kernel_bench", "roofline_report"]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names (prefix match)")
+    args = ap.parse_args(argv)
+    selected = BENCHES
+    if args.only:
+        pats = args.only.split(",")
+        selected = [b for b in BENCHES
+                    if any(b.startswith(p) for p in pats)]
+    failures = 0
+    for name in selected:
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        t0 = time.time()
+        print(f"\n=== {name} ===")
+        try:
+            rows = mod.run()
+            emit(rows)
+            print(f"[{name}] done in {time.time()-t0:.1f}s")
+        except Exception as e:
+            failures += 1
+            print(f"[{name}] FAILED: {type(e).__name__}: {e}",
+                  file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,79 @@
+"""Serving example: batched prefill + KV-cache decode through the public API
+(the serve_step the decode_32k / long_500k dry-run shapes lower).
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch gemma3-12b]
+
+Runs the reduced config of the chosen family: prefill a batch of prompts,
+then greedily decode new tokens one step at a time.
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.data.pipeline import SyntheticTextConfig, make_lm_batch
+from repro.models import init_params, lm
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-12b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    total = args.prompt_len + args.new_tokens
+
+    tc = SyntheticTextConfig(vocab_size=cfg.vocab_size,
+                             seq_len=args.prompt_len)
+    kw = {}
+    if cfg.arch_type == "vlm":
+        kw = dict(with_images=cfg.num_image_tokens, d_model=cfg.d_model,
+                  dtype=cfg.jax_dtype)
+    if cfg.arch_type == "audio":
+        kw = dict(with_frames=cfg.num_audio_frames, d_model=cfg.d_model,
+                  dtype=cfg.jax_dtype)
+    batch = make_lm_batch(key, tc, args.batch, **kw)
+
+    image_kv = enc_kv = None
+    if cfg.arch_type == "vlm":
+        image_kv = lm.make_image_kv(cfg, params, batch["image_embeds"])
+    if cfg.arch_type == "audio":
+        enc_kv = lm.make_enc_kv(cfg, params, batch["frames"])
+    cache = lm.init_cache(cfg, args.batch, total, image_kv=image_kv,
+                          enc_kv=enc_kv)
+
+    decode = jax.jit(lambda p, c, tok, t: lm.decode_step(cfg, p, c, tok, t))
+
+    # prefill by stepping the decode path over the prompt (exercises the
+    # cache-consistency guarantees tested in tests/test_lm_parity.py)
+    t0 = time.time()
+    tok = batch["tokens"][:, 0]
+    for t in range(args.prompt_len):
+        tok = batch["tokens"][:, t]
+        logits, cache = decode(params, cache, tok, jnp.int32(t))
+    print(f"[serve] {cfg.name}: prefilled {args.batch}x{args.prompt_len} "
+          f"tokens in {time.time()-t0:.2f}s")
+
+    t0 = time.time()
+    out_tokens = []
+    tok = jnp.argmax(logits, -1).astype(jnp.int32) % cfg.vocab_size
+    for t in range(args.prompt_len, total):
+        out_tokens.append(tok)
+        logits, cache = decode(params, cache, tok, jnp.int32(t))
+        tok = jnp.argmax(logits, -1).astype(jnp.int32) % cfg.vocab_size
+    dt = time.time() - t0
+    gen = jnp.stack(out_tokens, 1)
+    print(f"[serve] generated {args.new_tokens} tokens/seq in {dt:.2f}s "
+          f"({args.batch*args.new_tokens/dt:.1f} tok/s)")
+    print(f"[serve] sample row: {gen[0][:12].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""End-to-end driver: train a language model with DASHA for a few hundred
+steps (the deliverable-(b) scenario; scaled to this CPU container).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300] [--arch ...]
+
+This wraps the production launcher (repro.launch.train); on a TPU cluster the
+same entry point takes --full to select the assigned full-size config under
+the 16x16 / 2x16x16 meshes validated by the dry-run.
+"""
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--arch", default="starcoder2-3b")
+    args, rest = ap.parse_known_args()
+    sys.exit(train_main([
+        "--arch", args.arch, "--steps", str(args.steps),
+        "--nodes", "4", "--batch", "2", "--seq", "128",
+        "--gamma", "0.003", "--compression", "0.0625",
+        "--server-opt", "adam", "--log-every", "25", *rest]))

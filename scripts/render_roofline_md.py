@@ -1,0 +1,47 @@
+"""Render the EXPERIMENTS.md §Roofline tables from the dry-run JSONs."""
+import json
+import sys
+
+
+def render(path, title):
+    rows = json.load(open(path))
+    out = [f"### {title}", "",
+           "| arch | shape | peak GB/dev | t_compute s | t_memory s | "
+           "t_collective s | bottleneck | useful-FLOPs | top collective |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] == "skip":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | "
+                       f"skip: {r['why'][:42]} | — | — |")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | FAIL | | | | "
+                       f"{r.get('error','')[:60]} | | |")
+            continue
+        det = r.get("coll_detail", {})
+        vols = {k: v for k, v in det.items() if not k.endswith("_count")}
+        top = max(vols, key=vols.get) if vols else "-"
+        ufr = r.get("useful_flops_ratio")
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['peak_gb']:.2f} | "
+            f"{r['t_compute_s']:.2e} | {r['t_memory_s']:.2e} | "
+            f"{r['t_collective_s']:.2e} | **{r['bottleneck']}** | "
+            f"{ufr:.2f} | {top} ({vols.get(top,0)/1e9:.1f} GB) |"
+            if ufr else
+            f"| {r['arch']} | {r['shape']} | {r['peak_gb']:.2f} | "
+            f"{r['t_compute_s']:.2e} | {r['t_memory_s']:.2e} | "
+            f"{r['t_collective_s']:.2e} | **{r['bottleneck']}** | — | "
+            f"{top} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    for path, title in [("results/dryrun_single.json",
+                         "Single pod: 16×16 = 256 chips"),
+                        ("results/dryrun_multi.json",
+                         "Multi-pod: 2×16×16 = 512 chips")]:
+        try:
+            print(render(path, title))
+            print()
+        except FileNotFoundError:
+            print(f"(missing {path})")

@@ -1,0 +1,51 @@
+"""Pytree checkpointing: npz payload + json treedef (no external deps).
+
+Handles arbitrary nested dict/list/tuple/NamedTuple-free pytrees of arrays and
+scalars; sufficient for params + optimizer/DASHA state on a single host.
+(Multi-host sharded checkpointing would use array-serialization per shard —
+out of scope for the CPU container, noted in DESIGN.md.)
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def save_checkpoint(path: str, tree: Any, step: int = 0) -> None:
+    os.makedirs(path, exist_ok=True)
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    # npz has no bfloat16: store as float32 and restore the dtype on load
+    arrays, dtypes = {}, []
+    for i, l in enumerate(leaves):
+        a = np.asarray(l)
+        dtypes.append(str(a.dtype))
+        if a.dtype.name == "bfloat16":
+            a = a.astype(np.float32)
+        arrays[f"leaf_{i}"] = a
+    np.savez(os.path.join(path, "arrays.npz"), **arrays)
+    with open(os.path.join(path, "meta.json"), "w") as f:
+        json.dump({"treedef": str(treedef), "num_leaves": len(leaves),
+                   "dtypes": dtypes, "step": step}, f)
+
+
+def load_checkpoint(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (shape/dtype template)."""
+    import jax.numpy as jnp
+    data = np.load(os.path.join(path, "arrays.npz"))
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    restored = [jnp.asarray(data[f"leaf_{i}"]).astype(
+                    jnp.asarray(l).dtype)
+                for i, l in enumerate(leaves)]
+    for got, want in zip(restored, leaves):
+        assert got.shape == np.asarray(want).shape, \
+            f"checkpoint shape mismatch: {got.shape} vs {want.shape}"
+    return jax.tree_util.tree_unflatten(treedef, restored)
+
+
+def checkpoint_step(path: str) -> int:
+    with open(os.path.join(path, "meta.json")) as f:
+        return json.load(f)["step"]

@@ -1,0 +1,170 @@
+"""DASHA family (Algorithm 1) and DASHA-SYNC-MVR (Algorithm 2), verbatim.
+
+Functional JAX: ``init(...) -> DashaState``; ``step(state, ...) -> DashaState``
+is jit-able and carries the full per-node state stacked on axis 0 (vmap on a
+single host, shard_map over ('pod','data') on a mesh — see core/sharded.py and
+optim/distributed.py for the model-training integration).
+
+The four variants differ ONLY in the h-update (Alg. 1 line 8), exactly as in
+the paper.  The message/aggregation lines 9-14 are shared:
+
+    m_i     = C_i(h_i^{t+1} - h_i^t - a (g_i^t - h_i^t))
+    g_i    <- g_i + m_i
+    g      <- g + (1/n) sum_i m_i
+
+Invariant (tested): g^t == mean_i g_i^t at every t.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.node_compress import NodeCompressor
+from repro.core.oracles import FiniteSumProblem, StochasticProblem
+
+
+class DashaState(NamedTuple):
+    x: jax.Array          # (d,)  server iterate
+    g: jax.Array          # (d,)  server gradient estimator
+    g_local: jax.Array    # (n,d) per-node g_i
+    h_local: jax.Array    # (n,d) per-node h_i
+    key: jax.Array
+    t: jax.Array          # step counter
+    bits_sent: jax.Array  # cumulative scalar coords sent per node (accounting)
+
+
+@dataclasses.dataclass(frozen=True)
+class DashaHyper:
+    gamma: float                    # stepsize
+    a: float                        # compressor momentum, 1/(2 omega + 1)
+    variant: str = "dasha"          # dasha | page | mvr | sync_mvr
+    b: float = 1.0                  # MVR momentum
+    p: float = 1.0                  # PAGE / SYNC-MVR coin probability
+    batch: int = 1                  # B
+    batch_sync: int = 1             # B' (SYNC-MVR big batch)
+
+
+# ---------------------------------------------------------------------------
+# initialisation (Cor. 6.2 / 6.5: g_i^0 = h_i^0 = grad f_i(x^0); Cor. 6.8 /
+# 6.10: minibatch of size B_init; zeros also allowed under PL)
+# ---------------------------------------------------------------------------
+
+def init(x0: jax.Array, n: int, key: jax.Array, *,
+         problem: Optional[Any] = None, hyper: Optional[DashaHyper] = None,
+         init_mode: str = "exact", batch_init: int = 1) -> DashaState:
+    d = x0.shape[0]
+    if init_mode == "zeros" or problem is None:
+        h0 = jnp.zeros((n, d), x0.dtype)
+        bits0 = 0.0
+    elif init_mode == "exact":
+        h0 = problem.full_grad(x0)
+        bits0 = float(d)
+    elif init_mode == "stoch":
+        key, sub = jax.random.split(key)
+        h0 = problem.stoch_grad(sub, x0, batch_init)
+        bits0 = float(d)
+    else:
+        raise ValueError(init_mode)
+    return DashaState(x=x0, g=jnp.mean(h0, 0), g_local=h0, h_local=h0,
+                      key=key, t=jnp.zeros((), jnp.int32),
+                      bits_sent=jnp.asarray(bits0, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# h-updates (Alg. 1 line 8)
+# ---------------------------------------------------------------------------
+
+def _h_dasha(problem, key, hp, x_new, x_old, h):
+    return problem.full_grad(x_new)
+
+
+def _h_page(problem: FiniteSumProblem, key, hp: DashaHyper, x_new, x_old, h):
+    k_coin, k_batch = jax.random.split(key)
+    coin = jax.random.bernoulli(k_coin, hp.p)
+    full = problem.full_grad(x_new)
+    inc = h + problem.minibatch_diff(k_batch, x_new, x_old, hp.batch)
+    return jnp.where(coin, full, inc)
+
+
+def _h_mvr(problem: StochasticProblem, key, hp: DashaHyper, x_new, x_old, h):
+    g_new, g_old = problem.stoch_grad_pair(key, x_new, x_old, hp.batch)
+    return g_new + (1.0 - hp.b) * (h - g_old)
+
+
+_H_UPDATES = {"dasha": _h_dasha, "page": _h_page, "mvr": _h_mvr}
+
+
+# ---------------------------------------------------------------------------
+# the step
+# ---------------------------------------------------------------------------
+
+def step(state: DashaState, hp: DashaHyper, problem,
+         comp: NodeCompressor) -> DashaState:
+    """One communication round of Algorithm 1 (or Algorithm 2 for sync_mvr)."""
+    key, k_h, k_c, k_coin = jax.random.split(state.key, 4)
+    x_new = state.x - hp.gamma * state.g          # line 4 (server) + broadcast
+
+    if hp.variant == "sync_mvr":
+        return _step_sync_mvr(state, hp, problem, comp, x_new, key, k_h, k_c,
+                              k_coin)
+
+    h_new = _H_UPDATES[hp.variant](problem, k_h, hp, x_new, state.x,
+                                   state.h_local)                     # line 8
+    delta = h_new - state.h_local - hp.a * (state.g_local - state.h_local)
+    m = comp(k_c, delta)                                              # line 9
+    g_local = state.g_local + m                                       # line 10
+    g = state.g + jnp.mean(m, 0)                                      # line 14
+    return DashaState(x=x_new, g=g, g_local=g_local, h_local=h_new, key=key,
+                      t=state.t + 1,
+                      bits_sent=state.bits_sent + comp.payload_per_node)
+
+
+def _step_sync_mvr(state, hp, problem, comp, x_new, key, k_h, k_c, k_coin):
+    """Algorithm 2.  With prob p all nodes send a FRESH uncompressed megabatch
+    gradient (the synchronization step); otherwise a SARAH-style compressed
+    drift message."""
+    coin = jax.random.bernoulli(k_coin, hp.p)
+
+    # -- sync branch (lines 9-11): h_i = fresh B' batch; m_i = g_i = h_i ----
+    h_sync = problem.stoch_grad(k_h, x_new, hp.batch_sync)
+
+    # -- compressed branch (lines 13-15): b=0 MVR (SARAH) + usual message ---
+    g_pair_new, g_pair_old = problem.stoch_grad_pair(k_h, x_new, state.x,
+                                                     hp.batch)
+    h_inc = g_pair_new + (state.h_local - g_pair_old)
+    delta = h_inc - state.h_local - hp.a * (state.g_local - state.h_local)
+    m_c = comp(k_c, delta)
+
+    h_new = jnp.where(coin, h_sync, h_inc)
+    g_local = jnp.where(coin, h_sync, state.g_local + m_c)
+    g = jnp.where(coin, jnp.mean(h_sync, 0), state.g + jnp.mean(m_c, 0))
+    d = state.x.shape[0]
+    payload = jnp.where(coin, float(d), comp.payload_per_node)
+    return DashaState(x=x_new, g=g, g_local=g_local, h_local=h_new, key=key,
+                      t=state.t + 1, bits_sent=state.bits_sent + payload)
+
+
+def run(state: DashaState, hp: DashaHyper, problem, comp: NodeCompressor,
+        num_rounds: int, *, metric_every: int = 1, metric_fn=None):
+    """Drive T rounds under jax.lax.scan; returns final state + metric trace.
+
+    ``metric_fn(state) -> scalar`` (default: ||grad f(x)||^2 if the problem
+    exposes an exact gradient).
+    """
+    if metric_fn is None:
+        if hasattr(problem, "grad_f"):
+            metric_fn = lambda s: jnp.sum(problem.grad_f(s.x) ** 2)
+        elif getattr(problem, "true_grad", None) is not None:
+            metric_fn = lambda s: jnp.sum(problem.true_grad(s.x) ** 2)
+        else:
+            metric_fn = lambda s: jnp.float32(0)
+
+    def body(carry, _):
+        new = step(carry, hp, problem, comp)
+        return new, (metric_fn(new), new.bits_sent)
+
+    final, (trace, bits) = jax.lax.scan(body, state, None, length=num_rounds)
+    return final, trace, bits

@@ -1,0 +1,94 @@
+"""MARINA / VR-MARINA / VR-MARINA (online) baselines (Gorbunov et al., 2021).
+
+Implemented because every paper figure compares against them.  MARINA's server
+keeps a single estimator g; with probability p ALL nodes upload an
+uncompressed gradient simultaneously (the synchronization DASHA removes),
+otherwise compressed gradient differences:
+
+    g^{t+1} = (1/n) sum_i [ c=1 ?  G_i(x^{t+1})
+                                :  g^t + C_i(G_i(x^{t+1}) - G_i(x^t)) ]
+
+where G_i is the oracle (full grad / minibatch-diff / online minibatch-diff).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.node_compress import NodeCompressor
+
+
+class MarinaState(NamedTuple):
+    x: jax.Array
+    x_prev: jax.Array
+    g: jax.Array
+    key: jax.Array
+    t: jax.Array
+    bits_sent: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class MarinaHyper:
+    gamma: float
+    p: float                     # sync probability
+    variant: str = "marina"      # marina | vr | vr_online
+    batch: int = 1
+    batch_sync: int = 1          # megabatch B' for vr_online sync step
+
+
+def init(x0: jax.Array, key: jax.Array, problem) -> MarinaState:
+    g0 = jnp.mean(problem.full_grad(x0), 0) if hasattr(problem, "full_grad") \
+        else jnp.mean(problem.stoch_grad(key, x0, 64), 0)
+    return MarinaState(x=x0, x_prev=x0, g=g0, key=key,
+                       t=jnp.zeros((), jnp.int32),
+                       bits_sent=jnp.asarray(float(x0.shape[0]), jnp.float32))
+
+
+def step(state: MarinaState, hp: MarinaHyper, problem,
+         comp: NodeCompressor) -> MarinaState:
+    key, k_coin, k_b, k_c = jax.random.split(state.key, 4)
+    x_new = state.x - hp.gamma * state.g
+    coin = jax.random.bernoulli(k_coin, hp.p)
+    d = state.x.shape[0]
+
+    if hp.variant == "marina":
+        sync = problem.full_grad(x_new)                      # (n, d)
+        diff = problem.full_grad(x_new) - problem.full_grad(state.x)
+    elif hp.variant == "vr":
+        sync = problem.full_grad(x_new)
+        diff = problem.minibatch_diff(k_b, x_new, state.x, hp.batch)
+    elif hp.variant == "vr_online":
+        sync = problem.stoch_grad(k_b, x_new, hp.batch_sync)
+        gn, go = problem.stoch_grad_pair(k_b, x_new, state.x, hp.batch)
+        diff = gn - go
+    else:
+        raise ValueError(hp.variant)
+
+    m = comp(k_c, diff)
+    g_comp = state.g + jnp.mean(m, 0)
+    g_sync = jnp.mean(sync, 0)
+    g = jnp.where(coin, g_sync, g_comp)
+    payload = jnp.where(coin, float(d), comp.payload_per_node)
+    return MarinaState(x=x_new, x_prev=state.x, g=g, key=key, t=state.t + 1,
+                       bits_sent=state.bits_sent + payload)
+
+
+def run(state: MarinaState, hp: MarinaHyper, problem, comp: NodeCompressor,
+        num_rounds: int, metric_fn=None):
+    if metric_fn is None:
+        if hasattr(problem, "grad_f"):
+            metric_fn = lambda s: jnp.sum(problem.grad_f(s.x) ** 2)
+        elif getattr(problem, "true_grad", None) is not None:
+            metric_fn = lambda s: jnp.sum(problem.true_grad(s.x) ** 2)
+        else:
+            metric_fn = lambda s: jnp.float32(0)
+
+    def body(carry, _):
+        new = step(carry, hp, problem, comp)
+        return new, (metric_fn(new), new.bits_sent)
+
+    final, (trace, bits) = jax.lax.scan(body, state, None, length=num_rounds)
+    return final, trace, bits

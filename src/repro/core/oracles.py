@@ -1,0 +1,127 @@
+"""Gradient oracles for the three settings of Section 1.2.
+
+Every oracle exposes per-node quantities as stacked ``(n, d)`` arrays (the node
+axis is vmap-ed on CPU and shard_map-ed on a mesh).  Problems are supplied as a
+per-sample loss ``loss(x, feat, label)``; data lives in ``(n, m, ...)`` arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class FiniteSumProblem:
+    """f_i(x) = (1/m) sum_j loss(x, a_ij, y_ij)   (eq. (2)).
+
+    ``features``: (n, m, ...), ``labels``: (n, m, ...).
+    """
+
+    loss: Callable[[jax.Array, jax.Array, jax.Array], jax.Array]
+    features: jax.Array
+    labels: jax.Array
+
+    @property
+    def n(self) -> int:
+        return self.features.shape[0]
+
+    @property
+    def m(self) -> int:
+        return self.features.shape[1]
+
+    # -- function values -------------------------------------------------
+    def f(self, x: jax.Array) -> jax.Array:
+        """Global objective f(x) = (1/n) sum_i f_i(x)."""
+        per = jax.vmap(lambda a, y: jnp.mean(
+            jax.vmap(lambda aa, yy: self.loss(x, aa, yy))(a, y)))(
+                self.features, self.labels)
+        return jnp.mean(per)
+
+    # -- oracles ----------------------------------------------------------
+    def full_grad(self, x: jax.Array) -> jax.Array:
+        """(n, d): exact nabla f_i(x) for every node."""
+        gfun = jax.grad(self.loss)
+
+        def node(a, y):
+            return jnp.mean(jax.vmap(lambda aa, yy: gfun(x, aa, yy))(a, y), 0)
+
+        return jax.vmap(node)(self.features, self.labels)
+
+    def grad_f(self, x: jax.Array) -> jax.Array:
+        return jnp.mean(self.full_grad(x), axis=0)
+
+    def _sample_idx(self, key: jax.Array, batch: int) -> jax.Array:
+        # i.i.d. WITH replacement, matching the paper's multiset I_i.
+        return jax.random.randint(key, (self.n, batch), 0, self.m)
+
+    def minibatch_grad(self, key: jax.Array, x: jax.Array,
+                       batch: int) -> jax.Array:
+        """(n, d): (1/B) sum_{j in I_i} nabla f_ij(x)."""
+        idx = self._sample_idx(key, batch)
+        gfun = jax.grad(self.loss)
+
+        def node(a, y, ids):
+            return jnp.mean(
+                jax.vmap(lambda j: gfun(x, a[j], y[j]))(ids), 0)
+
+        return jax.vmap(node)(self.features, self.labels, idx)
+
+    def minibatch_diff(self, key: jax.Array, x_new: jax.Array,
+                       x_old: jax.Array, batch: int) -> jax.Array:
+        """(n, d): (1/B) sum_{j in I_i} [nabla f_ij(x_new) - nabla f_ij(x_old)]
+        with a SHARED sample multiset for both points (PAGE / line 8)."""
+        idx = self._sample_idx(key, batch)
+        gfun = jax.grad(self.loss)
+
+        def node(a, y, ids):
+            def per(j):
+                return gfun(x_new, a[j], y[j]) - gfun(x_old, a[j], y[j])
+            return jnp.mean(jax.vmap(per)(ids), 0)
+
+        return jax.vmap(node)(self.features, self.labels, idx)
+
+
+@dataclasses.dataclass(frozen=True)
+class StochasticProblem:
+    """f_i(x) = E_xi[loss(x, xi, i)]  (eq. (3)).
+
+    ``sample``: (key, node_idx, batch) -> batch of xi realisations;
+    ``loss``: per-sample stochastic loss.  Used for DASHA-MVR / SYNC-MVR /
+    VR-MARINA(online).
+    """
+
+    loss: Callable[[jax.Array, jax.Array, jax.Array], jax.Array]
+    sample: Callable[[jax.Array, jax.Array, int], jax.Array]
+    n: int
+    # exact gradient of E[f] when available (synthetic problems), for metrics
+    true_grad: Callable[[jax.Array], jax.Array] | None = None
+
+    def stoch_grad(self, key: jax.Array, x: jax.Array,
+                   batch: int) -> jax.Array:
+        """(n, d): fresh minibatch stochastic gradient per node."""
+        gfun = jax.grad(self.loss)
+
+        def node(i, k):
+            xi = self.sample(k, i, batch)
+            return jnp.mean(jax.vmap(lambda s: gfun(x, s, i))(xi), 0)
+
+        keys = jax.random.split(key, self.n)
+        return jax.vmap(node)(jnp.arange(self.n), keys)
+
+    def stoch_grad_pair(self, key: jax.Array, x_new: jax.Array,
+                        x_old: jax.Array, batch: int
+                        ) -> Tuple[jax.Array, jax.Array]:
+        """Gradients at x_new and x_old with the SAME xi samples (MVR)."""
+        gfun = jax.grad(self.loss)
+
+        def node(i, k):
+            xi = self.sample(k, i, batch)
+            gn = jnp.mean(jax.vmap(lambda s: gfun(x_new, s, i))(xi), 0)
+            go = jnp.mean(jax.vmap(lambda s: gfun(x_old, s, i))(xi), 0)
+            return gn, go
+
+        keys = jax.random.split(key, self.n)
+        return jax.vmap(node)(jnp.arange(self.n), keys)

@@ -1,0 +1,27 @@
+"""Pytree <-> flat-vector plumbing for the optimizer core.
+
+DASHA's math lives on flat d-vectors; model params are pytrees.  We centralise
+ravel/unravel here so the optimizer core stays dimension-agnostic.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+PyTree = Any
+
+
+def ravel(tree: PyTree) -> Tuple[jax.Array, Callable[[jax.Array], PyTree]]:
+    flat, unravel = ravel_pytree(tree)
+    return flat, unravel
+
+
+def tree_dim(tree: PyTree) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_zeros_like_flat(tree: PyTree) -> jax.Array:
+    return jnp.zeros((tree_dim(tree),), jnp.float32)

@@ -1,0 +1,3 @@
+from repro.data.pipeline import (SyntheticTextConfig, make_lm_batch,  # noqa: F401
+                                 make_node_batches, synthetic_classification,
+                                 synthetic_quadratic)

@@ -1,0 +1,84 @@
+"""Deterministic synthetic data pipelines.
+
+The container is offline, so LIBSVM/CIFAR10 from the paper's experiments are
+replaced by synthetic generators with the same statistical roles (documented
+in DESIGN.md §8):
+
+* ``synthetic_classification`` — (features, labels) split across n nodes, for
+  the nonconvex GLM experiments (paper A.1/A.2/A.3).
+* ``synthetic_quadratic``      — the PL quadratic of Appendix I.
+* ``make_lm_batch``            — deterministic token stream for LM training;
+  a Zipf-ish unigram distribution plus a copy structure so the loss has
+  learnable signal.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def synthetic_classification(key: jax.Array, n_nodes: int, m: int, d: int,
+                             *, separable_scale: float = 1.0
+                             ) -> Tuple[jax.Array, jax.Array]:
+    """Features (n, m, d) and +/-1 labels (n, m); a planted linear teacher
+    generates labels so the task is learnable (stands in for `mushrooms` /
+    `real-sim`)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    feats = jax.random.normal(k1, (n_nodes, m, d)) / jnp.sqrt(d)
+    teacher = jax.random.normal(k2, (d,)) * separable_scale
+    margin = jnp.einsum("nmd,d->nm", feats, teacher)
+    flips = jax.random.bernoulli(k3, 0.05, margin.shape)
+    labels = jnp.where(flips, -jnp.sign(margin), jnp.sign(margin))
+    return feats, labels
+
+
+def synthetic_quadratic(key: jax.Array, d: int, *, mu: float = 1.0,
+                        L: float = 2.0) -> Tuple[jax.Array, jax.Array]:
+    """A = A^T > 0 with spectrum in [mu, L] (Appendix I), plus b."""
+    k1, k2 = jax.random.split(key)
+    q, _ = jnp.linalg.qr(jax.random.normal(k1, (d, d)))
+    eigs = jnp.linspace(mu, L, d)
+    A = (q * eigs) @ q.T
+    b = jax.random.normal(k2, (d,))
+    return A, b
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticTextConfig:
+    vocab_size: int
+    seq_len: int
+    copy_period: int = 16     # tokens repeat with this period => learnable
+
+
+def make_lm_batch(key: jax.Array, cfg: SyntheticTextConfig, batch: int,
+                  *, with_images: int = 0, with_frames: int = 0,
+                  d_model: int = 0, dtype=jnp.bfloat16) -> Dict:
+    """Next-token LM batch: {"tokens", "labels"} (+ stub modality embeds)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    S, V = cfg.seq_len, cfg.vocab_size
+    base = jax.random.randint(k1, (batch, cfg.copy_period), 1, V)
+    reps = -(-S // cfg.copy_period) + 1
+    stream = jnp.tile(base, (1, reps))
+    noise = jax.random.randint(k2, (batch, S + 1), 1, V)
+    noisy = jax.random.bernoulli(k3, 0.1, (batch, S + 1))
+    seq = jnp.where(noisy, noise, stream[:, :S + 1])
+    out = {"tokens": seq[:, :S], "labels": seq[:, 1:]}
+    if with_images:
+        out["image_embeds"] = jax.random.normal(
+            k3, (batch, with_images, d_model)).astype(dtype)
+    if with_frames:
+        out["frames"] = jax.random.normal(
+            k3, (batch, with_frames, d_model)).astype(dtype)
+    return out
+
+
+def make_node_batches(key: jax.Array, cfg: SyntheticTextConfig, n_nodes: int,
+                      per_node_batch: int, **kw) -> Dict:
+    """Batch with a leading node axis (n, b, ...) for DASHA training."""
+    batch = make_lm_batch(key, cfg, n_nodes * per_node_batch, **kw)
+    return jax.tree_util.tree_map(
+        lambda x: x.reshape((n_nodes, per_node_batch) + x.shape[1:]), batch)

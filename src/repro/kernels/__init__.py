@@ -1,0 +1,12 @@
+# Pallas TPU kernels for the paper's compute hot-spots, validated against
+# pure-jnp oracles via interpret=True on CPU:
+#  * dasha_update.py — fused DASHA estimator update + compression (GD-like
+#    and MVR variants) + a row-wise QSGD quantizer; ops.py wrappers are
+#    drop-ins for the optimizer hot loop.
+#  * ssd_chunk.py — Mamba2/SSD intra-chunk linear-attention block (the
+#    [ssm]/[hybrid] archs' training hot-spot); ops.ssd_chunk_scan is a
+#    drop-in for models.ssm.ssd_chunked.
+from repro.kernels import dasha_update, ops, ref, ssd_chunk  # noqa: F401
+from repro.kernels.ops import (dasha_mvr_update, quantize,  # noqa: F401
+                               ssd_chunk_scan)
+from repro.kernels.ops import dasha_update as fused_dasha_update  # noqa: F401

@@ -1,0 +1,121 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handles the (d,) <-> (R, 128) padding/reshape plumbing so callers pass flat
+vectors (or any shape); kernels see lane-aligned 2-D blocks.  On this CPU
+container every call runs with ``interpret=True`` (the kernel body executes
+in Python), on a real TPU the same code path compiles to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dasha_update import (LANE, dasha_mvr_update_pallas,
+                                        dasha_update_pallas, quantize_pallas)
+
+INTERPRET = True  # flipped by real-TPU deployments
+
+
+def _to_lanes(x: jax.Array) -> Tuple[jax.Array, int]:
+    flat = x.reshape(-1).astype(jnp.float32)
+    d = flat.shape[0]
+    pad = (-d) % LANE
+    flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, LANE), d
+
+
+def _from_lanes(x2: jax.Array, d: int, shape, dtype) -> jax.Array:
+    return x2.reshape(-1)[:d].reshape(shape).astype(dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("a", "scale"))
+def dasha_update(grad: jax.Array, h: jax.Array, g_local: jax.Array,
+                 mask: jax.Array, a: float, scale: float
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused DASHA update on arbitrary-shape tensors (see kernel docstring).
+
+    Returns (m, h_new, g_local_new) with the input shape/dtype.
+    """
+    shape, dtype = grad.shape, grad.dtype
+    g2, d = _to_lanes(grad)
+    h2, _ = _to_lanes(h)
+    gl2, _ = _to_lanes(g_local)
+    mk2, _ = _to_lanes(mask)
+    m, hn, gln = dasha_update_pallas(g2, h2, gl2, mk2, a, scale,
+                                     interpret=INTERPRET)
+    back = lambda t: _from_lanes(t, d, shape, dtype)
+    return back(m), back(hn), back(gln)
+
+
+@functools.partial(jax.jit, static_argnames=("a", "b", "scale"))
+def dasha_mvr_update(grad_new: jax.Array, grad_old: jax.Array, h: jax.Array,
+                     g_local: jax.Array, mask: jax.Array, a: float, b: float,
+                     scale: float) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    shape, dtype = grad_new.shape, grad_new.dtype
+    gn2, d = _to_lanes(grad_new)
+    go2, _ = _to_lanes(grad_old)
+    h2, _ = _to_lanes(h)
+    gl2, _ = _to_lanes(g_local)
+    mk2, _ = _to_lanes(mask)
+    m, hn, gln = dasha_mvr_update_pallas(gn2, go2, h2, gl2, mk2, a, b, scale,
+                                         interpret=INTERPRET)
+    back = lambda t: _from_lanes(t, d, shape, dtype)
+    return back(m), back(hn), back(gln)
+
+
+@functools.partial(jax.jit, static_argnames=("levels",))
+def quantize(x: jax.Array, key: jax.Array, levels: int = 15) -> jax.Array:
+    """Unbiased row-wise stochastic quantization of x: (R, C)."""
+    u = jax.random.uniform(key, x.shape, jnp.float32)
+    return quantize_pallas(x, u, levels, interpret=INTERPRET)
+
+
+def ssd_chunk_scan(x: jax.Array, dt: jax.Array, A: jax.Array, b: jax.Array,
+                   c: jax.Array, D: jax.Array, chunk: int
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Pallas-kernel SSD forward (drop-in for models.ssm.ssd_chunked).
+
+    x: (B,S,H,P), dt: (B,S,H), A: (H,), b/c: (B,S,N), D: (H,).
+    Intra-chunk blocks run in the Pallas kernel; the O(S/chunk) inter-chunk
+    recurrence is a lax.scan; the off-diagonal combine is two einsums.
+    """
+    from repro.kernels.ssd_chunk import ssd_chunk_pallas
+
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    nc = S // chunk
+    G = B * H
+    # flatten (batch, head) -> G; broadcast per-batch b/c across heads
+    xg = (jnp.moveaxis(x, 2, 1)               # (B,H,S,P)
+          .reshape(G, nc, chunk, P))
+    dtg = jnp.moveaxis(dt, 2, 1).reshape(G, nc, chunk)
+    Ag = jnp.broadcast_to(A[None], (B, H)).reshape(G)
+    bg = jnp.broadcast_to(b[:, None], (B, H, S, N)).reshape(G, nc, chunk, N)
+    cg = jnp.broadcast_to(c[:, None], (B, H, S, N)).reshape(G, nc, chunk, N)
+
+    y_diag, states, decays, acs = ssd_chunk_pallas(
+        xg, dtg, Ag, bg, cg, interpret=INTERPRET)
+
+    def scan_fn(s, inp):
+        st, dk = inp                               # (G,N,P), (G,)
+        out = s
+        s = s * dk[:, None, None] + st
+        return s, out
+
+    init = jnp.zeros((G, N, P), jnp.float32)
+    final, prev = jax.lax.scan(
+        scan_fn, init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(decays, 1, 0)))
+    prev = jnp.moveaxis(prev, 0, 1)                # (G,nc,N,P)
+
+    # off-diagonal: y_off[q] = exp(acs[q]) * (c[q] @ prev_state)
+    y_off = jnp.exp(acs)[..., None] * jnp.einsum("gnqs,gnsp->gnqp", cg,
+                                                 prev)
+    yg = y_diag + y_off + xg.astype(jnp.float32) \
+        * jnp.broadcast_to(D[None], (B, H)).reshape(G)[:, None, None, None]
+    y = jnp.moveaxis(yg.reshape(B, H, S, P), 1, 2).astype(x.dtype)
+    final_state = final.reshape(B, H, N, P)
+    return y, final_state

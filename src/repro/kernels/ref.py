@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantics contracts: tests sweep shapes/dtypes and assert
+``assert_allclose(kernel(interpret=True), ref)``.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def dasha_update_ref(grad: jax.Array, h: jax.Array, g_local: jax.Array,
+                     mask: jax.Array, a: float, scale: float
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused DASHA node update (Alg. 1 lines 8-10, GD-like h), elementwise:
+
+        h_new   = grad
+        delta   = h_new - h - a * (g_local - h)
+        m       = mask * delta * scale          (unbiased sparsifier)
+        g_new   = g_local + m
+
+    Returns (m, h_new, g_new); every tensor float32, shape of ``grad``.
+    """
+    h_new = grad
+    delta = h_new - h - a * (g_local - h)
+    m = mask * delta * scale
+    return m, h_new, g_local + m
+
+
+def dasha_mvr_update_ref(grad_new: jax.Array, grad_old: jax.Array,
+                         h: jax.Array, g_local: jax.Array, mask: jax.Array,
+                         a: float, b: float, scale: float
+                         ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused DASHA-MVR node update (Alg. 1 line 8 MVR + lines 9-10):
+
+        h_new = grad_new + (1-b) * (h - grad_old)
+        delta = h_new - h - a * (g_local - h)
+        m     = mask * delta * scale
+        g_new = g_local + m
+    """
+    h_new = grad_new + (1.0 - b) * (h - grad_old)
+    delta = h_new - h - a * (g_local - h)
+    m = mask * delta * scale
+    return m, h_new, g_local + m
+
+
+def quantize_ref(x: jax.Array, u: jax.Array, levels: int) -> jax.Array:
+    """Per-row unbiased stochastic quantization (QSGD, s=levels):
+
+        y = |x| / ||x||_2 * s;  q = floor(y) + Bernoulli(y - floor(y))
+        out = sign(x) * q * ||x||_2 / s
+
+    ``x``: (R, C); ``u``: uniform(0,1) of the same shape (external RNG);
+    row-wise L2 scale.  Zero rows pass through as zeros.
+    """
+    xf = x.astype(jnp.float32)
+    norm = jnp.sqrt(jnp.sum(xf * xf, axis=-1, keepdims=True))
+    safe = jnp.where(norm > 0, norm, 1.0)
+    y = jnp.abs(xf) / safe * levels
+    lo = jnp.floor(y)
+    q = lo + (u < (y - lo)).astype(jnp.float32)
+    out = jnp.sign(xf) * q * safe / levels
+    return jnp.where(norm > 0, out, 0.0).astype(x.dtype)

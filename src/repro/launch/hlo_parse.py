@@ -1,0 +1,140 @@
+"""Loop-aware collective-byte extraction from post-SPMD HLO text.
+
+XLA's ``cost_analysis`` counts a while-loop body ONCE regardless of trip
+count, so any roofline term read straight off it is wrong by ~L (layers) for
+scanned models.  We instead walk the computation call graph: every while op
+multiplies its body's contribution by the loop trip count (recovered from
+the loop condition's comparison constant), and collective bytes are summed
+computation-by-computation with the accumulated multiplier.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_COMP_HDR = re.compile(r"^(?:ENTRY )?%?([\w.\-]+)(?:\.clone)* \([^)]*\)"
+                       r".* {\s*$")
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+_WHILE_RE = re.compile(
+    r"while\([^)]*\), condition=%?([\w.\-]+), body=%?([\w.\-]+)")
+_CALL_RE = re.compile(
+    r"(?:call|fusion)\([^)]*\)[^\n]*?(?:to_apply|calls)=%?([\w.\-]+)")
+_COND_RE = re.compile(
+    r"(?:conditional|case)\([^)]*\)[^\n]*?"
+    r"(?:branch_computations=\{([^}]*)\}|true_computation=%?([\w.\-]+), "
+    r"false_computation=%?([\w.\-]+))")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_CONST_RE = re.compile(r"s32\[\]\W+constant\((\d+)\)")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def split_computations(txt: str) -> Dict[str, str]:
+    """Map computation name -> body text.  HLO text lists computations as
+    ``%name (params) -> type {`` ... ``}`` blocks (ENTRY for main)."""
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in txt.splitlines():
+        stripped = line.rstrip()
+        if not line.startswith(" ") and ("{" in stripped
+                                         and "(" in stripped
+                                         and "->" in stripped):
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(", stripped)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                continue
+        if cur is not None:
+            if stripped == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+    return {k: "\n".join(v) for k, v in comps.items()}
+
+
+def _entry_name(txt: str) -> str:
+    m = re.search(r"^ENTRY\s+%?([\w.\-]+)\s*\(", txt, re.MULTILINE)
+    return m.group(1) if m else ""
+
+
+def trip_count(cond_text: str) -> int:
+    """Heuristic: the largest s32 scalar constant in the loop condition is
+    the trip bound (the induction comparison)."""
+    consts = [int(c) for c in _CONST_RE.findall(cond_text)]
+    return max(consts) if consts else 1
+
+
+def computation_multipliers(txt: str) -> Dict[str, float]:
+    """name -> how many times the computation executes per step."""
+    comps = split_computations(txt)
+    entry = _entry_name(txt)
+    mult: Dict[str, float] = {}
+
+    def visit(name: str, m: float, depth=0):
+        if depth > 64 or name not in comps:
+            return
+        mult[name] = mult.get(name, 0.0) + m
+        body = comps[name]
+        for w in _WHILE_RE.finditer(body):
+            cond, wbody = w.group(1), w.group(2)
+            tc = trip_count(comps.get(cond, ""))
+            visit(wbody, m * tc, depth + 1)
+            visit(cond, m * (tc + 1), depth + 1)
+        for c in _CALL_RE.finditer(body):
+            visit(c.group(1), m, depth + 1)
+        for c in _COND_RE.finditer(body):
+            branches = c.group(1)
+            names = []
+            if branches:
+                names = [b.strip().lstrip("%") for b in branches.split(",")]
+            else:
+                names = [c.group(2), c.group(3)]
+            for nm in names:
+                if nm:
+                    visit(nm, m, depth + 1)  # upper bound: every branch
+
+    if entry:
+        visit(entry, 1.0)
+    return mult
+
+
+def collective_bytes_loop_aware(txt: str) -> Dict[str, float]:
+    """Per-kind collective byte totals, weighted by loop trip counts."""
+    comps = split_computations(txt)
+    mults = computation_multipliers(txt)
+    out: Dict[str, float] = {k: 0.0 for k in COLLECTIVES}
+    counts: Dict[str, float] = {k + "_count": 0.0 for k in COLLECTIVES}
+    for name, body in comps.items():
+        m = mults.get(name, 0.0)
+        if m == 0.0:
+            continue
+        for op in _OP_RE.finditer(body):
+            shape_str, kind, phase = op.group(1), op.group(2), op.group(3)
+            if phase == "-done":
+                continue
+            out[kind] += m * _shape_bytes(shape_str)
+            counts[kind + "_count"] += m
+    out.update(counts)  # type: ignore[arg-type]
+    return out

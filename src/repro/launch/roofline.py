@@ -1,0 +1,144 @@
+"""Roofline terms from a compiled dry-run artifact (no real hardware).
+
+    compute term    = HLO_FLOPs / (chips * PEAK_FLOPS)
+    memory term     = HLO_bytes / (chips * HBM_BW)
+    collective term = collective_bytes / (chips * LINK_BW)
+
+``cost_analysis`` supplies flops/bytes; collective bytes are parsed out of the
+compiled HLO text by summing the output-shape sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute op.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+# TPU v5e-class hardware constants (per chip)
+PEAK_FLOPS = 197e12      # bf16 FLOP/s
+HBM_BW = 819e9           # bytes/s
+LINK_BW = 50e9           # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# `%x = f32[8,128]{1,0} all-reduce(...)` — also tuple shapes `(f32[..], ..)`
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind byte totals from compiled (or lowered) HLO text.
+
+    Bytes counted are each op's OUTPUT shape — for -start/-done async pairs
+    only the -start is counted.
+    """
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    counts: Dict[str, int] = {k + "_count": 0 for k in _COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, kind, phase = m.group(1), m.group(2), m.group(3)
+        if phase == "-done":
+            continue
+        out[kind] += _shape_bytes(shape_str)
+        counts[kind + "_count"] += 1
+    out.update(counts)  # type: ignore[arg-type]
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                 # total HLO FLOPs (all chips)
+    hbm_bytes: float             # total HLO bytes accessed (all chips)
+    coll_bytes: float            # total collective bytes (all chips)
+    chips: int
+    coll_detail: Dict[str, int]
+    model_flops: Optional[float] = None   # 6*N*D (or 6*N_active*D)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / (self.chips * LINK_BW)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)  # type: ignore[arg-type]
+
+    @property
+    def useful_flops_ratio(self) -> Optional[float]:
+        if not self.model_flops or not self.flops:
+            return None
+        return self.model_flops / self.flops
+
+    def row(self) -> Dict:
+        return {
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "hlo_gflops": self.flops / 1e9,
+            "hbm_gb": self.hbm_bytes / 1e9,
+            "coll_gb": self.coll_bytes / 1e9,
+            "useful_flops_ratio": self.useful_flops_ratio,
+        }
+
+
+def roofline_from_compiled(compiled, chips: int,
+                           model_flops: Optional[float] = None,
+                           hlo_text: Optional[str] = None) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):       # older jax returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    det = collective_bytes(text)
+    coll = float(sum(v for k, v in det.items() if not k.endswith("_count")))
+    return Roofline(flops=flops, hbm_bytes=hbm, coll_bytes=coll, chips=chips,
+                    coll_detail=det, model_flops=model_flops)
+
+
+def memory_per_device(compiled) -> Dict[str, float]:
+    """Upper-bound live bytes per device: arguments + temps + outputs,
+    minus whatever the compiler aliased in-place (donated state)."""
+    ma = compiled.memory_analysis()
+    get = lambda k: float(getattr(ma, k, 0.0))
+    return {
+        "argument_gb": get("argument_size_in_bytes") / 1e9,
+        "output_gb": get("output_size_in_bytes") / 1e9,
+        "temp_gb": get("temp_size_in_bytes") / 1e9,
+        "alias_gb": get("alias_size_in_bytes") / 1e9,
+        "peak_gb": (get("argument_size_in_bytes")
+                    + get("temp_size_in_bytes")
+                    + get("output_size_in_bytes")
+                    - get("alias_size_in_bytes")) / 1e9,
+    }

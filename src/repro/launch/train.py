@@ -1,0 +1,102 @@
+"""End-to-end DASHA training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch starcoder2-3b \
+        --steps 200 --nodes 4 --batch 2 --seq 128 [--smoke/--full] \
+        --compression 0.03125 --variant dasha [--ckpt out/ckpt]
+
+On this CPU container the driver runs the REDUCED (smoke) config of the
+selected architecture family on a 1-device mesh — the same code path that the
+dry-run lowers for the 256/512-chip production meshes.  ``--full`` selects
+the assigned full config (only sensible on a real cluster).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.io import save_checkpoint
+from repro.configs import get_config, get_smoke_config
+from repro.data.pipeline import SyntheticTextConfig, make_node_batches
+from repro.models import init_params, lm
+from repro.optim.distributed import (DashaTrainConfig, dasha_train_init,
+                                     make_train_step)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="starcoder2-3b")
+    ap.add_argument("--full", action="store_true",
+                    help="use the full assigned config (cluster only)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--nodes", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=2, help="per-node batch")
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--gamma", type=float, default=0.003)
+    ap.add_argument("--compression", type=float, default=1 / 32)
+    ap.add_argument("--mode", default="independent",
+                    choices=["independent", "permk"])
+    ap.add_argument("--variant", default="dasha", choices=["dasha", "mvr"])
+    ap.add_argument("--mvr-b", type=float, default=0.1)
+    ap.add_argument("--server-opt", default="adam", choices=["sgd", "adam"])
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="fused Pallas dasha_update path")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch) if args.full else get_smoke_config(args.arch)
+    key = jax.random.PRNGKey(args.seed)
+    k_init, k_state, k_data = jax.random.split(key, 3)
+
+    params = init_params(cfg, k_init)
+    n_params = sum(int(x.size) for x in jax.tree_util.tree_leaves(params))
+    print(f"[train] arch={cfg.name} params={n_params/1e6:.2f}M "
+          f"nodes={args.nodes} tokens/step={args.nodes*args.batch*args.seq}")
+
+    dasha = DashaTrainConfig(
+        gamma=args.gamma, compression=args.compression, mode=args.mode,
+        variant=args.variant, b=args.mvr_b, n_nodes=args.nodes,
+        server_opt=args.server_opt, use_kernel=args.use_kernel)
+
+    def node_loss(p, b):
+        return lm.loss_fn(cfg, p, b)[0]
+
+    state = dasha_train_init(params, dasha, k_state)
+    step = jax.jit(make_train_step(dasha, node_loss))
+
+    tcfg = SyntheticTextConfig(vocab_size=cfg.vocab_size, seq_len=args.seq)
+    data_kw = {}
+    if cfg.arch_type == "vlm":
+        data_kw = dict(with_images=cfg.num_image_tokens,
+                       d_model=cfg.d_model, dtype=cfg.jax_dtype)
+    if cfg.arch_type == "audio":
+        data_kw = dict(with_frames=cfg.num_audio_frames,
+                       d_model=cfg.d_model, dtype=cfg.jax_dtype)
+
+    eval_loss = jax.jit(lambda p, b: lm.loss_fn(
+        cfg, p, jax.tree_util.tree_map(
+            lambda x: x.reshape((-1,) + x.shape[2:]), b))[1]["loss"])
+
+    t0 = time.time()
+    for t in range(args.steps):
+        k_data, k_b = jax.random.split(k_data)
+        batch = make_node_batches(k_b, tcfg, args.nodes, args.batch, **data_kw)
+        state, metrics = step(state, batch)
+        if t % args.log_every == 0 or t == args.steps - 1:
+            lo = float(eval_loss(state.params, batch))
+            gn = float(metrics["g_norm_sq"])
+            print(f"[train] step {t:5d} loss={lo:.4f} |g|^2={gn:.3e} "
+                  f"payload={float(metrics['payload_frac']):.4f} "
+                  f"({time.time()-t0:.1f}s)")
+    if args.ckpt:
+        save_checkpoint(args.ckpt, state.params, step=args.steps)
+        print(f"[train] saved params to {args.ckpt}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,4 @@
+"""Model substrate: attention/MoE/SSM layers and LM assembly."""
+from repro.models import attention, blocks, common, init, lm, moe, sharding, ssm  # noqa: F401
+from repro.models.common import ArchConfig  # noqa: F401
+from repro.models.init import init_params  # noqa: F401

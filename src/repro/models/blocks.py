@@ -1,0 +1,75 @@
+"""Block application: pre-norm transformer blocks (dense/MoE/MLA), cross-attn
+blocks (VLM/whisper), and Mamba blocks — prefill and decode variants."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.common import ArchConfig, mlp_apply, rms_norm
+from repro.models.moe import moe_ffn
+from repro.models.ssm import mamba_mixer_decode, mamba_mixer_prefill
+
+
+def _ffn(p: Dict, x: jax.Array, cfg: ArchConfig,
+         dropless: bool = False) -> Tuple[jax.Array, jax.Array]:
+    if cfg.num_experts:
+        return moe_ffn(p, x, cfg, dropless=dropless)
+    return mlp_apply(p, x, cfg.mlp_type), jnp.float32(0)
+
+
+def block_prefill(p: Dict, x: jax.Array, positions: jax.Array,
+                  cfg: ArchConfig, window=0) -> Tuple[jax.Array, jax.Array]:
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if cfg.use_mla:
+        a = attn.mla_prefill(p["attn"], h, positions, cfg)
+    else:
+        a = attn.gqa_prefill(p["attn"], h, positions, cfg, window=window)
+    x = x + a
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    y, aux = _ffn(p["ffn"], h, cfg)
+    return x + y, aux
+
+
+def block_decode(p: Dict, x: jax.Array, t: jax.Array, cache: Dict,
+                 cfg: ArchConfig, window=0, ring: bool = False
+                 ) -> Tuple[jax.Array, Dict]:
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if cfg.use_mla:
+        a, cache = attn.mla_decode(p["attn"], h, t, cache, cfg)
+    else:
+        a, cache = attn.gqa_decode(p["attn"], h, t, cache, cfg,
+                                   window=window, ring=ring)
+    x = x + a
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    y, _ = _ffn(p["ffn"], h, cfg, dropless=True)
+    return x + y, cache
+
+
+def cross_block(p: Dict, x: jax.Array, image_states: Optional[jax.Array],
+                cfg: ArchConfig, kv: Optional[Dict] = None) -> jax.Array:
+    """Gated cross-attention block (llama-3.2-vision style).  Either
+    ``image_states`` (prefill: fresh K/V) or ``kv`` (decode: precomputed)."""
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kv is not None:
+        a = attn.cross_attn_cached(p["attn"], h, kv, cfg)
+    else:
+        a = attn.cross_attn(p["attn"], h, image_states, cfg)
+    x = x + jnp.tanh(p["attn_gate"]) * a
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    y = mlp_apply(p["ffn"], h, cfg.mlp_type)
+    return x + jnp.tanh(p["mlp_gate"]) * y
+
+
+def mamba_block_prefill(p: Dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    return x + mamba_mixer_prefill(p, h, cfg)
+
+
+def mamba_block_decode(p: Dict, x: jax.Array, cache: Dict,
+                       cfg: ArchConfig) -> Tuple[jax.Array, Dict]:
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    y, cache = mamba_mixer_decode(p, h, cache, cfg)
+    return x + y, cache

@@ -1,0 +1,171 @@
+"""Mixture-of-Experts FFN: top-k router, capacity-based dense dispatch
+(Shazeer-style einsum dispatch — maps onto expert parallelism over the
+"model" mesh axis), optional shared experts (DeepSeek-V2).
+
+Dispatch is the classic dropping formulation: each expert processes at most
+``capacity = ceil(cf * tokens * k / E)`` tokens; overflow tokens fall through
+to the residual (plus shared experts).  Aux load-balance loss is returned for
+training.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig, mlp_apply
+from repro.models.sharding import constrain_expert_major, constrain_token_major
+
+
+def _capacity(cfg: ArchConfig, num_tokens: int) -> int:
+    cap = int(cfg.capacity_factor * num_tokens * cfg.experts_per_token
+              / cfg.num_experts)
+    return max(cap, 1)
+
+
+def moe_ffn(p: Dict, x: jax.Array, cfg: ArchConfig,
+            dropless: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """x: (B,S,d) -> (out (B,S,d), aux_loss scalar).
+
+    ``dropless=True`` sets capacity = num_tokens (an expert can never
+    overflow) — used on the decode path so decode == prefill semantics don't
+    depend on batch composition.
+
+    Dispatch mode (``cfg.moe_dispatch``):
+    * ``gather``  — slot->token gather dispatch (cheapest FLOPs; backward
+      contains scatters which GSPMD shards poorly on big meshes).
+    * ``einsum``  — Switch-Transformer one-hot matmul dispatch over token
+      chunks (MXU-friendly, no scatters anywhere in fwd/bwd; costs extra
+      dispatch FLOPs ~ 2*E*C/ (3*K*ff) of the expert GEMMs).  This is the
+      mode the production dry-run uses for training.
+    """
+    if cfg.moe_dispatch == "einsum" and not dropless:
+        return _moe_ffn_einsum(p, x, cfg)
+    B, S, d = x.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+    N = B * S
+    xt = x.reshape(N, d)
+    C = N if dropless else _capacity(cfg, N)
+
+    logits = (xt @ p["router"]).astype(jnp.float32)            # (N, E)
+    probs = jax.nn.softmax(logits, -1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)              # (N, K)
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, k) inside its expert's buffer
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.int32)      # (N, K, E)
+    flat = onehot.reshape(N * K, E)
+    pos_in_expert = (jnp.cumsum(flat, 0) - flat).reshape(N, K, E)
+    pos = jnp.sum(pos_in_expert * onehot, -1)                  # (N, K)
+    keep = pos < C
+    # Gather-based dispatch (GSPMD-friendly: the expert dim of every large
+    # tensor shards over "model"; only small int32 index maps are scattered).
+    tok_idx = jnp.broadcast_to(jnp.arange(N)[:, None], (N, K))
+    e_flat = gate_idx.reshape(-1)
+    c_flat = jnp.where(keep, pos, C).reshape(-1)               # C = dropped slot
+    t_flat = tok_idx.reshape(-1)
+    # slot -> token map (E, C+1); sentinel N points at an all-zero pad row
+    slot_tok = jnp.full((E, C + 1), N, jnp.int32)
+    slot_tok = slot_tok.at[e_flat, c_flat].set(t_flat, mode="drop")
+    xt_pad = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)], 0)
+    buffers = constrain_expert_major(xt_pad[slot_tok[:, :C]])  # (E, C, d)
+
+    # expert computation: (E, C, d) x (E, d, ff) — expert dim shards on
+    # "model".  Weights are constrained AT USE so their cotangents (the
+    # scan-backward grad accumulators) compile expert-sharded too.
+    wg = constrain_expert_major(p["w_gate"])
+    wi = constrain_expert_major(p["w_in"])
+    wo = constrain_expert_major(p["w_out"])
+    h = jnp.einsum("ecd,edf->ecf", buffers, wg)
+    h = constrain_expert_major(
+        jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", buffers, wi))
+    y = constrain_expert_major(
+        jnp.einsum("ecf,efd->ecd", h, wo))                     # (E, C, d)
+
+    # combine back: one (N, d) gather per k (never materialise (N*K, d))
+    y_pad = jnp.concatenate([y, jnp.zeros((E, 1, d), y.dtype)], 1)
+    out = jnp.zeros((N, d), xt.dtype)
+    e_nk = gate_idx                                            # (N, K)
+    c_nk = jnp.where(keep, pos, C)                             # (N, K)
+    for k in range(K):
+        w_k = (gate_vals[:, k] * keep[:, k]).astype(xt.dtype)  # (N,)
+        out = out + y_pad[e_nk[:, k], c_nk[:, k]] * w_k[:, None]
+    out = constrain_token_major(out)
+
+    if cfg.num_shared_experts:
+        out = out + mlp_apply({"w_gate": p["shared_w_gate"],
+                               "w_in": p["shared_w_in"],
+                               "w_out": p["shared_w_out"]}, xt, "swiglu")
+
+    # Switch-style load-balance aux loss
+    me = jnp.mean(probs, 0)                                    # (E,)
+    ce = jnp.mean(jax.nn.one_hot(gate_idx[:, 0], E, dtype=jnp.float32), 0)
+    aux = E * jnp.sum(me * ce)
+    return out.reshape(B, S, d), aux
+
+
+# ---------------------------------------------------------------------------
+# Switch-style chunked einsum dispatch (no scatters: GSPMD-friendly)
+# ---------------------------------------------------------------------------
+
+def _moe_ffn_einsum(p: Dict, x: jax.Array, cfg: ArchConfig
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """One-hot matmul dispatch over token chunks (Switch Transformer / Mesh
+    dispatch).  Capacity is per-chunk: C = ceil(cf * chunk * K / E)."""
+    B, S, d = x.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+    N = B * S
+    G = min(cfg.moe_chunk, N)              # tokens per dispatch group
+    n_chunks = -(-N // G)
+    pad = n_chunks * G - N
+    xt = x.reshape(N, d)
+    if pad:
+        xt = jnp.concatenate([xt, jnp.zeros((pad, d), xt.dtype)], 0)
+    C = max(int(cfg.capacity_factor * G * K / E), 1)
+
+    logits_all = (xt @ p["router"]).astype(jnp.float32)        # (N', E)
+    xc = xt.reshape(n_chunks, G, d)
+    lc = logits_all.reshape(n_chunks, G, E)
+
+    def chunk(carry, inp):
+        xg, lg = inp                                           # (G,d),(G,E)
+        probs = jax.nn.softmax(lg, -1)
+        gate_vals, gate_idx = jax.lax.top_k(probs, K)          # (G, K)
+        gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True),
+                                         1e-9)
+        oh_e = jax.nn.one_hot(gate_idx, E, dtype=jnp.int32)    # (G, K, E)
+        flat = oh_e.reshape(G * K, E)
+        pos = jnp.sum(((jnp.cumsum(flat, 0) - flat).reshape(G, K, E)) * oh_e,
+                      -1)                                      # (G, K)
+        keep = pos < C
+        oh_c = jax.nn.one_hot(jnp.where(keep, pos, C), C + 1,
+                              dtype=xg.dtype)[..., :C]         # (G, K, C)
+        disp = jnp.einsum("gke,gkc->gec", oh_e.astype(xg.dtype), oh_c)
+        disp = constrain_token_major(disp)                     # (G, E, C)
+        buf = constrain_expert_major(
+            jnp.einsum("gec,gd->ecd", disp, xg))               # (E, C, d)
+        wg = constrain_expert_major(p["w_gate"])
+        wi = constrain_expert_major(p["w_in"])
+        wo = constrain_expert_major(p["w_out"])
+        h = jnp.einsum("ecd,edf->ecf", buf, wg)
+        h = constrain_expert_major(
+            jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", buf, wi))
+        y = constrain_expert_major(
+            jnp.einsum("ecf,efd->ecd", h, wo))                 # (E, C, d)
+        comb = jnp.einsum("gke,gkc,gk->gec", oh_e.astype(xg.dtype), oh_c,
+                          (gate_vals * keep).astype(xg.dtype))
+        out = jnp.einsum("gec,ecd->gd", comb, y)
+        # Switch aux loss per chunk
+        me = jnp.mean(probs, 0)
+        ce = jnp.mean(jax.nn.one_hot(gate_idx[:, 0], E, dtype=jnp.float32), 0)
+        return carry, (out, E * jnp.sum(me * ce))
+
+    _, (outs, auxs) = jax.lax.scan(chunk, None, (xc, lc))
+    out = outs.reshape(n_chunks * G, d)[:N]
+
+    if cfg.num_shared_experts:
+        out = out + mlp_apply({"w_gate": p["shared_w_gate"],
+                               "w_in": p["shared_w_in"],
+                               "w_out": p["shared_w_out"]}, xt[:N], "swiglu")
+    return out.reshape(B, S, d), jnp.mean(auxs)

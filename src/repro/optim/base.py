@@ -1,0 +1,91 @@
+"""Minimal functional optimizers (server-side substrate): SGD, momentum, Adam.
+
+API mirrors optax: ``init(params) -> state``, ``update(grads, state, params)
+-> (updates, state)`` with updates to be ADDED to params.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class SGDState(NamedTuple):
+    momentum: PyTree
+
+
+@dataclasses.dataclass(frozen=True)
+class SGD:
+    lr: float
+    momentum: float = 0.0
+
+    def init(self, params: PyTree) -> SGDState:
+        zeros = jax.tree_util.tree_map(jnp.zeros_like, params) \
+            if self.momentum else None
+        return SGDState(momentum=zeros)
+
+    def update(self, grads: PyTree, state: SGDState, params=None
+               ) -> Tuple[PyTree, SGDState]:
+        if not self.momentum:
+            return jax.tree_util.tree_map(lambda g: -self.lr * g, grads), state
+        mom = jax.tree_util.tree_map(
+            lambda m, g: self.momentum * m + g, state.momentum, grads)
+        return (jax.tree_util.tree_map(lambda m: -self.lr * m, mom),
+                SGDState(momentum=mom))
+
+
+class AdamState(NamedTuple):
+    mu: PyTree
+    nu: PyTree
+    count: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class Adam:
+    lr: float
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+
+    def init(self, params: PyTree) -> AdamState:
+        z = lambda t: jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), t)
+        return AdamState(mu=z(params), nu=z(params),
+                         count=jnp.zeros((), jnp.int32))
+
+    def update(self, grads: PyTree, state: AdamState, params: PyTree = None
+               ) -> Tuple[PyTree, AdamState]:
+        c = state.count + 1
+        mu = jax.tree_util.tree_map(
+            lambda m, g: self.b1 * m + (1 - self.b1) * g.astype(jnp.float32),
+            state.mu, grads)
+        nu = jax.tree_util.tree_map(
+            lambda v, g: self.b2 * v
+            + (1 - self.b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu, grads)
+        bc1 = 1 - self.b1 ** c.astype(jnp.float32)
+        bc2 = 1 - self.b2 ** c.astype(jnp.float32)
+
+        def upd(m, v, p):
+            step = m / bc1 / (jnp.sqrt(v / bc2) + self.eps)
+            if self.weight_decay and p is not None:
+                step = step + self.weight_decay * p.astype(jnp.float32)
+            return (-self.lr * step)
+
+        if params is None:
+            updates = jax.tree_util.tree_map(
+                lambda m, v: upd(m, v, None), mu, nu)
+        else:
+            updates = jax.tree_util.tree_map(upd, mu, nu, params)
+        return updates, AdamState(mu=mu, nu=nu, count=c)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+        params, updates)

@@ -1,0 +1,320 @@
+"""DASHA as a first-class distributed training feature.
+
+This is the paper's Algorithm 1 integrated with model training on a TPU mesh:
+the "nodes" are the data-parallel groups (axis n = ("pod","data")); every
+DASHA quantity (h_i, g_i, messages) is a PYTREE shaped like the params with a
+leading node axis, so each leaf keeps its tensor-parallel ("model") sharding.
+
+Compression modes (tree-level; see DESIGN.md §3):
+
+* ``independent`` — per-node Bernoulli-RandP sparsifier (unbiased, omega =
+  1/p - 1, E[density] = p*d).  Aggregation is a dense all-reduce over the
+  node axis: the paper-faithful baseline.
+* ``permk`` — PermK partition compressor: after a shared pseudo-random
+  cyclic shift, node i keeps exactly block i of every leaf (scaled by n).
+  The aggregate touches only d coordinates total (vs n*d), which GSPMD can
+  lower to gather + all-gather instead of a full all-reduce — the
+  beyond-paper collective optimization measured in EXPERIMENTS.md §Perf.
+
+Variants: ``dasha`` (per-node batch gradient as h, i.e. the GD-like line with
+a stochastic oracle) and ``mvr`` (momentum variance reduction, needs the
+previous params to evaluate the same batch at both points).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import SGD, Adam, apply_updates
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class DashaTrainConfig:
+    gamma: float                      # server stepsize
+    compression: float = 0.03125     # fraction of coords sent (1/32)
+    mode: str = "independent"        # independent | shared_coords | permk
+    variant: str = "dasha"           # dasha | mvr
+    b: float = 0.1                   # MVR momentum
+    n_nodes: int = 1
+    server_opt: str = "sgd"          # sgd | adam (adam = beyond-paper)
+    use_kernel: bool = False         # use the Pallas dasha_update kernel
+    # --- memory / sharding knobs (beyond-paper TPU adaptation) ------------
+    state_dtype: str = "float32"     # h_i/g_i storage: float32 | bfloat16
+    seq_shard: bool = False          # Megatron-SP residual-stream sharding
+    fsdp: bool = False               # ZeRO-3 params/g over the data axis
+    spmd_axes: Optional[Tuple[str, ...]] = None  # vmap spmd_axis_name
+
+    @property
+    def omega(self) -> float:
+        if self.mode == "permk":
+            return self.n_nodes - 1.0
+        # independent & shared_coords Bernoulli-RandP: omega = 1/p - 1
+        return 1.0 / self.compression - 1.0
+
+    @property
+    def a(self) -> float:
+        return 1.0 / (2.0 * self.omega + 1.0)
+
+    @property
+    def jax_state_dtype(self):
+        return {"float32": jnp.float32,
+                "bfloat16": jnp.bfloat16}[self.state_dtype]
+
+
+class DashaTrainState(NamedTuple):
+    params: PyTree        # replicated over nodes, sharded over "model"
+    prev_params: PyTree   # only for MVR (else () placeholder)
+    g: PyTree             # server estimator (like params, fp32)
+    h_local: PyTree       # per-node h_i: leading node axis
+    g_local: PyTree       # per-node g_i
+    opt_state: Any
+    key: jax.Array
+    step: jax.Array
+
+
+# ---------------------------------------------------------------------------
+# tree-level compressors
+# ---------------------------------------------------------------------------
+
+def _leaf_keys(key: jax.Array, tree: PyTree) -> PyTree:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    keys = list(jax.random.split(key, len(leaves)))
+    return jax.tree_util.tree_unflatten(treedef, keys)
+
+
+def draw_mask(k: jax.Array, shape, p: float) -> jax.Array:
+    """Bernoulli(p) mask; u8-threshold path (exact when p is a multiple of
+    1/256) avoids materialising u32 bits + f32 uniforms over d elements."""
+    thresh256 = p * 256.0
+    if abs(thresh256 - round(thresh256)) < 1e-9 and round(thresh256) > 0:
+        return jax.random.bits(k, shape, jnp.uint8) \
+            < jnp.uint8(round(thresh256))
+    return jax.random.bernoulli(k, p, shape)
+
+
+def bernoulli_compress(key: jax.Array, delta: PyTree, p: float,
+                       specs: Optional[PyTree] = None,
+                       shared: bool = False) -> PyTree:
+    """delta leaves: (n, *shape). Independent mask per node per coordinate;
+    ``shared=True`` draws ONE mask per leaf shared by all nodes (the
+    aggregate is then supported on ~p*d coords with a common index set —
+    the `shared_coords` execution mode; loses the omega/n variance
+    averaging across nodes, see DESIGN.md §3).
+
+    ``specs``: optional PartitionSpecs (WITH the node axis) pinned onto the
+    Bernoulli masks — forces the partitionable threefry RNG to generate its
+    bits sharded instead of materialising an unsharded d-size mask."""
+    from jax.sharding import PartitionSpec
+
+    def leaf(k, x, spec):
+        shp = x.shape[1:] if shared else x.shape
+        mask = draw_mask(k, shp, p)
+        if shared:
+            mask = jnp.broadcast_to(mask[None], x.shape)
+        if spec is not None:
+            mask = jax.lax.with_sharding_constraint(mask, spec)
+        return jnp.where(mask, x / p, 0.0).astype(x.dtype)
+    if specs is None:
+        specs = jax.tree_util.tree_map(lambda x: None, delta)
+    return jax.tree_util.tree_map(
+        leaf, _leaf_keys(key, delta), delta, specs,
+        is_leaf=lambda t: t is None or isinstance(t, (jax.Array,
+                                                      PartitionSpec)))
+
+
+def permk_compress(key: jax.Array, delta: PyTree, n: int,
+                   specs: Optional[PyTree] = None) -> Tuple[PyTree, PyTree]:
+    """Returns (messages m_i (n,*shape), exact aggregate mean_i m_i (*shape)).
+
+    PermK partitioning via a per-round cyclically-shifted ownership map:
+    coordinate c belongs to node ``owner(c) = ((c + shift) // blk) % n``.
+    Implemented with iota masks only — no (n, n, blk) intermediates, no
+    rolls — so GSPMD keeps every tensor at the (n, d) footprint (the roll
+    formulation compiled to 5x peak memory; see EXPERIMENTS.md §Perf)."""
+    from jax.sharding import PartitionSpec
+
+    def leaf(k, x, spec):
+        nloc = x.shape[0]
+        L = int(jnp.size(x) // nloc)
+        blk = -(-L // nloc)               # ceil
+        shift = jax.random.randint(k, (), 0, nloc * blk)
+        owner = ((jnp.arange(L) + shift) // blk) % nloc          # (L,)
+        owner = owner.reshape(x.shape[1:])
+        if spec is not None:              # shard the ownership iota too
+            owner = jax.lax.with_sharding_constraint(
+                owner, PartitionSpec(*tuple(spec)[1:]))
+        ids = jnp.arange(nloc).reshape((nloc,) + (1,) * (x.ndim - 1))
+        m = x * (owner[None] == ids).astype(x.dtype) * nloc
+        if spec is not None:
+            m = jax.lax.with_sharding_constraint(m, spec)
+        # disjoint supports => the mean recovers exactly node owner(c)'s
+        # value at c; computed as a plain mean so GSPMD emits ONE reduce
+        # over the node axis.
+        return m, jnp.mean(m.astype(jnp.float32), 0)
+
+    keys = _leaf_keys(key, delta)
+    if specs is None:
+        specs = jax.tree_util.tree_map(lambda x: None, delta)
+    pairs = jax.tree_util.tree_map(
+        leaf, keys, delta, specs,
+        is_leaf=lambda t: t is None or isinstance(t, (jax.Array,
+                                                      PartitionSpec)))
+    m = jax.tree_util.tree_map(lambda p_: p_[0], pairs,
+                               is_leaf=lambda t: isinstance(t, tuple))
+    agg = jax.tree_util.tree_map(lambda p_: p_[1], pairs,
+                                 is_leaf=lambda t: isinstance(t, tuple))
+    return m, agg
+
+
+# ---------------------------------------------------------------------------
+# init / step
+# ---------------------------------------------------------------------------
+
+def _server_opt(cfg: DashaTrainConfig):
+    if cfg.server_opt == "adam":
+        return Adam(lr=cfg.gamma)
+    return SGD(lr=cfg.gamma)
+
+
+def dasha_train_init(params: PyTree, cfg: DashaTrainConfig,
+                     key: jax.Array, grads0: Optional[PyTree] = None
+                     ) -> DashaTrainState:
+    """``grads0``: optional (n, *shape) initial per-node gradients (paper
+    initialisation h_i^0 = g_i^0 = grad f_i(x^0)); zeros otherwise."""
+    n = cfg.n_nodes
+    sdt = cfg.jax_state_dtype
+    f32 = lambda t: jax.tree_util.tree_map(lambda x: x.astype(sdt), t)
+    if grads0 is None:
+        per_node = jax.tree_util.tree_map(
+            lambda p: jnp.zeros((n,) + p.shape, sdt), params)
+    else:
+        per_node = f32(grads0)
+    g = jax.tree_util.tree_map(
+        lambda h: jnp.mean(h.astype(jnp.float32), 0), per_node)
+    opt = _server_opt(cfg)
+    prev = params if cfg.variant == "mvr" else ()
+    return DashaTrainState(params=params, prev_params=prev, g=g,
+                           h_local=per_node, g_local=per_node,
+                           opt_state=opt.init(params), key=key,
+                           step=jnp.zeros((), jnp.int32))
+
+
+def make_train_step(cfg: DashaTrainConfig,
+                    loss_fn: Callable[[PyTree, Any], jax.Array],
+                    grad_specs: Optional[PyTree] = None
+                    ) -> Callable[[DashaTrainState, Any],
+                                  Tuple[DashaTrainState, dict]]:
+    """Build the jit-able DASHA train step.
+
+    ``loss_fn(params, node_batch) -> scalar``; the returned step takes
+    ``batch`` with a leading node axis (n, ...) sharded over ("pod","data").
+    ``grad_specs``: optional per-param PartitionSpecs (no node axis) pinned
+    onto each node's gradient so the scan-backward accumulators compile
+    sharded (the vmap spmd_axis_name lifts in the node axis).
+    """
+    n = cfg.n_nodes
+    opt = _server_opt(cfg)
+    sdt = cfg.jax_state_dtype
+
+    # full specs (node axis + per-param spec) for pinning mask RNG sharding
+    node_full_specs = None
+    if grad_specs is not None and cfg.spmd_axes:
+        from jax.sharding import PartitionSpec as P
+        node_full_specs = jax.tree_util.tree_map(
+            lambda s_: P(cfg.spmd_axes, *tuple(s_)), grad_specs,
+            is_leaf=lambda x: isinstance(x, P))
+
+    def per_node_grads(params, batch):
+        def gfun(p, b):
+            g_ = jax.grad(lambda pp, bb: loss_fn(pp, bb))(p, b)
+            if grad_specs is not None:
+                g_ = jax.tree_util.tree_map(
+                    jax.lax.with_sharding_constraint, g_, grad_specs)
+            return g_
+        vkw = {}
+        if cfg.spmd_axes:
+            vkw["spmd_axis_name"] = cfg.spmd_axes
+        grads = jax.vmap(gfun, in_axes=(None, 0), **vkw)(params, batch)
+        return jax.tree_util.tree_map(lambda g_: g_.astype(sdt), grads)
+
+    def step(state: DashaTrainState, batch) -> Tuple[DashaTrainState, dict]:
+        key, k_c = jax.random.split(state.key)
+
+        # ---- server update: x^{t+1} = x^t - gamma g^t (or server Adam) ----
+        updates, opt_state = opt.update(state.g, state.opt_state,
+                                        state.params)
+        params_new = apply_updates(state.params, updates)
+
+        # ---- h update (line 8) -------------------------------------------
+        grads_new = per_node_grads(params_new, batch)           # (n, *shape)
+        if cfg.variant == "mvr":
+            grads_old = per_node_grads(state.params, batch)
+            h_new = jax.tree_util.tree_map(
+                lambda gn, h, go: (gn.astype(jnp.float32)
+                                   + (1.0 - cfg.b)
+                                   * (h.astype(jnp.float32)
+                                      - go.astype(jnp.float32))).astype(sdt),
+                grads_new, state.h_local, grads_old)
+        else:
+            h_new = grads_new
+
+        # ---- message (line 9) + state updates (lines 10, 14) -------------
+        a = cfg.a
+        if cfg.use_kernel and cfg.mode != "permk" and cfg.variant != "mvr":
+            # fused Pallas path: mask drawn here, update+compress in one
+            # HBM pass per leaf (see kernels/dasha_update.py)
+            from repro.kernels import ops as kops
+            p_ = cfg.compression
+
+            def leaf(k, hn, h, gl):
+                mask = draw_mask(k, hn.shape, p_).astype(jnp.float32)
+                return kops.dasha_update(hn, h, gl, mask, a, 1.0 / p_)
+
+            trips = jax.tree_util.tree_map(leaf, _leaf_keys(k_c, h_new),
+                                           h_new, state.h_local,
+                                           state.g_local)
+            is3 = lambda t: isinstance(t, tuple) and len(t) == 3
+            m = jax.tree_util.tree_map(lambda t: t[0], trips, is_leaf=is3)
+            g_local = jax.tree_util.tree_map(lambda t: t[2], trips,
+                                             is_leaf=is3)
+            agg = jax.tree_util.tree_map(
+                lambda mm: jnp.mean(mm.astype(jnp.float32), 0), m)
+            g = jax.tree_util.tree_map(jnp.add, state.g, agg)
+        else:
+            delta = jax.tree_util.tree_map(
+                lambda hn, h, gl: hn - h - a * (gl - h),
+                h_new, state.h_local, state.g_local)
+
+            if cfg.mode == "permk":
+                m, agg = permk_compress(k_c, delta, n,
+                                        specs=node_full_specs)
+            else:
+                m = bernoulli_compress(k_c, delta, cfg.compression,
+                                       specs=node_full_specs,
+                                       shared=cfg.mode == "shared_coords")
+                agg = jax.tree_util.tree_map(
+                    lambda mm: jnp.mean(mm.astype(jnp.float32), 0), m)
+
+            g_local = jax.tree_util.tree_map(jnp.add, state.g_local, m)
+            g = jax.tree_util.tree_map(jnp.add, state.g, agg)
+
+        # NOTE: jnp.sum(x*x), NOT jnp.vdot — vdot ravels each leaf, which
+        # forces GSPMD to all-gather the full (sharded) estimator (20 GB/dev
+        # for a 16B model) just to compute a scalar metric.
+        gn = sum(jnp.sum(jnp.square(x))
+                 for x in jax.tree_util.tree_leaves(state.g))
+        metrics = {"g_norm_sq": gn,
+                   "payload_frac": jnp.float32(
+                       1.0 / n if cfg.mode == "permk" else cfg.compression)}
+        prev = state.params if cfg.variant == "mvr" else ()
+        return DashaTrainState(params=params_new, prev_params=prev, g=g,
+                               h_local=h_new, g_local=g_local,
+                               opt_state=opt_state, key=key,
+                               step=state.step + 1), metrics
+
+    return step

@@ -1,0 +1,138 @@
+"""Attention correctness: streaming-flash vs dense SDPA (fwd + grad),
+window/softcap handling, MLA absorbed-decode equivalence, prefill/decode
+logit parity for GQA."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention as A
+from repro.models.common import ArchConfig
+
+
+def _rand(key, shape, scale=0.1):
+    return jax.random.normal(key, shape, jnp.float32) * scale
+
+
+@pytest.mark.parametrize("window,cap", [(0, 0.0), (64, 0.0), (0, 30.0),
+                                        (128, 20.0)])
+def test_flash_matches_dense(window, cap):
+    key = jax.random.PRNGKey(0)
+    B, S, G, R, hd = 1, 1024, 2, 3, 32
+    ks = jax.random.split(key, 3)
+    q = _rand(ks[0], (B, S, G, R, hd))
+    k = _rand(ks[1], (B, S, G, hd))
+    v = _rand(ks[2], (B, S, G, hd))
+    pos = jnp.arange(S)
+    dense = A._sdpa(q, k, v, pos, pos, window, cap, hd ** -0.5)
+    flash = A._flash_sdpa(q, k, v, pos, pos, window, cap, hd ** -0.5)
+    np.testing.assert_allclose(np.asarray(flash), np.asarray(dense),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_flash_gradient_matches_dense():
+    key = jax.random.PRNGKey(1)
+    B, S, G, R, hd = 1, 1024, 1, 2, 16
+    ks = jax.random.split(key, 3)
+    q = _rand(ks[0], (B, S, G, R, hd))
+    k = _rand(ks[1], (B, S, G, hd))
+    v = _rand(ks[2], (B, S, G, hd))
+    pos = jnp.arange(S)
+
+    def f(fn, q, k, v):
+        return jnp.sum(fn(q, k, v, pos, pos, 0, 0.0, hd ** -0.5) ** 2)
+
+    gd = jax.grad(lambda *a: f(A._sdpa, *a), argnums=(0, 1, 2))(q, k, v)
+    gf = jax.grad(lambda *a: f(A._flash_sdpa, *a), argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gd, gf):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                   rtol=1e-3, atol=1e-6)
+
+
+def _gqa_cfg(**kw):
+    base = dict(name="t", arch_type="dense", num_layers=1, d_model=64,
+                num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=64,
+                dtype="float32")
+    base.update(kw)
+    return ArchConfig(**base)
+
+
+def _gqa_params(cfg, key):
+    from repro.models.init import _gqa_params
+    return _gqa_params(key, cfg, jnp.float32)
+
+
+def test_gqa_prefill_decode_parity():
+    """Decoding token-by-token reproduces the prefill logits."""
+    cfg = _gqa_cfg()
+    key = jax.random.PRNGKey(2)
+    p = _gqa_params(cfg, key)
+    B, S = 2, 8
+    x = _rand(jax.random.PRNGKey(3), (B, S, cfg.d_model), 0.5)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    full = A.gqa_prefill(p, x, pos, cfg)
+
+    cache = {"k": jnp.zeros((B, S, cfg.num_kv_heads, cfg.head_dim)),
+             "v": jnp.zeros((B, S, cfg.num_kv_heads, cfg.head_dim))}
+    for t in range(S):
+        out, cache = A.gqa_decode(p, x[:, t:t + 1], jnp.int32(t), cache, cfg)
+        np.testing.assert_allclose(np.asarray(out[:, 0]),
+                                   np.asarray(full[:, t]),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_gqa_sliding_window_parity():
+    """Ring-buffer decode == windowed prefill for window < S."""
+    W = 4
+    cfg = _gqa_cfg(sliding_window=W)
+    key = jax.random.PRNGKey(4)
+    p = _gqa_params(cfg, key)
+    B, S = 1, 10
+    x = _rand(jax.random.PRNGKey(5), (B, S, cfg.d_model), 0.5)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    full = A.gqa_prefill(p, x, pos, cfg, window=W)
+
+    cache = {"k": jnp.zeros((B, W, cfg.num_kv_heads, cfg.head_dim)),
+             "v": jnp.zeros((B, W, cfg.num_kv_heads, cfg.head_dim))}
+    for t in range(S):
+        out, cache = A.gqa_decode(p, x[:, t:t + 1], jnp.int32(t), cache, cfg,
+                                  ring=True)
+        np.testing.assert_allclose(np.asarray(out[:, 0]),
+                                   np.asarray(full[:, t]),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_mla_prefill_decode_parity():
+    """Absorbed-matrix decode (latent cache) == explicit prefill attention."""
+    cfg = ArchConfig(name="t", arch_type="moe", num_layers=1, d_model=64,
+                     num_heads=4, num_kv_heads=4, d_ff=128, vocab_size=64,
+                     dtype="float32", use_mla=True, kv_lora_rank=16,
+                     qk_nope_head_dim=8, qk_rope_head_dim=4, v_head_dim=8,
+                     head_dim=12)
+    from repro.models.init import _mla_params
+    p = _mla_params(jax.random.PRNGKey(6), cfg, jnp.float32)
+    B, S = 2, 6
+    x = _rand(jax.random.PRNGKey(7), (B, S, cfg.d_model), 0.5)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    full = A.mla_prefill(p, x, pos, cfg)
+
+    cache = {"ckv": jnp.zeros((B, S, cfg.kv_lora_rank)),
+             "krope": jnp.zeros((B, S, cfg.qk_rope_head_dim))}
+    for t in range(S):
+        out, cache = A.mla_decode(p, x[:, t:t + 1], jnp.int32(t), cache, cfg)
+        np.testing.assert_allclose(np.asarray(out[:, 0]),
+                                   np.asarray(full[:, t]),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_qkv_bias_applied():
+    cfg = _gqa_cfg(qkv_bias=True)
+    p = _gqa_params(cfg, jax.random.PRNGKey(8))
+    p["bq"] = jnp.ones_like(p["bq"])          # nonzero bias changes output
+    B, S = 1, 4
+    x = _rand(jax.random.PRNGKey(9), (B, S, cfg.d_model), 0.5)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    with_bias = A.gqa_prefill(p, x, pos, cfg)
+    p0 = dict(p, bq=jnp.zeros_like(p["bq"]))
+    without = A.gqa_prefill(p0, x, pos, cfg)
+    assert float(jnp.max(jnp.abs(with_bias - without))) > 1e-4

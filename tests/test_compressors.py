@@ -1,0 +1,149 @@
+"""Unbiased-compressor properties (Definition 1.1, Theorem F.2, Theorem D.1).
+
+Property-based (hypothesis) checks that every compressor is (a) unbiased and
+(b) inside its advertised variance class U(omega).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.compressors import (Identity, PartialParticipation, PermK,
+                                    QDither, RandK, empirical_omega,
+                                    make_compressor)
+from repro.core.node_compress import NodeCompressor
+
+KEY = jax.random.PRNGKey(0)
+
+
+def mc_mean(comp, x, trials=2048):
+    keys = jax.random.split(KEY, trials)
+    return jnp.mean(jax.vmap(lambda k: comp(k, x))(keys), 0)
+
+
+# ---------------------------------------------------------------------------
+# unbiasedness
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(d=st.integers(4, 64), frac=st.floats(0.1, 1.0))
+def test_randk_unbiased(d, frac):
+    k = max(1, int(d * frac))
+    comp = RandK(d, k)
+    x = jax.random.normal(jax.random.PRNGKey(d), (d,))
+    est = np.asarray(mc_mean(comp, x))
+    # per-coordinate MC bound: var_j = x_j^2 * omega => SE_j = |x_j|sqrt(w/T)
+    err = np.abs(est - np.asarray(x))
+    bound = 8 * np.abs(np.asarray(x)) * np.sqrt(max(comp.omega, 1e-9) / 2048)
+    assert (err <= bound + 1e-4).all(), (err - bound).max()
+
+
+@settings(max_examples=10, deadline=None)
+@given(d=st.integers(4, 48), s=st.integers(1, 15))
+def test_qdither_unbiased(d, s):
+    comp = QDither(d, s)
+    x = jax.random.normal(jax.random.PRNGKey(d + 100), (d,))
+    est = mc_mean(comp, x)
+    se = float(jnp.linalg.norm(x)) * np.sqrt(max(comp.omega, 0.1) / 2048)
+    np.testing.assert_allclose(np.asarray(est), np.asarray(x),
+                               atol=6 * se + 1e-5)
+
+
+def test_permk_collection_unbiased():
+    """PermK is unbiased as a COLLECTION: mean_i C_i(x) = x exactly when every
+    node holds the same x (Szlendak et al. 2021)."""
+    d, n = 24, 4
+    x = jax.random.normal(KEY, (d,))
+    comps = [PermK(d, n, i) for i in range(n)]
+    key = jax.random.PRNGKey(7)
+    agg = sum(c(key, x) for c in comps) / n
+    np.testing.assert_allclose(np.asarray(agg), np.asarray(x), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# variance class U(omega)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,kw,tol", [
+    ("randk", dict(k=2), 1.25),
+    ("randk", dict(k=7), 1.25),
+    ("qdither", dict(s=3), 1.0),     # bound is loose for qdither
+    ("identity", {}, 1.0),
+])
+def test_omega_bound(name, kw, tol):
+    d = 32
+    comp = make_compressor(name, d, **kw)
+    x = jax.random.normal(KEY, (d,))
+    emp = empirical_omega(comp, jax.random.PRNGKey(3), x, trials=4096)
+    assert emp <= comp.omega * tol + 0.05, (emp, comp.omega)
+
+
+def test_randk_omega_exact():
+    """RandK attains E||C(x)-x||^2 = (d/K - 1)||x||^2 exactly in expectation."""
+    d, k = 16, 4
+    comp = RandK(d, k)
+    x = jnp.ones((d,))
+    emp = empirical_omega(comp, KEY, x, trials=8192)
+    assert abs(emp - comp.omega) < 0.4
+
+
+def test_partial_participation_omega():
+    base = RandK(16, 4)
+    pp = PartialParticipation(base, 0.5)
+    assert pp.omega == pytest.approx((base.omega + 1) / 0.5 - 1)
+    x = jax.random.normal(KEY, (16,))
+    emp = empirical_omega(pp, jax.random.PRNGKey(5), x, trials=8192)
+    assert emp <= pp.omega * 1.3
+    est = mc_mean(pp, x, trials=8192)
+    np.testing.assert_allclose(np.asarray(est), np.asarray(x), atol=0.4)
+
+
+# ---------------------------------------------------------------------------
+# density / payload accounting (Definition 1.3)
+# ---------------------------------------------------------------------------
+
+def test_randk_density_exact():
+    d, k = 40, 5
+    comp = RandK(d, k)
+    assert comp.expected_density == k
+    out = comp(KEY, jnp.ones((d,)))
+    assert int(jnp.sum(out != 0)) == k
+
+
+def test_permk_partition():
+    """The n PermK masks with a shared key tile [d] exactly."""
+    d, n = 20, 4
+    key = jax.random.PRNGKey(11)
+    masks = jnp.stack([PermK(d, n, i).mask(key) for i in range(n)])
+    np.testing.assert_array_equal(np.asarray(jnp.sum(masks, 0)), np.ones(d))
+
+
+# ---------------------------------------------------------------------------
+# NodeCompressor execution modes
+# ---------------------------------------------------------------------------
+
+def test_node_compressor_modes():
+    d, n = 24, 4
+    deltas = jax.random.normal(KEY, (n, d))
+    key = jax.random.PRNGKey(2)
+
+    nc = NodeCompressor(RandK(d, 6), n, mode="independent")
+    m = nc(key, deltas)
+    assert m.shape == (n, d)
+    for i in range(n):
+        assert int(jnp.sum(m[i] != 0)) <= 6
+
+    nc = NodeCompressor(RandK(d, 6), n, mode="shared_coords")
+    m = nc(key, deltas)
+    support = np.asarray(m != 0)
+    # all nodes share one index set
+    ref = support[0]
+    for i in range(1, n):
+        assert ((support[i] == ref) | ~support[i]).all()
+
+    nc = NodeCompressor(PermK(d, n), n, mode="permk")
+    m = nc(key, deltas)
+    supp = np.asarray(m != 0).astype(int)
+    assert (supp.sum(0) <= 1).all()          # disjoint supports
+    assert supp.sum() == d                   # exactly tile [d]

@@ -1,0 +1,89 @@
+"""Pallas kernels vs the pure-jnp oracles (ref.py): shape/dtype sweeps in
+interpret mode + hypothesis property checks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("d", [1, 100, 128, 129, 1000, 4096, 128 * 300 + 7])
+@pytest.mark.parametrize("a,scale", [(0.1, 32.0), (1.0, 1.0), (0.011, 8.0)])
+def test_dasha_update_matches_ref(d, a, scale):
+    ks = jax.random.split(KEY, 4)
+    grad, h, gl = (jax.random.normal(k, (d,)) for k in ks[:3])
+    mask = jax.random.bernoulli(ks[3], 1.0 / scale, (d,)).astype(jnp.float32)
+    out = ops.dasha_update(grad, h, gl, mask, a, scale)
+    expect = ref.dasha_update_ref(grad, h, gl, mask, a, scale)
+    for x, y in zip(out, expect):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", [(64,), (8, 32), (3, 5, 7)])
+def test_dasha_update_arbitrary_shapes(shape):
+    ks = jax.random.split(KEY, 4)
+    grad, h, gl = (jax.random.normal(k, shape) for k in ks[:3])
+    mask = jax.random.bernoulli(ks[3], 0.5, shape).astype(jnp.float32)
+    m, hn, gln = ops.dasha_update(grad, h, gl, mask, 0.2, 2.0)
+    assert m.shape == shape and hn.shape == shape and gln.shape == shape
+    e_m, e_hn, e_gln = ref.dasha_update_ref(grad, h, gl, mask, 0.2, 2.0)
+    np.testing.assert_allclose(np.asarray(gln), np.asarray(e_gln),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(d=st.integers(1, 2000), a=st.floats(0.001, 1.0),
+       b=st.floats(0.0, 1.0))
+def test_dasha_mvr_update_matches_ref(d, a, b):
+    ks = jax.random.split(jax.random.PRNGKey(d), 5)
+    gn, go, h, gl = (jax.random.normal(k, (d,)) for k in ks[:4])
+    mask = jax.random.bernoulli(ks[4], 0.3, (d,)).astype(jnp.float32)
+    out = ops.dasha_mvr_update(gn, go, h, gl, mask, a, b, 1 / 0.3)
+    expect = ref.dasha_mvr_update_ref(gn, go, h, gl, mask, a, b, 1 / 0.3)
+    for x, y in zip(out, expect):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_kernel_invariant_g_local_update():
+    """g_local_new - g_local == m exactly (Alg. 1 line 10)."""
+    d = 777
+    ks = jax.random.split(KEY, 4)
+    grad, h, gl = (jax.random.normal(k, (d,)) for k in ks[:3])
+    mask = jax.random.bernoulli(ks[3], 0.25, (d,)).astype(jnp.float32)
+    m, _, gln = ops.dasha_update(grad, h, gl, mask, 0.04, 4.0)
+    np.testing.assert_allclose(np.asarray(gln - gl), np.asarray(m),
+                               rtol=1e-5, atol=1e-6)
+    # compressed support: m is zero off-mask
+    assert float(jnp.max(jnp.abs(m * (1 - mask)))) == 0.0
+
+
+@pytest.mark.parametrize("rows,cols", [(1, 128), (16, 256), (7, 100),
+                                       (300, 64)])
+@pytest.mark.parametrize("levels", [1, 7, 15])
+def test_quantize_matches_ref(rows, cols, levels):
+    x = jax.random.normal(KEY, (rows, cols))
+    key = jax.random.PRNGKey(3)
+    q = ops.quantize(x, key, levels)
+    u = jax.random.uniform(key, x.shape, jnp.float32)
+    expect = ref.quantize_ref(x, u, levels)
+    np.testing.assert_allclose(np.asarray(q), np.asarray(expect),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_quantize_unbiased():
+    x = jax.random.normal(KEY, (4, 64))
+    keys = jax.random.split(jax.random.PRNGKey(7), 1024)
+    est = jnp.mean(jnp.stack([ops.quantize(x, k, 7) for k in keys[:256]]), 0)
+    np.testing.assert_allclose(np.asarray(est), np.asarray(x), atol=0.15)
+
+
+def test_quantize_zero_rows_passthrough():
+    x = jnp.zeros((3, 64))
+    q = ops.quantize(x, KEY, 15)
+    assert float(jnp.max(jnp.abs(q))) == 0.0

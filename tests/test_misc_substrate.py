@@ -1,0 +1,143 @@
+"""MARINA baselines, data pipeline, checkpointing, optimizers."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.io import (checkpoint_step, load_checkpoint,
+                                 save_checkpoint)
+from repro.core import marina, theory
+from repro.core.compressors import RandK
+from repro.core.node_compress import NodeCompressor
+from repro.core.oracles import FiniteSumProblem
+from repro.data.pipeline import (SyntheticTextConfig, make_lm_batch,
+                                 make_node_batches, synthetic_classification,
+                                 synthetic_quadratic)
+from repro.optim.base import SGD, Adam, apply_updates
+
+N, M, D = 4, 16, 12
+
+
+def _problem():
+    feats, labels = synthetic_classification(jax.random.PRNGKey(0), N, M, D)
+
+    def loss(x, a, y):
+        return (1.0 / (1.0 + jnp.exp(y * jnp.dot(a, x)))) ** 2
+
+    return FiniteSumProblem(loss=loss, features=feats, labels=labels)
+
+
+# ---------------------------------------------------------------------------
+# MARINA baselines
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("variant", ["marina", "vr"])
+def test_marina_converges(variant):
+    problem = _problem()
+    comp = NodeCompressor(RandK(D, 4), N)
+    hp = marina.MarinaHyper(gamma=0.5, p=theory.marina_p(4, D),
+                            variant=variant, batch=2)
+    st = marina.init(jnp.zeros(D), jax.random.PRNGKey(1), problem)
+    g0 = float(jnp.sum(problem.grad_f(st.x) ** 2))
+    st, trace, bits = marina.run(st, hp, problem, comp, 600)
+    assert float(trace[-1]) < 0.1 * g0
+    assert float(bits[-1]) > D     # bits accounting monotone
+
+
+def test_marina_sync_sends_full_vectors():
+    """With p=1 MARINA sends d coordinates every round (the synchronization
+    DASHA eliminates)."""
+    problem = _problem()
+    comp = NodeCompressor(RandK(D, 2), N)
+    hp = marina.MarinaHyper(gamma=0.1, p=1.0, variant="marina")
+    st = marina.init(jnp.zeros(D), jax.random.PRNGKey(1), problem)
+    for _ in range(3):
+        st = marina.step(st, hp, problem, comp)
+    assert float(st.bits_sent) == D + 3 * D
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_synthetic_classification_learnable_labels():
+    feats, labels = synthetic_classification(jax.random.PRNGKey(0), 3, 50, 8)
+    assert feats.shape == (3, 50, 8)
+    assert set(np.unique(np.asarray(labels))) <= {-1.0, 1.0}
+
+
+def test_synthetic_quadratic_spectrum():
+    A, b = synthetic_quadratic(jax.random.PRNGKey(1), 16, mu=1.0, L=2.0)
+    eigs = np.linalg.eigvalsh(np.asarray(A))
+    assert eigs.min() > 0.9 and eigs.max() < 2.1
+
+
+def test_lm_batch_shapes_and_shift():
+    tc = SyntheticTextConfig(vocab_size=97, seq_len=33)
+    b = make_lm_batch(jax.random.PRNGKey(2), tc, 4)
+    assert b["tokens"].shape == (4, 33) and b["labels"].shape == (4, 33)
+    assert int(b["tokens"].min()) >= 1 and int(b["tokens"].max()) < 97
+    nb = make_node_batches(jax.random.PRNGKey(3), tc, 2, 3)
+    assert nb["tokens"].shape == (2, 3, 33)
+
+
+def test_lm_batch_deterministic():
+    tc = SyntheticTextConfig(vocab_size=50, seq_len=16)
+    b1 = make_lm_batch(jax.random.PRNGKey(4), tc, 2)
+    b2 = make_lm_batch(jax.random.PRNGKey(4), tc, 2)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip():
+    tree = {"a": jnp.arange(6.0).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16),
+                  "d": jnp.int32(7)}}
+    with tempfile.TemporaryDirectory() as tmp:
+        save_checkpoint(tmp, tree, step=42)
+        assert checkpoint_step(tmp) == 42
+        out = load_checkpoint(tmp, tree)
+        for a, b in zip(jax.tree_util.tree_leaves(tree),
+                        jax.tree_util.tree_leaves(out)):
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+
+
+def test_checkpoint_shape_mismatch_raises():
+    tree = {"a": jnp.zeros((2, 3))}
+    with tempfile.TemporaryDirectory() as tmp:
+        save_checkpoint(tmp, tree)
+        with pytest.raises(AssertionError):
+            load_checkpoint(tmp, {"a": jnp.zeros((3, 3))})
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+def test_sgd_and_adam_reduce_quadratic():
+    x0 = {"x": jnp.array([3.0, -2.0])}
+
+    def grad(p):
+        return {"x": 2 * p["x"]}
+
+    for opt in (SGD(lr=0.1), SGD(lr=0.1, momentum=0.9), Adam(lr=0.2)):
+        p, st = x0, opt.init(x0)
+        for _ in range(100):
+            upd, st = opt.update(grad(p), st, p)
+            p = apply_updates(p, upd)
+        assert float(jnp.linalg.norm(p["x"])) < 0.05
+
+
+def test_adam_weight_decay():
+    opt = Adam(lr=0.1, weight_decay=0.5)
+    p = {"x": jnp.array([1.0])}
+    upd, _ = opt.update({"x": jnp.array([0.0])}, opt.init(p), p)
+    assert float(upd["x"][0]) < 0  # decays toward zero even with zero grad

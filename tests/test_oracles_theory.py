@@ -1,0 +1,129 @@
+"""Gradient oracles (Section 1.2) and theory formulas (Section 6)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import theory
+from repro.core.oracles import FiniteSumProblem, StochasticProblem
+from repro.data.pipeline import synthetic_classification
+
+N, M, D = 3, 10, 6
+
+
+def _problem():
+    feats, labels = synthetic_classification(jax.random.PRNGKey(0), N, M, D)
+
+    def loss(x, a, y):
+        return (1.0 / (1.0 + jnp.exp(y * jnp.dot(a, x)))) ** 2
+
+    return FiniteSumProblem(loss=loss, features=feats, labels=labels)
+
+
+def test_full_grad_matches_autodiff_of_f():
+    problem = _problem()
+    x = jax.random.normal(jax.random.PRNGKey(1), (D,))
+    g_nodes = problem.full_grad(x)
+    assert g_nodes.shape == (N, D)
+    auto = jax.grad(problem.f)(x)
+    np.testing.assert_allclose(np.asarray(jnp.mean(g_nodes, 0)),
+                               np.asarray(auto), rtol=1e-5, atol=1e-6)
+
+
+def test_minibatch_grad_unbiased():
+    problem = _problem()
+    x = jax.random.normal(jax.random.PRNGKey(2), (D,))
+    exact = problem.full_grad(x)
+    keys = jax.random.split(jax.random.PRNGKey(3), 512)
+    est = jnp.mean(jnp.stack(
+        [problem.minibatch_grad(k, x, 4) for k in keys[:128]]), 0)
+    np.testing.assert_allclose(np.asarray(est), np.asarray(exact), atol=0.02)
+
+
+def test_minibatch_diff_shared_samples():
+    """PAGE's minibatch diff at x_new == x_old is exactly zero (same multiset
+    evaluated at both points)."""
+    problem = _problem()
+    x = jax.random.normal(jax.random.PRNGKey(4), (D,))
+    diff = problem.minibatch_diff(jax.random.PRNGKey(5), x, x, 8)
+    np.testing.assert_allclose(np.asarray(diff), 0.0, atol=1e-7)
+
+
+def test_stoch_grad_pair_shared_noise():
+    A = jnp.eye(D)
+
+    def loss(x, xi, i):
+        return 0.5 * x @ A @ x + xi @ x
+
+    def sample(k, i, batch):
+        return jax.random.normal(k, (batch, D))
+
+    sp = StochasticProblem(loss=loss, sample=sample, n=N)
+    x = jax.random.normal(jax.random.PRNGKey(6), (D,))
+    gn, go = sp.stoch_grad_pair(jax.random.PRNGKey(7), x, x, 4)
+    np.testing.assert_allclose(np.asarray(gn), np.asarray(go), atol=1e-7)
+    # and at different points the difference is exactly A(x_new - x_old)
+    y = x + 1.0
+    gn, go = sp.stoch_grad_pair(jax.random.PRNGKey(7), y, x, 4)
+    np.testing.assert_allclose(np.asarray(gn - go),
+                               np.asarray(A @ (y - x))[None].repeat(N, 0),
+                               atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# theory formulas (exact constants from Section 6)
+# ---------------------------------------------------------------------------
+
+def test_momentum_a():
+    assert theory.momentum_a(0.0) == 1.0
+    assert theory.momentum_a(4.0) == pytest.approx(1 / 9)
+
+
+def test_gamma_dasha_matches_theorem_6_1():
+    import math
+    L = L_hat = 2.0
+    omega, n = 3.0, 4
+    expect = 1.0 / (L + math.sqrt(16 * 3 * 7 / 4) * L_hat)
+    assert theory.gamma_dasha(L, L_hat, omega, n) == pytest.approx(expect)
+
+
+@settings(max_examples=20, deadline=None)
+@given(omega=st.floats(0.0, 100.0), n=st.integers(1, 1024))
+def test_gamma_positive_and_monotone_in_omega(omega, n):
+    g1 = theory.gamma_dasha(1.0, 1.0, omega, n)
+    g2 = theory.gamma_dasha(1.0, 1.0, omega + 1.0, n)
+    assert 0 < g2 <= g1 <= 1.0
+
+
+def test_page_p():
+    assert theory.page_p(2, 18) == pytest.approx(0.1)
+
+
+def test_mvr_b_within_unit_interval():
+    for omega in [0.5, 10, 1e4]:
+        for eps in [1e-4, 1e-1]:
+            b = theory.mvr_b(omega, 4, 2, eps, sigma2=1.0)
+            assert 0 < b <= 1
+
+
+def test_rounds_ordering_finite_sum():
+    """Table 1: DASHA-PAGE needs <= VR-MARINA rounds (factor sqrt(1+omega)
+    on the m-term) for large omega."""
+    c = theory.ProblemConstants(eps=1e-4, n=8, omega=63.0, m=10_000, B=1,
+                                L=1, L_hat=1, L_max=1)
+    assert theory.rounds_dasha_page(c) <= theory.rounds_vr_marina(c)
+
+
+def test_rounds_ordering_stochastic():
+    """Table 1: DASHA-SYNC-MVR improves the eps^{-3/2} term by sqrt(1+omega)
+    over VR-MARINA (online)."""
+    c = theory.ProblemConstants(eps=1e-6, n=8, omega=63.0, B=1,
+                                sigma2=1.0, L=1, L_hat=1, L_sigma=1,
+                                d=1024, zeta=16.0)
+    assert theory.rounds_sync_mvr(c) < theory.rounds_vr_marina_online(c)
+
+
+def test_comm_complexity_formula():
+    assert theory.comm_complexity(100, 8.0, 64) == 64 + 800
+    assert theory.oracle_complexity_page(100, 50, 2) == 50 + 200
