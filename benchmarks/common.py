@@ -8,13 +8,21 @@ from typing import Dict, List
 import jax
 import jax.numpy as jnp
 
+from repro.compress import (NodeCompressor, RandK,  # noqa: F401
+                            RoundCompressor, make_round_compressor)
 from repro.core import dasha, marina, theory
-from repro.core.compressors import RandK
-from repro.core.node_compress import NodeCompressor
 from repro.core.oracles import FiniteSumProblem, StochasticProblem
 from repro.data.pipeline import synthetic_classification
 
 N_NODES = 5          # the paper uses 5 nodes throughout Appendix A
+
+
+def randk_compressor(d: int, k: int, n: int = N_NODES, *,
+                     mode: str = "independent",
+                     backend: str = "dense") -> RoundCompressor:
+    """The figure benches' standard compressor, on any execution backend."""
+    return make_round_compressor("randk", d, n, k=k, mode=mode,
+                                 backend=backend)
 
 
 def glm_problem(d: int = 60, m: int = 64, key: int = 0) -> FiniteSumProblem:

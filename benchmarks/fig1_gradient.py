@@ -9,10 +9,8 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import (N_NODES, emit, glm_problem, lipschitz_glm,
-                               tune_gamma)
+                               randk_compressor, tune_gamma)
 from repro.core import dasha, marina, theory
-from repro.core.compressors import RandK
-from repro.core.node_compress import NodeCompressor
 
 D, K, ROUNDS = 60, 10, 800
 TARGET_FRAC = 0.02     # eps = 2% of ||grad f(x0)||^2
@@ -28,7 +26,7 @@ def _bits_to_target(trace, bits, target):
 
 def run():
     problem = glm_problem(D)
-    comp = NodeCompressor(RandK(D, K), N_NODES)
+    comp = randk_compressor(D, K)
     L = lipschitz_glm(problem)
     g0 = float(jnp.sum(problem.grad_f(jnp.zeros(D)) ** 2))
     target = TARGET_FRAC * g0

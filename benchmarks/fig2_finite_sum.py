@@ -7,10 +7,8 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import (N_NODES, emit, glm_problem, lipschitz_glm,
-                               tune_gamma)
+                               randk_compressor, tune_gamma)
 from repro.core import dasha, marina, theory
-from repro.core.compressors import RandK
-from repro.core.node_compress import NodeCompressor
 
 D, M, ROUNDS, B = 60, 64, 1200, 1
 
@@ -20,7 +18,7 @@ def run():
     L = lipschitz_glm(problem)
     rows = []
     for K in (2, 10, 30):
-        comp = NodeCompressor(RandK(D, K), N_NODES)
+        comp = randk_compressor(D, K)
         p = theory.page_p(B, M)
 
         def run_page(gamma):

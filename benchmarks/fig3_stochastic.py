@@ -7,10 +7,9 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import (N_NODES, emit, logreg_nonconvex_problem,
+                               randk_compressor,
                                tune_gamma)
 from repro.core import dasha, marina, theory
-from repro.core.compressors import RandK
-from repro.core.node_compress import NodeCompressor
 
 D, ROUNDS, B = 60, 1500, 1
 SIGMA2 = 0.09        # additive-noise variance (see common.py)
@@ -22,7 +21,7 @@ def run():
     for ratio in (1e2, 1e3):          # sigma^2 / (n eps B)
         eps = SIGMA2 / (N_NODES * ratio * B)
         for K in (6, 20):
-            comp = NodeCompressor(RandK(D, K), N_NODES)
+            comp = randk_compressor(D, K)
             omega = comp.omega
             b = theory.mvr_b(omega, N_NODES, B, eps, SIGMA2)
             p_sync = theory.sync_mvr_p(K, D, N_NODES, B, eps, SIGMA2)

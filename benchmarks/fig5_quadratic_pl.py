@@ -14,10 +14,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit
+from benchmarks.common import emit, randk_compressor
 from repro.core import dasha, theory
-from repro.core.compressors import RandK
-from repro.core.node_compress import NodeCompressor
 from repro.core.oracles import StochasticProblem
 from repro.data.pipeline import synthetic_quadratic
 
@@ -45,7 +43,7 @@ def _problem():
 
 def run():
     problem = _problem()
-    comp = NodeCompressor(RandK(D, K), 1)
+    comp = randk_compressor(D, K, n=1)
     omega = comp.omega
     eps = SIGMA2 / (MU * 1 * RATIO * B)
     b_theory = theory.mvr_b(omega, 1, B, MU * eps, SIGMA2)   # Cor. H.16 form

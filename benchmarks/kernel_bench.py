@@ -16,26 +16,40 @@ from repro.kernels import ops, ref
 
 def run():
     d = 1 << 20
-    ks = jax.random.split(jax.random.PRNGKey(0), 4)
-    grad, h, gl = (jax.random.normal(k, (d,)) for k in ks[:3])
-    mask = jax.random.bernoulli(ks[3], 1 / 32, (d,)).astype(jnp.float32)
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    grad, go, h, gl = (jax.random.normal(k, (d,)) for k in ks[:4])
+    mask = jax.random.bernoulli(ks[4], 1 / 32, (d,)).astype(jnp.float32)
     a, scale = 1 / 63, 32.0
 
     m, hn, gln = ops.dasha_update(grad, h, gl, mask, a, scale)
     e_m, e_hn, e_gln = ref.dasha_update_ref(grad, h, gl, mask, a, scale)
     resid = float(jnp.max(jnp.abs(m - e_m)) + jnp.max(jnp.abs(gln - e_gln)))
 
+    b = 0.1
+    mm, hm, glm = ops.dasha_mvr_update(grad, go, h, gl, mask, a, b, scale)
+    em, eh, eg = ref.dasha_mvr_update_ref(grad, go, h, gl, mask, a, b, scale)
+    resid_mvr = float(jnp.max(jnp.abs(mm - em)) + jnp.max(jnp.abs(glm - eg))
+                      + jnp.max(jnp.abs(hm - eh)))
+
     # HBM traffic per element (fp32): unfused chain materialises
     # delta (w), m (w+r), g_new (w), h copy (w) + reads of grad/h/gl/mask
     unfused_bytes = 4 * (4 + 5)          # 4 reads + 5 writes/reads of temps
     fused_bytes = 4 * (4 + 3)            # 4 reads + 3 writes, one pass
+    note = "interpret-mode on CPU; timing only meaningful on TPU"
     return [{
         "bench": "kernel", "kernel": "dasha_update", "d": d,
         "max_resid_vs_ref": f"{resid:.2e}",
         "unfused_bytes_per_elt": unfused_bytes,
         "fused_bytes_per_elt": fused_bytes,
         "hbm_saving": f"{unfused_bytes / fused_bytes:.2f}x",
-        "note": "interpret-mode on CPU; timing only meaningful on TPU",
+        "note": note,
+    }, {
+        "bench": "kernel", "kernel": "dasha_mvr_update", "d": d,
+        "max_resid_vs_ref": f"{resid_mvr:.2e}",
+        "unfused_bytes_per_elt": 4 * (5 + 6),   # + grad_old read, h_new tmp
+        "fused_bytes_per_elt": 4 * (5 + 3),
+        "hbm_saving": f"{(5 + 6) / (5 + 3):.2f}x",
+        "note": note,
     }]
 
 

@@ -1,0 +1,40 @@
+"""Unified compression subsystem (DESIGN.md §3-§6).
+
+Layering:
+
+* :mod:`repro.compress.spec`      — CompressorSpec, omega calculus, registry;
+* :mod:`repro.compress.plan`      — per-round masks / index sets / dither
+  randomness, drawn once and shared by every backend;
+* :mod:`repro.compress.backends`  — dense | sparse | fused execution on
+  stacked (n, d) messages; RoundCompressor front door;
+* :mod:`repro.compress.treelevel` — pytree adapter for model training
+  (bernoulli_compress / permk_compress / fused_tree_update);
+* :mod:`repro.compress.legacy`    — seed-compatible object API
+  (Identity/RandK/PermK/QDither, make_compressor, NodeCompressor).
+"""
+from repro.compress.backends import (BACKENDS, DenseMessages,  # noqa: F401
+                                     Messages, RoundCompressor,
+                                     SparseMessages, apply_dense,
+                                     apply_sparse, fused_estimator_update,
+                                     make_round_compressor)
+from repro.compress.legacy import (Compressor, Identity,  # noqa: F401
+                                   NodeCompressor, PartialParticipation,
+                                   PermK, QDither, RandK, empirical_omega,
+                                   make_compressor)
+from repro.compress.plan import (PAD, Plan, draw_mask,  # noqa: F401
+                                 indices_to_masks, participation_coins,
+                                 perm_partition, permk_owner, randk_indices)
+from repro.compress.spec import (MODES, REGISTRY, CompressorDef,  # noqa: F401
+                                 CompressorSpec, make_plan, make_spec,
+                                 momentum_a, omega_bernoulli, omega_permk,
+                                 register)
+from repro.compress.treelevel import (bernoulli_compress,  # noqa: F401
+                                      fused_tree_update, leaf_keys,
+                                      permk_compress, tree_masks)
+
+
+def as_round_compressor(comp) -> RoundCompressor:
+    """Accept either a RoundCompressor or a legacy NodeCompressor."""
+    if isinstance(comp, RoundCompressor):
+        return comp
+    return comp.rc

@@ -1,0 +1,254 @@
+"""Layer 3 of the compression subsystem: interchangeable execution backends.
+
+Three ways to execute the SAME :class:`~repro.compress.plan.Plan` on a
+stacked (n, d) message matrix:
+
+* ``dense``  — reference semantics: messages are materialized d-vectors
+  (mask-multiply).  What the math in the paper writes down.
+* ``sparse`` — real wire format: a RandK/PermK message is carried as
+  ``(indices, values)`` so aggregation touches K << d coordinates and the
+  byte accounting stops being fictional.  Bit-identical values to ``dense``
+  under the same key (same plan, same multiply ordering).
+* ``fused``  — the Pallas kernel path (:mod:`repro.kernels.ops`): the whole
+  estimator update (Alg. 1 lines 8-10) runs in one HBM pass, with the plan's
+  mask applied in VMEM registers.
+
+See DESIGN.md §5 for when each backend wins.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.compress.plan import Plan, indices_to_masks
+from repro.compress.spec import (REGISTRY, CompressorSpec, make_plan,
+                                 make_spec)
+
+BACKENDS = ("dense", "sparse", "fused")
+
+
+# ---------------------------------------------------------------------------
+# message containers
+# ---------------------------------------------------------------------------
+
+class DenseMessages(NamedTuple):
+    """n per-node messages, materialized as (n, d) dense rows."""
+
+    values: jax.Array             # (n, d)
+    payload_coords: float
+    wire_coords: float
+
+    @property
+    def n(self) -> int:
+        return self.values.shape[0]
+
+    def dense(self) -> jax.Array:
+        return self.values
+
+    def mean(self) -> jax.Array:
+        """Server aggregate (1/n) sum_i m_i, fp32."""
+        return jnp.mean(self.values.astype(jnp.float32), 0)
+
+    def add_to(self, g_local: jax.Array) -> jax.Array:
+        """g_i <- g_i + m_i (Alg. 1 line 10)."""
+        return g_local + self.values.astype(g_local.dtype)
+
+
+class SparseMessages(NamedTuple):
+    """n per-node messages in wire format: (indices, values) pairs.
+
+    ``indices``: (n, k) int32, PAD-padded (out-of-range slots are dropped by
+    every scatter and carry zero values).  Aggregation and the g_i update
+    touch only the k kept coordinates per node.
+    """
+
+    indices: jax.Array            # (n, k) int32
+    values: jax.Array             # (n, k)
+    d: int
+    payload_coords: float
+    wire_coords: float
+
+    @property
+    def n(self) -> int:
+        return self.values.shape[0]
+
+    def dense(self) -> jax.Array:
+        def one(idx, val):
+            return jnp.zeros((self.d,), val.dtype).at[idx].add(val,
+                                                               mode="drop")
+        return jax.vmap(one)(self.indices, self.values)
+
+    def mean(self) -> jax.Array:
+        flat_i = self.indices.reshape(-1)
+        flat_v = self.values.astype(jnp.float32).reshape(-1) / self.n
+        return jnp.zeros((self.d,), jnp.float32).at[flat_i].add(flat_v,
+                                                                mode="drop")
+
+    def add_to(self, g_local: jax.Array) -> jax.Array:
+        def one(g, idx, val):
+            return g.at[idx].add(val.astype(g.dtype), mode="drop")
+        return jax.vmap(one)(g_local, self.indices, self.values)
+
+
+Messages = Union[DenseMessages, SparseMessages]
+
+
+# ---------------------------------------------------------------------------
+# backend execution
+# ---------------------------------------------------------------------------
+
+def _dense_values(plan: Plan, deltas: jax.Array) -> jax.Array:
+    """(n, d) messages with reference (dense-multiply) semantics."""
+    if plan.kind == "passthrough":
+        return deltas * plan.scale
+    if plan.kind == "dither":
+        from repro.kernels.ref import quantize_ref
+        return quantize_ref(deltas, plan.dither_u, plan.levels) * plan.scale
+    mask = plan.mask
+    if mask is None:
+        mask = indices_to_masks(plan.indices, deltas.shape[-1],
+                                dtype=deltas.dtype)
+    return deltas * mask.astype(deltas.dtype) * plan.scale
+
+
+def apply_dense(plan: Plan, deltas: jax.Array) -> DenseMessages:
+    return DenseMessages(values=_dense_values(plan, deltas),
+                         payload_coords=plan.payload_coords,
+                         wire_coords=float(deltas.shape[-1]))
+
+
+def apply_sparse(plan: Plan, deltas: jax.Array) -> Messages:
+    """Wire-format execution.  Static-K compressors (RandK/PermK) gather the
+    kept coordinates; mask/dither compressors have no static support so they
+    fall back to dense values while keeping honest wire accounting."""
+    if plan.indices is None:
+        msgs = apply_dense(plan, deltas)
+        return msgs._replace(wire_coords=plan.wire_coords)
+    d = deltas.shape[-1]
+
+    def gather(x, idx):
+        valid = (idx < d).astype(x.dtype)
+        return x[jnp.minimum(idx, d - 1)] * valid
+
+    vals = jax.vmap(gather)(deltas, plan.indices) * plan.scale
+    return SparseMessages(indices=plan.indices, values=vals, d=d,
+                          payload_coords=plan.payload_coords,
+                          wire_coords=plan.wire_coords)
+
+
+def fused_estimator_update(plan: Plan, h_new: jax.Array, h: jax.Array,
+                           g_local: jax.Array, a: float
+                           ) -> Tuple[Messages, jax.Array, jax.Array]:
+    """Alg. 1 lines 9-10 through the fused Pallas kernel, one HBM pass:
+    m = C(h_new - h - a (g_local - h)); g_i <- g_i + m_i.
+
+    Returns (messages, h_out, g_local_new)."""
+    from repro.kernels import ops as kops
+
+    d = float(h_new.shape[-1])            # fused messages stay dense
+    if plan.kind == "dither":
+        delta = h_new - h - a * (g_local - h)
+        m = kops.quantize_with_u(delta, plan.dither_u,
+                                 plan.levels) * plan.scale
+        return (DenseMessages(m, plan.payload_coords, d),
+                h_new, g_local + m)
+
+    if plan.kind == "passthrough":
+        mask = jnp.ones(h_new.shape, jnp.float32)
+    elif plan.mask is not None:
+        mask = plan.mask.astype(jnp.float32)
+    else:
+        mask = indices_to_masks(plan.indices, h_new.shape[-1])
+    if isinstance(plan.scale, jax.Array):
+        # participation coins make the scale per-node: fold into the mask so
+        # the kernel's scale stays a static scalar
+        mask = mask * plan.scale.astype(jnp.float32)
+        kscale = 1.0
+    else:
+        kscale = float(plan.scale)
+    m, h_out, gl_new = kops.dasha_update(h_new, h, g_local, mask, a, kscale)
+    return (DenseMessages(m, plan.payload_coords, d), h_out, gl_new)
+
+
+# ---------------------------------------------------------------------------
+# the front door
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RoundCompressor:
+    """A per-round node-collection compressor: spec x mode x backend.
+
+    This is the object the DASHA loops hold.  ``mode`` picks how the n
+    nodes' randomness is coupled (DESIGN.md §3); ``backend`` picks the
+    execution strategy (§5).  All combinations share the plan layer, so
+    switching backend never changes the math.
+    """
+
+    spec: CompressorSpec
+    n: int
+    mode: str = "independent"
+    backend: str = "dense"
+
+    def __post_init__(self):
+        defn = REGISTRY[self.spec.name]
+        if self.mode not in defn.modes:
+            raise ValueError(f"{self.spec.name} does not support mode "
+                             f"{self.mode!r} (has {defn.modes})")
+        if self.backend not in BACKENDS:
+            raise ValueError(f"unknown backend {self.backend!r}")
+
+    @property
+    def omega(self) -> float:
+        return self.spec.omega
+
+    @property
+    def payload_per_node(self) -> float:
+        """Ideal-coding scalar coords per node message (Definition 1.3)."""
+        return self.spec.expected_density
+
+    @property
+    def wire_per_node(self) -> float:
+        """Coords the selected backend actually moves per node message."""
+        if self.backend == "sparse":
+            return self.spec.wire_coords(self.mode)
+        return float(self.spec.d)
+
+    def plan(self, key: jax.Array) -> Plan:
+        return make_plan(self.spec, key, self.n, self.mode)
+
+    def compress(self, key: jax.Array, deltas: jax.Array) -> Messages:
+        """deltas: (n, d) -> per-node messages in this backend's format."""
+        plan = self.plan(key)
+        if self.backend == "sparse":
+            return apply_sparse(plan, deltas)
+        return apply_dense(plan, deltas)
+
+    def __call__(self, key: jax.Array, deltas: jax.Array) -> jax.Array:
+        """Legacy dense entry point: (n, d) -> (n, d) messages."""
+        return self.compress(key, deltas).dense()
+
+    def estimator_update(self, key: jax.Array, h_new: jax.Array,
+                         h: jax.Array, g_local: jax.Array, a: float
+                         ) -> Tuple[Messages, jax.Array, jax.Array]:
+        """One-call Alg. 1 lines 9-10: compress the drift and update g_i.
+
+        Returns (messages, h_out, g_local_new); ``h_out`` is ``h_new``
+        passed through (the fused kernel writes it in the same pass)."""
+        if self.backend == "fused":
+            return fused_estimator_update(self.plan(key), h_new, h,
+                                          g_local, a)
+        delta = h_new - h - a * (g_local - h)
+        msgs = self.compress(key, delta)
+        return msgs, h_new, msgs.add_to(g_local)
+
+
+def make_round_compressor(name: str, d: int, n: int, *,
+                          mode: str = "independent",
+                          backend: str = "dense", **kw) -> RoundCompressor:
+    """Factory: registry name -> ready-to-use RoundCompressor."""
+    if name.lower() == "permk":
+        kw.setdefault("n", n)
+    return RoundCompressor(make_spec(name, d, **kw), n, mode, backend)

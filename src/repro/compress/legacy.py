@@ -1,0 +1,241 @@
+"""Back-compat object API over the spec/plan/backends layers.
+
+These classes keep the seed's call signatures (``C(key, x) -> x_hat`` on
+flat vectors, ``NodeCompressor(base, n, mode)`` on (n, d) stacks) while all
+randomness and analytics now come from :mod:`repro.compress.plan` and
+:mod:`repro.compress.spec`.  New code should use
+:class:`repro.compress.RoundCompressor` directly; this module exists so the
+paper-faithful reference loops and the existing tests/benchmarks keep
+reading like the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.compress.backends import RoundCompressor
+from repro.compress.plan import (indices_to_masks, perm_partition,
+                                 randk_indices)
+from repro.compress.spec import REGISTRY, CompressorSpec, make_spec
+
+
+class Compressor:
+    """Base class: an element of U(omega) (Definition 1.1)."""
+
+    #: variance parameter omega such that C in U(omega)
+    omega: float
+    #: expected number of nonzero coords returned (zeta_C, Definition 1.3)
+    expected_density: float
+
+    def as_spec(self, n: int = 1) -> CompressorSpec:
+        """The registry spec this object is a view of."""
+        raise NotImplementedError
+
+    def __call__(self, key: jax.Array, x: jax.Array) -> jax.Array:
+        """Return the decompressed estimate C(x) (dense d-vector)."""
+        raise NotImplementedError
+
+    def payload(self, d: int) -> float:
+        """Scalar coordinates sent over the wire per message of dimension d."""
+        return self.expected_density
+
+
+def _spec_property(name):
+    def get(self):
+        return getattr(self.as_spec(getattr(self, "n", 1)), name)
+    return property(get)
+
+
+@dataclasses.dataclass(frozen=True)
+class Identity(Compressor):
+    """No compression: C(x) = x, omega = 0 (sanity baseline; DASHA -> GD)."""
+
+    d: int
+
+    omega = _spec_property("omega")
+    expected_density = _spec_property("expected_density")
+
+    def as_spec(self, n: int = 1) -> CompressorSpec:
+        return make_spec("identity", self.d)
+
+    def __call__(self, key, x):
+        return x
+
+
+@dataclasses.dataclass(frozen=True)
+class RandK(Compressor):
+    """RandK sparsifier (Definition F.1): keep K uniformly random coords,
+    scale by d/K.  C in U(d/K - 1) (Theorem F.2)."""
+
+    d: int
+    k: int
+
+    omega = _spec_property("omega")
+    expected_density = _spec_property("expected_density")
+
+    def as_spec(self, n: int = 1) -> CompressorSpec:
+        return make_spec("randk", self.d, k=self.k)
+
+    def mask(self, key: jax.Array) -> jax.Array:
+        """0/1 mask with exactly K ones (without replacement)."""
+        return indices_to_masks(randk_indices(key, self.d, self.k)[None],
+                                self.d)[0]
+
+    def __call__(self, key, x):
+        return x * self.mask(key).astype(x.dtype) * (self.d / self.k)
+
+
+@dataclasses.dataclass(frozen=True)
+class PermK(Compressor):
+    """PermK (Szlendak, Tyurin & Richtarik 2021).
+
+    The d coordinates are split into n equal blocks by a per-round random
+    permutation; node ``node_idx`` sends exactly its block scaled by n.
+    Unbiased with omega = n - 1 *as a collection*; on a TPU mesh the
+    aggregation is exactly a reduce-scatter (+ all-gather), which is why
+    this is our beyond-paper collective-optimal mode (DESIGN.md §3)."""
+
+    d: int
+    n: int
+    node_idx: int = 0
+
+    omega = _spec_property("omega")
+    expected_density = _spec_property("expected_density")
+
+    def as_spec(self, n: Optional[int] = None) -> CompressorSpec:
+        # the collection size is this object's n; callers' n (e.g. the
+        # PartialParticipation wrapper's default) must not override it
+        return make_spec("permk", self.d, n=self.n)
+
+    def mask(self, key: jax.Array) -> jax.Array:
+        blocks = perm_partition(key, self.d, self.n)
+        return indices_to_masks(blocks[self.node_idx][None], self.d)[0]
+
+    def __call__(self, key, x):
+        return x * self.mask(key).astype(x.dtype) * self.n
+
+
+@dataclasses.dataclass(frozen=True)
+class QDither(Compressor):
+    """Unbiased stochastic quantization (QSGD-style, s levels, per-vector L2
+    scale).  omega <= min(d/s^2, sqrt(d)/s) (Alistarh et al. 2017).
+
+    Payload: d small ints + 1 float; counted as d * (bits(s)/32) + 1
+    equivalent fp32 coordinates (see spec.py registration)."""
+
+    d: int
+    s: int = 15  # levels -> 4-bit payload
+
+    omega = _spec_property("omega")
+    expected_density = _spec_property("expected_density")
+
+    def as_spec(self, n: int = 1) -> CompressorSpec:
+        return make_spec("qdither", self.d, s=self.s)
+
+    def __call__(self, key, x):
+        from repro.kernels.ref import quantize_ref
+        u = jax.random.uniform(key, x.shape, jnp.float32)
+        return quantize_ref(x[None], u[None], self.s)[0]
+
+
+@dataclasses.dataclass(frozen=True)
+class PartialParticipation(Compressor):
+    """C_{p'} wrapper (Appendix D, Theorem D.1): with prob p' send C(x)/p',
+    else send nothing.  If C in U(omega) then C_{p'} in U((omega+1)/p' - 1)."""
+
+    base: Compressor
+    p_participate: float
+
+    @property
+    def omega(self) -> float:
+        return self.as_spec().omega
+
+    @property
+    def expected_density(self) -> float:
+        return self.as_spec().expected_density
+
+    def as_spec(self, n: int = 1) -> CompressorSpec:
+        return dataclasses.replace(self.base.as_spec(n),
+                                   p_participate=self.p_participate)
+
+    def __call__(self, key, x):
+        k_coin, k_base = jax.random.split(key)
+        take = jax.random.bernoulli(k_coin, self.p_participate)
+        return jnp.where(take, self.base(k_base, x) / self.p_participate,
+                         jnp.zeros_like(x))
+
+
+def make_compressor(name: str, d: int, *, k: Optional[int] = None,
+                    n: int = 1, node_idx: int = 0, s: int = 15,
+                    p_participate: float = 1.0) -> Compressor:
+    """Factory used by configs / CLI (registry-validated)."""
+    name = name.lower()
+    make_spec(name, d, k=k, n=n, s=s)      # validate against the registry
+    if name == "identity":
+        base: Compressor = Identity(d)
+    elif name == "randk":
+        base = RandK(d, k)
+    elif name == "permk":
+        base = PermK(d, n, node_idx)
+    elif name == "qdither":
+        base = QDither(d, s)
+    else:
+        raise ValueError(f"no legacy class for {name!r}; use "
+                         "repro.compress.make_round_compressor")
+    if p_participate < 1.0:
+        return PartialParticipation(base, p_participate)
+    return base
+
+
+def empirical_omega(comp, key: jax.Array, x: jax.Array,
+                    trials: int = 512) -> float:
+    """Monte-Carlo estimate of E||C(x)-x||^2 / ||x||^2 (test/diagnostic)."""
+    keys = jax.random.split(key, trials)
+    err = jax.vmap(lambda k: jnp.sum((comp(k, x) - x) ** 2))(keys)
+    return float(jnp.mean(err) / jnp.sum(x**2))
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeCompressor:
+    """Legacy (n, d) entry point; a thin view over RoundCompressor.
+
+    Three execution modes (DESIGN.md §3): ``independent`` (paper-faithful
+    Assumption 1.2, per-node randomness), ``shared_coords`` (one RandK index
+    set shared by all nodes per round) and ``permk`` (disjoint partition of
+    a shared per-round permutation).  ``backend`` additionally picks the
+    execution strategy (§5): dense | sparse | fused.
+    """
+
+    base: Compressor
+    n: int
+    mode: str = "independent"  # independent | shared_coords | permk
+    backend: str = "dense"     # dense | sparse | fused
+
+    @property
+    def rc(self) -> RoundCompressor:
+        return RoundCompressor(self.base.as_spec(self.n), self.n,
+                               self.mode, self.backend)
+
+    @property
+    def omega(self) -> float:
+        return self.rc.omega
+
+    @property
+    def payload_per_node(self) -> float:
+        return self.rc.payload_per_node
+
+    def plan(self, key):
+        return self.rc.plan(key)
+
+    def compress(self, key, deltas):
+        return self.rc.compress(key, deltas)
+
+    def estimator_update(self, key, h_new, h, g_local, a):
+        return self.rc.estimator_update(key, h_new, h, g_local, a)
+
+    def __call__(self, key: jax.Array, deltas: jax.Array) -> jax.Array:
+        """deltas: (n, d) -> messages m_i: (n, d) (dense representation)."""
+        return self.rc(key, deltas)

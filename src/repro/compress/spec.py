@@ -1,0 +1,273 @@
+"""Layer 1 of the compression subsystem: specs, omega calculus, registry.
+
+A :class:`CompressorSpec` is pure metadata — name + sizes — from which the
+registry computes everything analytic: the variance parameter omega of the
+class U(omega) (Definition 1.1, eq. (4)), the expected density zeta_C
+(Definition 1.3), and the two payload numbers used for communication
+accounting (DESIGN.md §6).
+
+Adding a compressor is ONE :func:`register` call: an omega formula, a
+density formula, and a plan function built from the primitives in
+:mod:`repro.compress.plan`.  All three execution backends (dense / sparse /
+fused), the flat DASHA loop, the pytree trainer and the benchmarks pick the
+new compressor up from the registry — nothing else to edit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compress.plan import (Plan, draw_mask, indices_to_masks,
+                                 participation_coins, perm_partition,
+                                 randk_indices)
+
+MODES = ("independent", "shared_coords", "permk")
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressorSpec:
+    """What to compress with; all analytics derive from the registry."""
+
+    name: str
+    d: int                        # message dimension
+    k: Optional[int] = None       # randk: kept coords
+    n: int = 1                    # permk: collection size
+    s: int = 15                   # qdither: quantization levels
+    p: float = 1.0                # bernoulli: keep probability
+    p_participate: float = 1.0    # Appendix D partial-participation wrapper
+
+    @property
+    def omega(self) -> float:
+        """Variance parameter: C in U(omega).  Wrapped for partial
+        participation per Theorem D.1: (omega+1)/p' - 1."""
+        base = REGISTRY[self.name].omega(self)
+        if self.p_participate < 1.0:
+            return (base + 1.0) / self.p_participate - 1.0
+        return base
+
+    @property
+    def expected_density(self) -> float:
+        """zeta_C: expected nonzero (or fp32-equivalent) coords per message."""
+        dens = REGISTRY[self.name].expected_density(self)
+        return self.p_participate * dens
+
+    @property
+    def payload_coords(self) -> float:
+        """Ideal-wire scalars per message (values only; index sets that are
+        derivable from the shared round seed cost nothing)."""
+        return self.expected_density
+
+    def wire_coords(self, mode: str = "independent") -> float:
+        """Scalars the *sparse wire format* actually moves per node message:
+        values, plus the support description when the receiver cannot
+        rederive it (independent RandK ships its private index set;
+        shared_coords / shared-permk supports follow from the shared round
+        seed so only values ship)."""
+        return self.p_participate * REGISTRY[self.name].wire_coords(self,
+                                                                    mode)
+
+    def wire_bits(self, mode: str = "independent") -> float:
+        """fp32 bits the sparse wire format moves (NOT Definition 1.3 —
+        that is ``32 * payload_coords``; see DESIGN.md §6 for the split)."""
+        return 32.0 * self.wire_coords(mode)
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressorDef:
+    """Registry entry: the full analytic + randomness definition."""
+
+    name: str
+    omega: Callable[[CompressorSpec], float]
+    expected_density: Callable[[CompressorSpec], float]
+    #: (spec, key, n_nodes, mode) -> Plan, built from plan.py primitives
+    make_plan: Callable[[CompressorSpec, jax.Array, int, str], Plan]
+    wire_coords: Callable[[CompressorSpec, str], float]
+    modes: Tuple[str, ...] = MODES
+    supports_sparse: bool = False
+
+
+REGISTRY: Dict[str, CompressorDef] = {}
+
+
+def register(defn: CompressorDef) -> CompressorDef:
+    REGISTRY[defn.name] = defn
+    return defn
+
+
+def make_spec(name: str, d: int, *, k: Optional[int] = None, n: int = 1,
+              s: int = 15, p: float = 1.0,
+              p_participate: float = 1.0) -> CompressorSpec:
+    name = name.lower()
+    if name not in REGISTRY:
+        raise ValueError(f"unknown compressor {name!r}; "
+                         f"registered: {sorted(REGISTRY)}")
+    if name == "randk":
+        assert k is not None and 0 < k <= d, (k, d)
+    return CompressorSpec(name=name, d=d, k=k, n=n, s=s, p=p,
+                          p_participate=p_participate)
+
+
+def _wrap_participation(plan: Plan, spec: CompressorSpec, key: jax.Array,
+                        n: int) -> Plan:
+    """Fold Appendix D coins into the plan's per-node scale."""
+    if spec.p_participate >= 1.0:
+        return plan
+    factor = participation_coins(key, n, spec.p_participate)
+    return plan._replace(scale=plan.scale * factor,
+                         payload_coords=plan.payload_coords
+                         * spec.p_participate,
+                         wire_coords=plan.wire_coords * spec.p_participate)
+
+
+def make_plan(spec: CompressorSpec, key: jax.Array, n: int,
+              mode: str = "independent") -> Plan:
+    """Draw ALL of this round's compression randomness, for n nodes."""
+    if mode not in MODES:
+        raise ValueError(f"unknown mode {mode!r}")
+    k_plan, k_pp = jax.random.split(key)
+    plan = REGISTRY[spec.name].make_plan(spec, k_plan, n, mode)
+    return _wrap_participation(plan, spec, k_pp, n)
+
+
+# ---------------------------------------------------------------------------
+# registrations — each is one compact block; this is the whole cost of a
+# new compressor (DESIGN.md §5 walks through adding one)
+# ---------------------------------------------------------------------------
+
+def _identity_plan(spec, key, n, mode):
+    return Plan(kind="passthrough", scale=1.0,
+                payload_coords=float(spec.d), wire_coords=float(spec.d))
+
+
+register(CompressorDef(
+    name="identity",
+    omega=lambda s: 0.0,
+    expected_density=lambda s: float(s.d),
+    make_plan=_identity_plan,
+    wire_coords=lambda s, m: float(s.d),
+))
+
+
+def _randk_plan(spec, key, n, mode):
+    d, k = spec.d, spec.k
+    if mode == "shared_coords":
+        idx = jnp.broadcast_to(randk_indices(key, d, k)[None], (n, k))
+        wire = float(k)                       # support rederivable from seed
+    else:
+        idx = jax.vmap(lambda kk: randk_indices(kk, d, k))(
+            jax.random.split(key, n))
+        wire = 2.0 * k                        # private support: idx + values
+    return Plan(kind="sparsify", scale=float(d) / k, indices=idx,
+                payload_coords=float(k), wire_coords=wire)
+
+
+register(CompressorDef(
+    name="randk",
+    omega=lambda s: s.d / s.k - 1.0,          # Theorem F.2
+    expected_density=lambda s: float(s.k),
+    make_plan=_randk_plan,
+    wire_coords=lambda s, m: (float(s.k) if m == "shared_coords"
+                              else 2.0 * s.k),
+    modes=("independent", "shared_coords"),
+    supports_sparse=True,
+))
+
+
+def _permk_plan(spec, key, n, mode):
+    if mode == "independent":
+        # paper-faithful Assumption 1.2: node i draws its OWN partition and
+        # keeps block i of it (private random block; supports may overlap
+        # across nodes).  Support is described by one private shift scalar.
+        idx = jax.vmap(lambda i, kk: perm_partition(kk, spec.d, n)[i])(
+            jnp.arange(n), jax.random.split(key, n))
+        wire = float(idx.shape[1]) + 1.0      # values + the shift
+    else:
+        idx = perm_partition(key, spec.d, n)  # shared: (n, ceil(d/n))
+        wire = float(idx.shape[1])            # shift follows the round seed
+    return Plan(kind="sparsify", scale=float(n), indices=idx,
+                payload_coords=spec.d / n, wire_coords=wire)
+
+
+register(CompressorDef(
+    name="permk",
+    omega=lambda s: s.n - 1.0,                # as a collection (Szlendak+21)
+    expected_density=lambda s: s.d / s.n,
+    make_plan=_permk_plan,
+    wire_coords=lambda s, m: (float(-(-s.d // s.n))
+                              + (1.0 if m == "independent" else 0.0)),
+    modes=("independent", "permk"),
+    supports_sparse=True,
+))
+
+
+def _bernoulli_wire(spec, mode) -> float:
+    # shared_coords: the mask follows from the shared round seed, only
+    # values ship; independent: the private support ships as indices too.
+    factor = 1.0 if mode == "shared_coords" else 2.0
+    return factor * spec.p * spec.d
+
+
+def _bernoulli_plan(spec, key, n, mode):
+    d, p = spec.d, spec.p
+    if mode == "shared_coords":
+        mask = jnp.broadcast_to(draw_mask(key, (d,), p)[None], (n, d))
+    else:
+        mask = draw_mask(key, (n, d), p)
+    mask = mask.astype(jnp.float32)
+    return Plan(kind="sparsify", scale=1.0 / p, mask=mask,
+                payload_coords=p * d,
+                wire_coords=_bernoulli_wire(spec, mode))
+
+
+register(CompressorDef(
+    name="bernoulli",
+    omega=lambda s: 1.0 / s.p - 1.0,          # RandP sparsifier
+    expected_density=lambda s: s.p * s.d,
+    make_plan=_bernoulli_plan,
+    wire_coords=_bernoulli_wire,
+    modes=("independent", "shared_coords"),
+))
+
+
+def _qdither_payload(spec) -> float:
+    bits = np.ceil(np.log2(spec.s + 1)) + 1   # levels + sign
+    return float(spec.d * bits / 32.0 + 1.0)  # + the fp32 norm
+
+
+def _qdither_plan(spec, key, n, mode):
+    u = jax.random.uniform(key, (n, spec.d), jnp.float32)
+    pay = _qdither_payload(spec)
+    return Plan(kind="dither", scale=1.0, dither_u=u, levels=spec.s,
+                payload_coords=pay, wire_coords=pay)
+
+
+register(CompressorDef(
+    name="qdither",
+    # omega <= min(d/s^2, sqrt(d)/s)  (Alistarh et al. 2017, Lemma 3.1)
+    omega=lambda s: float(min(s.d / s.s**2, np.sqrt(s.d) / s.s)),
+    expected_density=_qdither_payload,
+    make_plan=_qdither_plan,
+    wire_coords=lambda s, m: _qdither_payload(s),
+    modes=("independent",),
+))
+
+
+# -- omega calculus used by configs that know p/n before d ------------------
+
+def omega_bernoulli(p: float) -> float:
+    """Bernoulli-RandP: omega = 1/p - 1 (DashaTrainConfig's compression)."""
+    return 1.0 / p - 1.0
+
+
+def omega_permk(n: int) -> float:
+    """PermK collection: omega = n - 1."""
+    return float(n - 1)
+
+
+def momentum_a(omega: float) -> float:
+    """The compressor momentum a = 1/(2 omega + 1) (Theorem 6.1)."""
+    return 1.0 / (2.0 * omega + 1.0)

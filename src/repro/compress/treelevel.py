@@ -1,0 +1,184 @@
+"""Pytree adapter for the compression subsystem (DESIGN.md §3-§5).
+
+The flat layers (:mod:`plan` / :mod:`backends`) think in (n, d) matrices;
+model training thinks in parameter pytrees whose leaves carry a leading node
+axis and GSPMD shardings.  This module is the ONE place that bridges them:
+
+* :func:`leaf_keys`          — per-leaf RNG key fanout;
+* :func:`bernoulli_compress` — tree-level independent / shared_coords modes;
+* :func:`permk_compress`     — tree-level PermK with exact aggregate;
+* :func:`fused_tree_update`  — the Pallas fused path, now covering ALL modes
+  (independent | shared_coords | permk) x variants (dasha | mvr), which lets
+  :mod:`repro.optim.distributed` drop its old "kernel only if not permk and
+  not mvr" restriction.
+
+All masks come from :mod:`repro.compress.plan`, so the dense and fused paths
+are parity-testable under the same key.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.compress.plan import draw_mask, permk_owner
+
+PyTree = Any
+
+
+def leaf_keys(key: jax.Array, tree: PyTree) -> PyTree:
+    """Split one round key into one key per leaf (same treedef)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    keys = list(jax.random.split(key, len(leaves)))
+    return jax.tree_util.tree_unflatten(treedef, keys)
+
+
+def _spec_leaf(t) -> bool:
+    from jax.sharding import PartitionSpec
+    return t is None or isinstance(t, (jax.Array, PartitionSpec))
+
+
+def _none_specs(tree: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(lambda x: None, tree)
+
+
+# ---------------------------------------------------------------------------
+# dense tree-level execution
+# ---------------------------------------------------------------------------
+
+def bernoulli_compress(key: jax.Array, delta: PyTree, p: float,
+                       specs: Optional[PyTree] = None,
+                       shared: bool = False) -> PyTree:
+    """delta leaves: (n, *shape). Independent mask per node per coordinate;
+    ``shared=True`` draws ONE mask per leaf shared by all nodes (the
+    aggregate is then supported on ~p*d coords with a common index set —
+    the `shared_coords` execution mode; loses the omega/n variance
+    averaging across nodes, see DESIGN.md §3).
+
+    ``specs``: optional PartitionSpecs (WITH the node axis) pinned onto the
+    Bernoulli masks — forces the partitionable threefry RNG to generate its
+    bits sharded instead of materialising an unsharded d-size mask."""
+    def leaf(k, x, spec):
+        shp = x.shape[1:] if shared else x.shape
+        mask = draw_mask(k, shp, p)
+        if shared:
+            mask = jnp.broadcast_to(mask[None], x.shape)
+        if spec is not None:
+            mask = jax.lax.with_sharding_constraint(mask, spec)
+        return jnp.where(mask, x / p, 0.0).astype(x.dtype)
+
+    if specs is None:
+        specs = _none_specs(delta)
+    return jax.tree_util.tree_map(leaf, leaf_keys(key, delta), delta, specs,
+                                  is_leaf=_spec_leaf)
+
+
+def permk_compress(key: jax.Array, delta: PyTree, n: int,
+                   specs: Optional[PyTree] = None) -> Tuple[PyTree, PyTree]:
+    """Returns (messages m_i (n,*shape), exact aggregate mean_i m_i (*shape)).
+
+    PermK partitioning via the shared cyclically-shifted ownership map
+    (:func:`repro.compress.plan.permk_owner`) — iota masks only, no
+    (n, n, blk) intermediates, no rolls — so GSPMD keeps every tensor at the
+    (n, d) footprint (the roll formulation compiled to 5x peak memory; see
+    EXPERIMENTS.md §Perf)."""
+    from jax.sharding import PartitionSpec
+
+    def leaf(k, x, spec):
+        nloc = x.shape[0]
+        owner = permk_owner(k, x.shape[1:], nloc)
+        if spec is not None:              # shard the ownership iota too
+            owner = jax.lax.with_sharding_constraint(
+                owner, PartitionSpec(*tuple(spec)[1:]))
+        ids = jnp.arange(nloc).reshape((nloc,) + (1,) * (x.ndim - 1))
+        m = x * (owner[None] == ids).astype(x.dtype) * nloc
+        if spec is not None:
+            m = jax.lax.with_sharding_constraint(m, spec)
+        # disjoint supports => the mean recovers exactly node owner(c)'s
+        # value at c; computed as a plain mean so GSPMD emits ONE reduce
+        # over the node axis.
+        return m, jnp.mean(m.astype(jnp.float32), 0)
+
+    if specs is None:
+        specs = _none_specs(delta)
+    pairs = jax.tree_util.tree_map(leaf, leaf_keys(key, delta), delta, specs,
+                                   is_leaf=_spec_leaf)
+    is2 = lambda t: isinstance(t, tuple) and len(t) == 2
+    m = jax.tree_util.tree_map(lambda p_: p_[0], pairs, is_leaf=is2)
+    agg = jax.tree_util.tree_map(lambda p_: p_[1], pairs, is_leaf=is2)
+    return m, agg
+
+
+# ---------------------------------------------------------------------------
+# fused (Pallas) tree-level execution — full mode x variant coverage
+# ---------------------------------------------------------------------------
+
+def tree_masks(key: jax.Array, tree: PyTree, *, mode: str, p: float, n: int,
+               specs: Optional[PyTree] = None) -> Tuple[PyTree, float]:
+    """One (n, *shape) f32 {0,1} mask per leaf + the unbiasedness scale.
+
+    Draws the SAME randomness as the dense paths above (same per-leaf key
+    fanout, same primitives), so fused-vs-dense trajectories are
+    parity-testable under a shared round key."""
+    def leaf(k, x, spec):
+        if mode == "permk":
+            nloc = x.shape[0]
+            # the returned scale is the tree-wide n: a leaf whose node axis
+            # disagrees would get silently mis-scaled (biased estimator)
+            assert nloc == n, (f"permk leaf node axis {nloc} != n={n}; "
+                               "masks and scale would disagree")
+            owner = permk_owner(k, x.shape[1:], nloc)
+            ids = jnp.arange(nloc).reshape((nloc,) + (1,) * (x.ndim - 1))
+            mask = (owner[None] == ids).astype(jnp.float32)
+        elif mode == "shared_coords":
+            mask = jnp.broadcast_to(draw_mask(k, x.shape[1:], p)[None],
+                                    x.shape).astype(jnp.float32)
+        else:
+            mask = draw_mask(k, x.shape, p).astype(jnp.float32)
+        if spec is not None:
+            mask = jax.lax.with_sharding_constraint(mask, spec)
+        return mask
+
+    if specs is None:
+        specs = _none_specs(tree)
+    masks = jax.tree_util.tree_map(leaf, leaf_keys(key, tree), tree, specs,
+                                   is_leaf=_spec_leaf)
+    scale = float(n) if mode == "permk" else 1.0 / p
+    return masks, scale
+
+
+def fused_tree_update(key: jax.Array, grads_new: PyTree, h: PyTree,
+                      g_local: PyTree, *, mode: str, a: float, p: float,
+                      n: int, variant: str = "dasha", b: float = 0.0,
+                      grads_old: Optional[PyTree] = None,
+                      specs: Optional[PyTree] = None
+                      ) -> Tuple[PyTree, PyTree, PyTree]:
+    """Alg. 1 lines 8-10 per leaf in ONE Pallas HBM pass, for every mode.
+
+    ``variant="dasha"``: h_new = grads_new.  ``variant="mvr"``: the kernel
+    fuses the momentum h-update h_new = gn + (1-b)(h - go) as well
+    (``grads_old`` required).  Returns (m, h_new, g_local_new) trees."""
+    from repro.kernels import ops as kops
+
+    masks, scale = tree_masks(key, grads_new, mode=mode, p=p, n=n,
+                              specs=specs)
+
+    if variant == "mvr":
+        assert grads_old is not None, "mvr fused path needs grads_old"
+
+        def leaf(mask, gn, go, hh, gl):
+            return kops.dasha_mvr_update(gn, go, hh, gl, mask, a, b, scale)
+
+        trips = jax.tree_util.tree_map(leaf, masks, grads_new, grads_old,
+                                       h, g_local)
+    else:
+        def leaf(mask, gn, hh, gl):
+            return kops.dasha_update(gn, hh, gl, mask, a, scale)
+
+        trips = jax.tree_util.tree_map(leaf, masks, grads_new, h, g_local)
+
+    is3 = lambda t: isinstance(t, tuple) and len(t) == 3
+    pick = lambda i: jax.tree_util.tree_map(lambda t: t[i], trips,
+                                            is_leaf=is3)
+    return pick(0), pick(1), pick(2)

@@ -1,5 +1,6 @@
 """Core DASHA library — the paper's contribution as composable JAX modules."""
 from repro.core import compressors, dasha, marina, node_compress, oracles, theory  # noqa: F401
+from repro.compress import RoundCompressor, make_round_compressor  # noqa: F401
 from repro.core.compressors import (Identity, PartialParticipation, PermK,  # noqa: F401
                                     QDither, RandK, make_compressor)
 from repro.core.dasha import DashaHyper, DashaState, init, run, step  # noqa: F401

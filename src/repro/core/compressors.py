@@ -1,215 +1,11 @@
-"""Unbiased compressors (Definition 1.1) and their omega calculus.
+"""Back-compat shim: the compressors now live in :mod:`repro.compress`.
 
-A compressor here is a pure function ``compress(key, x) -> CompressedMsg`` plus
-``decompress(msg) -> x_hat`` with ``E[x_hat] = x`` and
-``E||x_hat - x||^2 <= omega * ||x||^2`` (class U(omega), eq. (4) of the paper).
-
-All compressors operate on flat 1-D vectors; pytree plumbing lives in
-:mod:`repro.core.pytree_util`.  ``expected_density`` implements Definition 1.3
-(zeta_C), used by the communication-complexity accounting and benchmarks.
+Kept so ``from repro.core.compressors import RandK`` (the seed's import
+path, used throughout tests/benchmarks/examples) keeps working; all omega
+calculus, masking randomness and execution now route through the layered
+subsystem (spec / plan / backends — see DESIGN.md §3-§6).
 """
-from __future__ import annotations
-
-import dataclasses
-from functools import partial
-from typing import Callable, Optional
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-
-@dataclasses.dataclass(frozen=True)
-class CompressedMsg:
-    """A compressed message.
-
-    ``dense`` is the decompressed d-vector (kept for math/aggregation on CPU and
-    for the ``independent`` execution mode); ``payload_coords`` is the number of
-    scalar coordinates a real wire transfer would carry (Definition 1.3 style
-    accounting, used to plot 'bits sent per node').
-    """
-
-    dense: jax.Array
-    payload_coords: int
-
-
-class Compressor:
-    """Base class: an element of U(omega)."""
-
-    #: variance parameter omega such that C in U(omega)
-    omega: float
-    #: expected number of nonzero coords returned (zeta_C, Definition 1.3)
-    expected_density: float
-
-    def __call__(self, key: jax.Array, x: jax.Array) -> jax.Array:
-        """Return the decompressed estimate C(x) (dense d-vector)."""
-        raise NotImplementedError
-
-    def payload(self, d: int) -> float:
-        """Scalar coordinates sent over the wire per message of dimension d."""
-        return self.expected_density
-
-
-@dataclasses.dataclass(frozen=True)
-class Identity(Compressor):
-    """No compression: C(x) = x, omega = 0 (sanity baseline; DASHA -> GD)."""
-
-    d: int
-
-    @property
-    def omega(self) -> float:  # type: ignore[override]
-        return 0.0
-
-    @property
-    def expected_density(self) -> float:  # type: ignore[override]
-        return float(self.d)
-
-    def __call__(self, key, x):
-        return x
-
-
-@dataclasses.dataclass(frozen=True)
-class RandK(Compressor):
-    """RandK sparsifier (Definition F.1): keep K uniformly random coords, scale
-    by d/K.  C in U(d/K - 1) (Theorem F.2)."""
-
-    d: int
-    k: int
-
-    @property
-    def omega(self) -> float:  # type: ignore[override]
-        return self.d / self.k - 1.0
-
-    @property
-    def expected_density(self) -> float:  # type: ignore[override]
-        return float(self.k)
-
-    def mask(self, key: jax.Array) -> jax.Array:
-        """0/1 mask with exactly K ones (without replacement)."""
-        # Top-k of iid uniforms == uniform K-subset without replacement.
-        u = jax.random.uniform(key, (self.d,))
-        thresh = jax.lax.top_k(u, self.k)[0][-1]
-        return (u >= thresh).astype(jnp.float32)
-
-    def __call__(self, key, x):
-        m = self.mask(key).astype(x.dtype)
-        return x * m * (self.d / self.k)
-
-
-@dataclasses.dataclass(frozen=True)
-class PermK(Compressor):
-    """PermK (Szlendak, Tyurin & Richtarik 2021).
-
-    The d coordinates are split into n equal blocks by a per-round random
-    permutation; node ``node_idx`` sends exactly its block scaled by n.
-    Unbiased with omega = n - 1 *as a collection*; on a TPU mesh the
-    aggregation is exactly a reduce-scatter (+ all-gather), which is why this
-    is our beyond-paper collective-optimal mode.  Requires d % n == 0 (the ops
-    layer pads).
-    """
-
-    d: int
-    n: int
-    node_idx: int = 0
-
-    @property
-    def omega(self) -> float:  # type: ignore[override]
-        return self.n - 1.0
-
-    @property
-    def expected_density(self) -> float:  # type: ignore[override]
-        return self.d / self.n
-
-    def mask(self, key: jax.Array) -> jax.Array:
-        perm = jax.random.permutation(key, self.d)
-        block = self.d // self.n
-        sel = jax.lax.dynamic_slice(perm, (self.node_idx * block,), (block,))
-        return jnp.zeros((self.d,), jnp.float32).at[sel].set(1.0)
-
-    def __call__(self, key, x):
-        return x * self.mask(key).astype(x.dtype) * self.n
-
-
-@dataclasses.dataclass(frozen=True)
-class QDither(Compressor):
-    """Unbiased stochastic quantization (QSGD-style, s levels, per-vector L2
-    scale).  omega <= min(d/s^2, sqrt(d)/s) (Alistarh et al. 2017, Lemma 3.1).
-
-    Payload: d small ints + 1 float; we count it as d * (bits(s)/32) + 1
-    equivalent fp32 coordinates.
-    """
-
-    d: int
-    s: int = 15  # levels -> 4-bit payload
-
-    @property
-    def omega(self) -> float:  # type: ignore[override]
-        return float(min(self.d / self.s**2, np.sqrt(self.d) / self.s))
-
-    @property
-    def expected_density(self) -> float:  # type: ignore[override]
-        bits = np.ceil(np.log2(self.s + 1)) + 1  # levels + sign
-        return float(self.d * bits / 32.0 + 1.0)
-
-    def __call__(self, key, x):
-        norm = jnp.linalg.norm(x)
-        safe = jnp.where(norm > 0, norm, 1.0)
-        y = jnp.abs(x) / safe * self.s  # in [0, s]
-        lo = jnp.floor(y)
-        prob = y - lo
-        rnd = jax.random.uniform(key, x.shape, dtype=jnp.float32).astype(x.dtype)
-        q = lo + (rnd < prob).astype(x.dtype)
-        out = jnp.sign(x) * q * safe / self.s
-        return jnp.where(norm > 0, out, jnp.zeros_like(x))
-
-
-@dataclasses.dataclass(frozen=True)
-class PartialParticipation(Compressor):
-    """C_{p'} wrapper (Appendix D, Theorem D.1): with prob p' send C(x)/p',
-    else send nothing.  If C in U(omega) then C_{p'} in U((omega+1)/p' - 1)."""
-
-    base: Compressor
-    p_participate: float
-
-    @property
-    def omega(self) -> float:  # type: ignore[override]
-        return (self.base.omega + 1.0) / self.p_participate - 1.0
-
-    @property
-    def expected_density(self) -> float:  # type: ignore[override]
-        return self.p_participate * self.base.expected_density
-
-    def __call__(self, key, x):
-        k_coin, k_base = jax.random.split(key)
-        take = jax.random.bernoulli(k_coin, self.p_participate)
-        return jnp.where(take, self.base(k_base, x) / self.p_participate,
-                         jnp.zeros_like(x))
-
-
-def make_compressor(name: str, d: int, *, k: Optional[int] = None,
-                    n: int = 1, node_idx: int = 0, s: int = 15,
-                    p_participate: float = 1.0) -> Compressor:
-    """Factory used by configs / CLI."""
-    name = name.lower()
-    if name == "identity":
-        base: Compressor = Identity(d)
-    elif name == "randk":
-        assert k is not None and 0 < k <= d
-        base = RandK(d, k)
-    elif name == "permk":
-        base = PermK(d, n, node_idx)
-    elif name == "qdither":
-        base = QDither(d, s)
-    else:
-        raise ValueError(f"unknown compressor {name!r}")
-    if p_participate < 1.0:
-        return PartialParticipation(base, p_participate)
-    return base
-
-
-def empirical_omega(comp: Compressor, key: jax.Array, x: jax.Array,
-                    trials: int = 512) -> float:
-    """Monte-Carlo estimate of E||C(x)-x||^2 / ||x||^2 (test/diagnostic)."""
-    keys = jax.random.split(key, trials)
-    err = jax.vmap(lambda k: jnp.sum((comp(k, x) - x) ** 2))(keys)
-    return float(jnp.mean(err) / jnp.sum(x**2))
+from repro.compress.legacy import (Compressor, Identity,  # noqa: F401
+                                   PartialParticipation, PermK, QDither,
+                                   RandK, empirical_omega, make_compressor)
+from repro.compress.spec import CompressorSpec, make_spec  # noqa: F401

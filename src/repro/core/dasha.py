@@ -2,17 +2,21 @@
 
 Functional JAX: ``init(...) -> DashaState``; ``step(state, ...) -> DashaState``
 is jit-able and carries the full per-node state stacked on axis 0 (vmap on a
-single host, shard_map over ('pod','data') on a mesh — see core/sharded.py and
-optim/distributed.py for the model-training integration).
+single host; see optim/distributed.py for the sharded model-training
+integration).
 
 The four variants differ ONLY in the h-update (Alg. 1 line 8), exactly as in
-the paper.  The message/aggregation lines 9-14 are shared:
+the paper.  The message/aggregation lines 9-14 are shared and run through
+:meth:`repro.compress.RoundCompressor.estimator_update`, which makes the
+loop generic over execution backends (DESIGN.md §5): ``dense`` reference,
+``sparse`` (messages travel as (indices, values) pairs and the aggregate
+touches K << d coords), and ``fused`` (one Pallas HBM pass):
 
     m_i     = C_i(h_i^{t+1} - h_i^t - a (g_i^t - h_i^t))
     g_i    <- g_i + m_i
     g      <- g + (1/n) sum_i m_i
 
-Invariant (tested): g^t == mean_i g_i^t at every t.
+Invariant (tested): g^t == mean_i g_i^t at every t, for every backend.
 """
 from __future__ import annotations
 
@@ -22,6 +26,7 @@ from typing import Any, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.compress import as_round_compressor
 from repro.core.node_compress import NodeCompressor
 from repro.core.oracles import FiniteSumProblem, StochasticProblem
 
@@ -101,28 +106,32 @@ _H_UPDATES = {"dasha": _h_dasha, "page": _h_page, "mvr": _h_mvr}
 # the step
 # ---------------------------------------------------------------------------
 
-def step(state: DashaState, hp: DashaHyper, problem,
-         comp: NodeCompressor) -> DashaState:
-    """One communication round of Algorithm 1 (or Algorithm 2 for sync_mvr)."""
+def step(state: DashaState, hp: DashaHyper, problem, comp) -> DashaState:
+    """One communication round of Algorithm 1 (or Algorithm 2 for sync_mvr).
+
+    ``comp``: a :class:`repro.compress.RoundCompressor` (or a legacy
+    :class:`NodeCompressor`); its ``backend`` field selects dense / sparse /
+    fused execution of lines 9-10 without changing the math."""
+    rc = as_round_compressor(comp)
     key, k_h, k_c, k_coin = jax.random.split(state.key, 4)
     x_new = state.x - hp.gamma * state.g          # line 4 (server) + broadcast
 
     if hp.variant == "sync_mvr":
-        return _step_sync_mvr(state, hp, problem, comp, x_new, key, k_h, k_c,
+        return _step_sync_mvr(state, hp, problem, rc, x_new, key, k_h, k_c,
                               k_coin)
 
     h_new = _H_UPDATES[hp.variant](problem, k_h, hp, x_new, state.x,
                                    state.h_local)                     # line 8
-    delta = h_new - state.h_local - hp.a * (state.g_local - state.h_local)
-    m = comp(k_c, delta)                                              # line 9
-    g_local = state.g_local + m                                       # line 10
-    g = state.g + jnp.mean(m, 0)                                      # line 14
+    # lines 9-10: m_i = C_i(drift); g_i <- g_i + m_i (backend-dispatched)
+    msgs, h_new, g_local = rc.estimator_update(k_c, h_new, state.h_local,
+                                               state.g_local, hp.a)
+    g = state.g + msgs.mean()                                         # line 14
     return DashaState(x=x_new, g=g, g_local=g_local, h_local=h_new, key=key,
                       t=state.t + 1,
-                      bits_sent=state.bits_sent + comp.payload_per_node)
+                      bits_sent=state.bits_sent + rc.payload_per_node)
 
 
-def _step_sync_mvr(state, hp, problem, comp, x_new, key, k_h, k_c, k_coin):
+def _step_sync_mvr(state, hp, problem, rc, x_new, key, k_h, k_c, k_coin):
     """Algorithm 2.  With prob p all nodes send a FRESH uncompressed megabatch
     gradient (the synchronization step); otherwise a SARAH-style compressed
     drift message."""
@@ -135,14 +144,14 @@ def _step_sync_mvr(state, hp, problem, comp, x_new, key, k_h, k_c, k_coin):
     g_pair_new, g_pair_old = problem.stoch_grad_pair(k_h, x_new, state.x,
                                                      hp.batch)
     h_inc = g_pair_new + (state.h_local - g_pair_old)
-    delta = h_inc - state.h_local - hp.a * (state.g_local - state.h_local)
-    m_c = comp(k_c, delta)
+    msgs, h_inc, g_comp = rc.estimator_update(k_c, h_inc, state.h_local,
+                                              state.g_local, hp.a)
 
     h_new = jnp.where(coin, h_sync, h_inc)
-    g_local = jnp.where(coin, h_sync, state.g_local + m_c)
-    g = jnp.where(coin, jnp.mean(h_sync, 0), state.g + jnp.mean(m_c, 0))
+    g_local = jnp.where(coin, h_sync, g_comp)
+    g = jnp.where(coin, jnp.mean(h_sync, 0), state.g + msgs.mean())
     d = state.x.shape[0]
-    payload = jnp.where(coin, float(d), comp.payload_per_node)
+    payload = jnp.where(coin, float(d), rc.payload_per_node)
     return DashaState(x=x_new, g=g, g_local=g_local, h_local=h_new, key=key,
                       t=state.t + 1, bits_sent=state.bits_sent + payload)
 

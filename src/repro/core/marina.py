@@ -18,7 +18,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.node_compress import NodeCompressor
+from repro.compress import as_round_compressor
 
 
 class MarinaState(NamedTuple):
@@ -47,8 +47,8 @@ def init(x0: jax.Array, key: jax.Array, problem) -> MarinaState:
                        bits_sent=jnp.asarray(float(x0.shape[0]), jnp.float32))
 
 
-def step(state: MarinaState, hp: MarinaHyper, problem,
-         comp: NodeCompressor) -> MarinaState:
+def step(state: MarinaState, hp: MarinaHyper, problem, comp) -> MarinaState:
+    rc = as_round_compressor(comp)
     key, k_coin, k_b, k_c = jax.random.split(state.key, 4)
     x_new = state.x - hp.gamma * state.g
     coin = jax.random.bernoulli(k_coin, hp.p)
@@ -67,16 +67,16 @@ def step(state: MarinaState, hp: MarinaHyper, problem,
     else:
         raise ValueError(hp.variant)
 
-    m = comp(k_c, diff)
-    g_comp = state.g + jnp.mean(m, 0)
+    msgs = rc.compress(k_c, diff)          # dense / sparse wire format
+    g_comp = state.g + msgs.mean()
     g_sync = jnp.mean(sync, 0)
     g = jnp.where(coin, g_sync, g_comp)
-    payload = jnp.where(coin, float(d), comp.payload_per_node)
+    payload = jnp.where(coin, float(d), rc.payload_per_node)
     return MarinaState(x=x_new, x_prev=state.x, g=g, key=key, t=state.t + 1,
                        bits_sent=state.bits_sent + payload)
 
 
-def run(state: MarinaState, hp: MarinaHyper, problem, comp: NodeCompressor,
+def run(state: MarinaState, hp: MarinaHyper, problem, comp,
         num_rounds: int, metric_fn=None):
     if metric_fn is None:
         if hasattr(problem, "grad_f"):

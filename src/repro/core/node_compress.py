@@ -1,56 +1,8 @@
-"""Per-node compression of the (n, d) message matrix.
+"""Back-compat shim: NodeCompressor now lives in :mod:`repro.compress`.
 
-Three execution modes (see DESIGN.md §3):
-
-* ``independent`` — paper-faithful Assumption 1.2: each node draws its own key.
-* ``shared_coords`` — all nodes share one RandK index set per round, so the
-  aggregated message is K-sparse with a *common* support: on a mesh the
-  all-reduce moves K floats instead of d (beyond-paper TPU adaptation).
-* ``permk`` — PermK partitioning; node i's support is block i of a shared
-  per-round permutation (maps to reduce-scatter on a mesh).
+The (n, d) execution modes (independent | shared_coords | permk) are
+documented in DESIGN.md §3; the backend column (dense | sparse | fused) in
+§5.  New code should construct :class:`repro.compress.RoundCompressor`
+directly (or via :func:`repro.compress.make_round_compressor`).
 """
-from __future__ import annotations
-
-import dataclasses
-from typing import Tuple
-
-import jax
-import jax.numpy as jnp
-
-from repro.core.compressors import Compressor, PermK, RandK
-
-
-@dataclasses.dataclass(frozen=True)
-class NodeCompressor:
-    base: Compressor
-    n: int
-    mode: str = "independent"  # independent | shared_coords | permk
-
-    @property
-    def omega(self) -> float:
-        return self.base.omega
-
-    @property
-    def payload_per_node(self) -> float:
-        return self.base.expected_density
-
-    def __call__(self, key: jax.Array, deltas: jax.Array) -> jax.Array:
-        """deltas: (n, d) -> messages m_i: (n, d) (dense representation)."""
-        if self.mode == "independent":
-            keys = jax.random.split(key, self.n)
-            return jax.vmap(self.base)(keys, deltas)
-        if self.mode == "shared_coords":
-            assert isinstance(self.base, RandK), "shared_coords needs RandK"
-            mask = self.base.mask(key).astype(deltas.dtype)
-            scale = self.base.d / self.base.k
-            return deltas * mask[None, :] * scale
-        if self.mode == "permk":
-            assert isinstance(self.base, PermK)
-            d = deltas.shape[-1]
-            perm = jax.random.permutation(key, d)
-            block = d // self.n
-            sel = perm.reshape(self.n, block)  # node i -> its coords
-            masks = jnp.zeros((self.n, d), deltas.dtype)
-            masks = jax.vmap(lambda s: jnp.zeros((d,), deltas.dtype).at[s].set(1))(sel)
-            return deltas * masks * self.n
-        raise ValueError(self.mode)
+from repro.compress.legacy import NodeCompressor  # noqa: F401

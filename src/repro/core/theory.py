@@ -9,10 +9,9 @@ from __future__ import annotations
 import dataclasses
 import math
 
-
-def momentum_a(omega: float) -> float:
-    """a = 1/(2 omega + 1)  (Theorems 6.1 / 6.4 / 6.7)."""
-    return 1.0 / (2.0 * omega + 1.0)
+# a = 1/(2 omega + 1) (Theorems 6.1 / 6.4 / 6.7); single definition lives
+# with the omega calculus in the compression spec layer.
+from repro.compress.spec import momentum_a  # noqa: F401
 
 
 def gamma_dasha(L: float, L_hat: float, omega: float, n: int) -> float:

@@ -63,7 +63,6 @@ def _dasha_mvr_update_kernel(a_ref, b_ref, scale_ref, gn_ref, go_ref, h_ref,
 def _grid_specs(rows: int, block_rows: int, n_scalars: int, n_tensors: int):
     block_rows = min(block_rows, rows)
     grid = (pl.cdiv(rows, block_rows),)
-    scalar_spec = pl.BlockSpec(memory_space=pl.ANY)  # replaced below
     tens = pl.BlockSpec((block_rows, LANE), lambda i: (i, 0))
     scal = pl.BlockSpec((1,), lambda i: (0,))
     return grid, [scal] * n_scalars + [tens] * n_tensors, [tens] * 3

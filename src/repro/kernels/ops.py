@@ -8,6 +8,7 @@ in Python), on a real TPU the same code path compiles to Mosaic.
 from __future__ import annotations
 
 import functools
+import os
 from typing import Tuple
 
 import jax
@@ -16,7 +17,11 @@ import jax.numpy as jnp
 from repro.kernels.dasha_update import (LANE, dasha_mvr_update_pallas,
                                         dasha_update_pallas, quantize_pallas)
 
-INTERPRET = True  # flipped by real-TPU deployments
+#: interpret-mode switch: REPRO_PALLAS_INTERPRET=0 on real TPUs compiles the
+#: kernels to Mosaic; any other value (or unset) runs the Python interpreter
+#: path, which is what this CPU container supports.
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1").lower() \
+    not in ("0", "false", "no")
 
 
 def _to_lanes(x: jax.Array) -> Tuple[jax.Array, int]:
@@ -70,6 +75,14 @@ def dasha_mvr_update(grad_new: jax.Array, grad_old: jax.Array, h: jax.Array,
 def quantize(x: jax.Array, key: jax.Array, levels: int = 15) -> jax.Array:
     """Unbiased row-wise stochastic quantization of x: (R, C)."""
     u = jax.random.uniform(key, x.shape, jnp.float32)
+    return quantize_pallas(x, u, levels, interpret=INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("levels",))
+def quantize_with_u(x: jax.Array, u: jax.Array, levels: int = 15
+                    ) -> jax.Array:
+    """Row-wise quantization with EXTERNAL uniforms (the compress plan layer
+    draws them once so dense and fused backends dither identically)."""
     return quantize_pallas(x, u, levels, interpret=INTERPRET)
 
 

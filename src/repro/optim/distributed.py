@@ -5,11 +5,14 @@ the "nodes" are the data-parallel groups (axis n = ("pod","data")); every
 DASHA quantity (h_i, g_i, messages) is a PYTREE shaped like the params with a
 leading node axis, so each leaf keeps its tensor-parallel ("model") sharding.
 
-Compression modes (tree-level; see DESIGN.md §3):
+Compression runs through :mod:`repro.compress.treelevel` (the pytree adapter
+of the unified compression subsystem — DESIGN.md §3-§5):
 
 * ``independent`` — per-node Bernoulli-RandP sparsifier (unbiased, omega =
   1/p - 1, E[density] = p*d).  Aggregation is a dense all-reduce over the
   node axis: the paper-faithful baseline.
+* ``shared_coords`` — one mask per round shared by all nodes; the aggregate
+  is supported on ~p*d common coords (a mesh all-reduce moves p*d floats).
 * ``permk`` — PermK partition compressor: after a shared pseudo-random
   cyclic shift, node i keeps exactly block i of every leaf (scaled by n).
   The aggregate touches only d coordinates total (vs n*d), which GSPMD can
@@ -19,6 +22,11 @@ Compression modes (tree-level; see DESIGN.md §3):
 Variants: ``dasha`` (per-node batch gradient as h, i.e. the GD-like line with
 a stochastic oracle) and ``mvr`` (momentum variance reduction, needs the
 previous params to evaluate the same batch at both points).
+
+``use_kernel=True`` routes EVERY mode x variant combination through the
+fused Pallas path (:func:`repro.compress.treelevel.fused_tree_update`): the
+h-update, drift, masking and g_i update run in one HBM pass per leaf.  The
+seed's restriction (kernel only for independent x dasha) is gone.
 """
 from __future__ import annotations
 
@@ -28,9 +36,17 @@ from typing import Any, Callable, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+# canonical compression primitives (single definitions live in repro.compress;
+# re-exported here for back-compat with seed-era imports)
+from repro.compress import draw_mask  # noqa: F401
+from repro.compress import (bernoulli_compress, fused_tree_update, leaf_keys,
+                            omega_bernoulli, omega_permk, permk_compress)
 from repro.optim.base import SGD, Adam, apply_updates
 
 PyTree = Any
+
+#: seed-era alias; prefer repro.compress.leaf_keys
+_leaf_keys = leaf_keys
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,7 +58,7 @@ class DashaTrainConfig:
     b: float = 0.1                   # MVR momentum
     n_nodes: int = 1
     server_opt: str = "sgd"          # sgd | adam (adam = beyond-paper)
-    use_kernel: bool = False         # use the Pallas dasha_update kernel
+    use_kernel: bool = False         # fused Pallas path (all modes/variants)
     # --- memory / sharding knobs (beyond-paper TPU adaptation) ------------
     state_dtype: str = "float32"     # h_i/g_i storage: float32 | bfloat16
     seq_shard: bool = False          # Megatron-SP residual-stream sharding
@@ -52,9 +68,9 @@ class DashaTrainConfig:
     @property
     def omega(self) -> float:
         if self.mode == "permk":
-            return self.n_nodes - 1.0
-        # independent & shared_coords Bernoulli-RandP: omega = 1/p - 1
-        return 1.0 / self.compression - 1.0
+            return omega_permk(self.n_nodes)
+        # independent & shared_coords Bernoulli-RandP
+        return omega_bernoulli(self.compression)
 
     @property
     def a(self) -> float:
@@ -75,100 +91,6 @@ class DashaTrainState(NamedTuple):
     opt_state: Any
     key: jax.Array
     step: jax.Array
-
-
-# ---------------------------------------------------------------------------
-# tree-level compressors
-# ---------------------------------------------------------------------------
-
-def _leaf_keys(key: jax.Array, tree: PyTree) -> PyTree:
-    leaves, treedef = jax.tree_util.tree_flatten(tree)
-    keys = list(jax.random.split(key, len(leaves)))
-    return jax.tree_util.tree_unflatten(treedef, keys)
-
-
-def draw_mask(k: jax.Array, shape, p: float) -> jax.Array:
-    """Bernoulli(p) mask; u8-threshold path (exact when p is a multiple of
-    1/256) avoids materialising u32 bits + f32 uniforms over d elements."""
-    thresh256 = p * 256.0
-    if abs(thresh256 - round(thresh256)) < 1e-9 and round(thresh256) > 0:
-        return jax.random.bits(k, shape, jnp.uint8) \
-            < jnp.uint8(round(thresh256))
-    return jax.random.bernoulli(k, p, shape)
-
-
-def bernoulli_compress(key: jax.Array, delta: PyTree, p: float,
-                       specs: Optional[PyTree] = None,
-                       shared: bool = False) -> PyTree:
-    """delta leaves: (n, *shape). Independent mask per node per coordinate;
-    ``shared=True`` draws ONE mask per leaf shared by all nodes (the
-    aggregate is then supported on ~p*d coords with a common index set —
-    the `shared_coords` execution mode; loses the omega/n variance
-    averaging across nodes, see DESIGN.md §3).
-
-    ``specs``: optional PartitionSpecs (WITH the node axis) pinned onto the
-    Bernoulli masks — forces the partitionable threefry RNG to generate its
-    bits sharded instead of materialising an unsharded d-size mask."""
-    from jax.sharding import PartitionSpec
-
-    def leaf(k, x, spec):
-        shp = x.shape[1:] if shared else x.shape
-        mask = draw_mask(k, shp, p)
-        if shared:
-            mask = jnp.broadcast_to(mask[None], x.shape)
-        if spec is not None:
-            mask = jax.lax.with_sharding_constraint(mask, spec)
-        return jnp.where(mask, x / p, 0.0).astype(x.dtype)
-    if specs is None:
-        specs = jax.tree_util.tree_map(lambda x: None, delta)
-    return jax.tree_util.tree_map(
-        leaf, _leaf_keys(key, delta), delta, specs,
-        is_leaf=lambda t: t is None or isinstance(t, (jax.Array,
-                                                      PartitionSpec)))
-
-
-def permk_compress(key: jax.Array, delta: PyTree, n: int,
-                   specs: Optional[PyTree] = None) -> Tuple[PyTree, PyTree]:
-    """Returns (messages m_i (n,*shape), exact aggregate mean_i m_i (*shape)).
-
-    PermK partitioning via a per-round cyclically-shifted ownership map:
-    coordinate c belongs to node ``owner(c) = ((c + shift) // blk) % n``.
-    Implemented with iota masks only — no (n, n, blk) intermediates, no
-    rolls — so GSPMD keeps every tensor at the (n, d) footprint (the roll
-    formulation compiled to 5x peak memory; see EXPERIMENTS.md §Perf)."""
-    from jax.sharding import PartitionSpec
-
-    def leaf(k, x, spec):
-        nloc = x.shape[0]
-        L = int(jnp.size(x) // nloc)
-        blk = -(-L // nloc)               # ceil
-        shift = jax.random.randint(k, (), 0, nloc * blk)
-        owner = ((jnp.arange(L) + shift) // blk) % nloc          # (L,)
-        owner = owner.reshape(x.shape[1:])
-        if spec is not None:              # shard the ownership iota too
-            owner = jax.lax.with_sharding_constraint(
-                owner, PartitionSpec(*tuple(spec)[1:]))
-        ids = jnp.arange(nloc).reshape((nloc,) + (1,) * (x.ndim - 1))
-        m = x * (owner[None] == ids).astype(x.dtype) * nloc
-        if spec is not None:
-            m = jax.lax.with_sharding_constraint(m, spec)
-        # disjoint supports => the mean recovers exactly node owner(c)'s
-        # value at c; computed as a plain mean so GSPMD emits ONE reduce
-        # over the node axis.
-        return m, jnp.mean(m.astype(jnp.float32), 0)
-
-    keys = _leaf_keys(key, delta)
-    if specs is None:
-        specs = jax.tree_util.tree_map(lambda x: None, delta)
-    pairs = jax.tree_util.tree_map(
-        leaf, keys, delta, specs,
-        is_leaf=lambda t: t is None or isinstance(t, (jax.Array,
-                                                      PartitionSpec)))
-    m = jax.tree_util.tree_map(lambda p_: p_[0], pairs,
-                               is_leaf=lambda t: isinstance(t, tuple))
-    agg = jax.tree_util.tree_map(lambda p_: p_[1], pairs,
-                                 is_leaf=lambda t: isinstance(t, tuple))
-    return m, agg
 
 
 # ---------------------------------------------------------------------------
@@ -250,42 +172,37 @@ def make_train_step(cfg: DashaTrainConfig,
                                         state.params)
         params_new = apply_updates(state.params, updates)
 
-        # ---- h update (line 8) -------------------------------------------
+        # ---- line 8 oracles ----------------------------------------------
         grads_new = per_node_grads(params_new, batch)           # (n, *shape)
-        if cfg.variant == "mvr":
-            grads_old = per_node_grads(state.params, batch)
-            h_new = jax.tree_util.tree_map(
-                lambda gn, h, go: (gn.astype(jnp.float32)
-                                   + (1.0 - cfg.b)
-                                   * (h.astype(jnp.float32)
-                                      - go.astype(jnp.float32))).astype(sdt),
-                grads_new, state.h_local, grads_old)
-        else:
-            h_new = grads_new
+        grads_old = per_node_grads(state.params, batch) \
+            if cfg.variant == "mvr" else None
 
-        # ---- message (line 9) + state updates (lines 10, 14) -------------
         a = cfg.a
-        if cfg.use_kernel and cfg.mode != "permk" and cfg.variant != "mvr":
-            # fused Pallas path: mask drawn here, update+compress in one
-            # HBM pass per leaf (see kernels/dasha_update.py)
-            from repro.kernels import ops as kops
-            p_ = cfg.compression
-
-            def leaf(k, hn, h, gl):
-                mask = draw_mask(k, hn.shape, p_).astype(jnp.float32)
-                return kops.dasha_update(hn, h, gl, mask, a, 1.0 / p_)
-
-            trips = jax.tree_util.tree_map(leaf, _leaf_keys(k_c, h_new),
-                                           h_new, state.h_local,
-                                           state.g_local)
-            is3 = lambda t: isinstance(t, tuple) and len(t) == 3
-            m = jax.tree_util.tree_map(lambda t: t[0], trips, is_leaf=is3)
-            g_local = jax.tree_util.tree_map(lambda t: t[2], trips,
-                                             is_leaf=is3)
+        if cfg.use_kernel:
+            # fused Pallas path (all modes x variants): h-update + drift +
+            # mask + g_i update in ONE HBM pass per leaf (DESIGN.md §5)
+            m, h_new, g_local = fused_tree_update(
+                k_c, grads_new, state.h_local, state.g_local,
+                mode=cfg.mode, a=a, p=cfg.compression, n=n,
+                variant=cfg.variant, b=cfg.b, grads_old=grads_old,
+                specs=node_full_specs)
             agg = jax.tree_util.tree_map(
                 lambda mm: jnp.mean(mm.astype(jnp.float32), 0), m)
             g = jax.tree_util.tree_map(jnp.add, state.g, agg)
         else:
+            # ---- h update (line 8) ---------------------------------------
+            if cfg.variant == "mvr":
+                h_new = jax.tree_util.tree_map(
+                    lambda gn, h, go: (gn.astype(jnp.float32)
+                                       + (1.0 - cfg.b)
+                                       * (h.astype(jnp.float32)
+                                          - go.astype(jnp.float32))
+                                       ).astype(sdt),
+                    grads_new, state.h_local, grads_old)
+            else:
+                h_new = grads_new
+
+            # ---- message (line 9) + state updates (lines 10, 14) ---------
             delta = jax.tree_util.tree_map(
                 lambda hn, h, gl: hn - h - a * (gl - h),
                 h_new, state.h_local, state.g_local)

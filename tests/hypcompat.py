@@ -1,0 +1,37 @@
+"""Optional-`hypothesis` shim for the property-based tests.
+
+A missing dev dependency must never zero the tier-1 suite: when hypothesis
+is unavailable, ``@given(...)`` turns the test into a zero-arg stub that
+skips at runtime, ``@settings(...)`` becomes a no-op, and ``st.*`` returns
+inert placeholders — so example-based tests in the same module still
+collect and run.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - depends on the environment
+    HAVE_HYPOTHESIS = False
+
+    class _Strategies:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _Strategies()
+
+    def settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+        return deco if not (args and callable(args[0])) else args[0]
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            # NOT functools.wraps: pytest must see the zero-arg signature,
+            # not the original (hypothesis-filled) parameters.
+            def stub():
+                pytest.skip("hypothesis not installed; property test skipped")
+            stub.__name__ = fn.__name__
+            stub.__doc__ = fn.__doc__
+            return stub
+        return deco

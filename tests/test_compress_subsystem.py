@@ -1,0 +1,265 @@
+"""The unified compression subsystem (repro.compress, DESIGN.md §3-§6).
+
+Four contract families:
+
+* the estimator invariant g^t == mean_i g_i^t holds for EVERY variant
+  (dasha | page | mvr | sync_mvr) x mode (independent | shared_coords |
+  permk) x execution backend (dense | sparse | fused);
+* sparse and dense backends produce BIT-IDENTICAL messages under the same
+  key (same plan, same multiply ordering) — the wire format is lossless;
+* wire accounting: a sparse RandK message moves <= 2K coords (vs d dense);
+* the spec layer's omega calculus matches Monte-Carlo reality.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.compress import (REGISTRY, RoundCompressor, SparseMessages,
+                            make_round_compressor, make_spec)
+from repro.core import dasha, theory
+from repro.core.oracles import FiniteSumProblem, StochasticProblem
+from repro.data.pipeline import synthetic_classification
+
+KEY = jax.random.PRNGKey(0)
+N_NODES, M, D = 4, 16, 24        # D % N_NODES == 0 for permk
+
+
+def _glm_problem(key=0):
+    feats, labels = synthetic_classification(jax.random.PRNGKey(key),
+                                             N_NODES, M, D)
+
+    def loss(x, a, y):
+        return (1.0 / (1.0 + jnp.exp(y * jnp.dot(a, x)))) ** 2
+
+    return FiniteSumProblem(loss=loss, features=feats, labels=labels)
+
+
+def _stoch_problem(key=0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(key))
+    A = jnp.diag(jnp.linspace(1.0, 2.0, D))
+    b = jax.random.normal(k2, (D,))
+
+    def loss(x, xi, i):
+        return 0.5 * x @ A @ x - b @ x + xi @ x
+
+    def sample(k, i, batch):
+        return 0.3 * jax.random.normal(k, (batch, D))
+
+    return StochasticProblem(loss=loss, sample=sample, n=N_NODES,
+                             true_grad=lambda x: A @ x - b)
+
+
+def _comp(mode: str, backend: str) -> RoundCompressor:
+    if mode == "permk":
+        return make_round_compressor("permk", D, N_NODES, mode=mode,
+                                     backend=backend)
+    return make_round_compressor("randk", D, N_NODES, k=6, mode=mode,
+                                 backend=backend)
+
+
+def _hyper(variant: str, omega: float) -> dasha.DashaHyper:
+    a = theory.momentum_a(omega)
+    if variant == "page":
+        return dasha.DashaHyper(gamma=0.05, a=a, variant="page", p=0.25,
+                                batch=2)
+    if variant == "mvr":
+        return dasha.DashaHyper(gamma=0.05, a=a, variant="mvr", b=0.3,
+                                batch=4)
+    if variant == "sync_mvr":
+        return dasha.DashaHyper(gamma=0.05, a=a, variant="sync_mvr", p=0.3,
+                                batch=4, batch_sync=16)
+    return dasha.DashaHyper(gamma=0.05, a=a)
+
+
+# ---------------------------------------------------------------------------
+# the estimator invariant, full cube
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["dense", "sparse", "fused"])
+@pytest.mark.parametrize("mode", ["independent", "shared_coords", "permk"])
+@pytest.mark.parametrize("variant", ["dasha", "page", "mvr", "sync_mvr"])
+def test_invariant_g_equals_mean_g_local(variant, mode, backend):
+    problem = _glm_problem() if variant in ("dasha", "page") \
+        else _stoch_problem()
+    comp = _comp(mode, backend)
+    hp = _hyper(variant, comp.omega)
+    st = dasha.init(jnp.zeros(D), N_NODES, jax.random.PRNGKey(1),
+                    problem=problem,
+                    init_mode="exact" if variant in ("dasha", "page")
+                    else "stoch")
+    for _ in range(3):
+        st = dasha.step(st, hp, problem, comp)
+        np.testing.assert_allclose(np.asarray(st.g),
+                                   np.asarray(jnp.mean(st.g_local, 0)),
+                                   rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# sparse wire format == dense reference, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,kw,mode", [
+    ("randk", dict(k=6), "independent"),
+    ("randk", dict(k=6), "shared_coords"),
+    ("permk", {}, "permk"),
+    ("qdither", dict(s=7), "independent"),
+    ("identity", {}, "independent"),
+])
+def test_sparse_messages_bit_identical_to_dense(name, kw, mode):
+    deltas = jax.random.normal(KEY, (N_NODES, D))
+    dense = make_round_compressor(name, D, N_NODES, mode=mode,
+                                  backend="dense", **kw)
+    sparse = make_round_compressor(name, D, N_NODES, mode=mode,
+                                   backend="sparse", **kw)
+    key = jax.random.PRNGKey(3)
+    md, ms = dense.compress(key, deltas), sparse.compress(key, deltas)
+    np.testing.assert_array_equal(np.asarray(md.dense()),
+                                  np.asarray(ms.dense()))
+
+
+def test_sparse_permk_handles_non_divisible_d():
+    d = 22                                 # 22 % 4 != 0: padded blocks
+    deltas = jax.random.normal(KEY, (N_NODES, d))
+    dense = make_round_compressor("permk", d, N_NODES, mode="permk",
+                                  backend="dense")
+    sparse = make_round_compressor("permk", d, N_NODES, mode="permk",
+                                   backend="sparse")
+    key = jax.random.PRNGKey(4)
+    md, ms = dense.compress(key, deltas), sparse.compress(key, deltas)
+    np.testing.assert_array_equal(np.asarray(md.dense()),
+                                  np.asarray(ms.dense()))
+    supp = np.asarray(md.dense() != 0)
+    assert (supp.sum(0) <= 1).all()        # still a partition
+
+
+def test_sparse_aggregate_matches_dense():
+    deltas = jax.random.normal(KEY, (N_NODES, D))
+    for mode in ("independent", "shared_coords"):
+        dense = _comp(mode, "dense")
+        sparse = _comp(mode, "sparse")
+        key = jax.random.PRNGKey(5)
+        np.testing.assert_allclose(
+            np.asarray(dense.compress(key, deltas).mean()),
+            np.asarray(sparse.compress(key, deltas).mean()),
+            rtol=1e-6, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# wire accounting (the reason the sparse backend exists)
+# ---------------------------------------------------------------------------
+
+def test_randk_sparse_wire_at_most_2k():
+    k = 6
+    rc = make_round_compressor("randk", D, N_NODES, k=k, backend="sparse")
+    msgs = rc.compress(KEY, jax.random.normal(KEY, (N_NODES, D)))
+    assert isinstance(msgs, SparseMessages)
+    assert msgs.values.shape == (N_NODES, k)
+    assert msgs.wire_coords <= 2 * k           # indices + values
+    assert rc.wire_per_node <= 2 * k
+    dense = make_round_compressor("randk", D, N_NODES, k=k, backend="dense")
+    assert dense.compress(KEY, jnp.ones((N_NODES, D))).wire_coords == D
+
+
+def test_shared_and_permk_wire_is_values_only():
+    # supports derivable from the shared round seed: no index transfer
+    rc = make_round_compressor("randk", D, N_NODES, k=6,
+                               mode="shared_coords", backend="sparse")
+    assert rc.wire_per_node == 6
+    rc = make_round_compressor("permk", D, N_NODES, mode="permk",
+                               backend="sparse")
+    assert rc.wire_per_node == D / N_NODES
+
+
+def test_payload_accounting_matches_legacy():
+    from repro.core.compressors import PermK, QDither, RandK
+    assert make_spec("randk", 40, k=5).expected_density == \
+        RandK(40, 5).expected_density == 5
+    assert make_spec("permk", 40, n=4).expected_density == \
+        PermK(40, 4).expected_density
+    assert make_spec("qdither", 64, s=15).expected_density == \
+        QDither(64, 15).expected_density
+
+
+# ---------------------------------------------------------------------------
+# omega calculus: spec layer vs Monte-Carlo
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,kw", [("randk", dict(k=4)),
+                                     ("qdither", dict(s=3)),
+                                     ("identity", {})])
+def test_spec_omega_bounds_empirical_variance(name, kw):
+    d = 32
+    rc = make_round_compressor(name, d, 64, backend="dense", **kw)
+    x = jax.random.normal(KEY, (d,))
+    deltas = jnp.broadcast_to(x[None], (64, d))
+    msgs = rc.compress(jax.random.PRNGKey(7), deltas)   # 64 iid draws
+    err = jnp.sum((msgs.dense() - deltas) ** 2, -1)
+    emp = float(jnp.mean(err) / jnp.sum(x * x))
+    assert emp <= rc.omega * 1.6 + 0.05, (emp, rc.omega)
+
+
+def test_partial_participation_keeps_permk_collection_size():
+    """Wrapping PermK in C_{p'} must keep omega = (n-1+1)/p' - 1, not fall
+    back to a size-1 collection."""
+    from repro.core.compressors import PartialParticipation, PermK
+    pp = PartialParticipation(PermK(40, 4), 0.5)
+    assert pp.omega == pytest.approx((4 - 1 + 1) / 0.5 - 1)
+    assert pp.expected_density == pytest.approx(0.5 * 40 / 4)
+
+
+def test_fused_messages_bill_dense_wire():
+    """The fused backend materializes dense messages, so its wire
+    accounting must say d — matching rc.wire_per_node — even though the
+    payload (Definition 1.3) stays K."""
+    rc = make_round_compressor("randk", D, N_NODES, k=6, backend="fused")
+    z = jnp.zeros((N_NODES, D))
+    msgs, _, _ = rc.estimator_update(KEY, z, z, z, 1.0)
+    assert msgs.wire_coords == D == rc.wire_per_node
+    assert msgs.payload_coords == 6
+
+
+def test_registry_is_single_source_of_truth():
+    assert set(REGISTRY) >= {"identity", "randk", "permk", "qdither",
+                             "bernoulli"}
+    spec = make_spec("randk", 32, k=8, p_participate=0.5)
+    # Theorem D.1 wrapper: (omega+1)/p' - 1
+    assert spec.omega == pytest.approx((32 / 8 - 1 + 1) / 0.5 - 1)
+    assert spec.expected_density == pytest.approx(0.5 * 8)
+
+
+def test_unknown_compressor_and_mode_raise():
+    with pytest.raises(ValueError):
+        make_spec("topk", 32)
+    with pytest.raises(ValueError):
+        make_round_compressor("qdither", 32, 4, mode="permk")
+
+
+def test_draw_mask_full_density_does_not_overflow():
+    from repro.compress import draw_mask
+    # p=1.0 must not hit the uint8 threshold path (256 overflows u8)
+    m = draw_mask(KEY, (64,), 1.0)
+    assert bool(jnp.all(m))
+    # exact-u8 path still exact at its boundaries
+    assert float(jnp.mean(draw_mask(KEY, (4096,), 0.5))) == pytest.approx(
+        0.5, abs=0.05)
+
+
+def test_permk_independent_mode_draws_private_partitions():
+    """mode='independent' with a permk spec: each node keeps a block of its
+    OWN partition (Assumption 1.2), so supports may overlap — unlike the
+    coupled permk mode whose supports tile [d] disjointly."""
+    rc = make_round_compressor("permk", D, N_NODES, mode="independent",
+                               backend="dense")
+    counts = []
+    for i in range(24):
+        m = rc(jax.random.PRNGKey(i), jnp.ones((N_NODES, D)))
+        supp = np.asarray(m != 0).astype(int)
+        assert (supp.sum(1) == D // N_NODES).all()   # each node: one block
+        counts.append(int(supp.sum(0).max()))
+    assert max(counts) > 1              # some coord kept by >1 node
+    # still unbiased: E[mean_i m_i] = x
+    est = jnp.mean(jnp.stack(
+        [rc(jax.random.PRNGKey(1000 + i),
+            jnp.ones((N_NODES, D))).mean(0) for i in range(512)]), 0)
+    np.testing.assert_allclose(np.asarray(est), 1.0, atol=0.35)

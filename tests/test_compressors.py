@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypcompat import given, settings, st
 
 from repro.core.compressors import (Identity, PartialParticipation, PermK,
                                     QDither, RandK, empirical_omega,
