@@ -13,6 +13,7 @@ from repro.compress import (NodeCompressor, RandK,  # noqa: F401
 from repro.core import dasha, marina, theory
 from repro.core.oracles import FiniteSumProblem, StochasticProblem
 from repro.data.pipeline import synthetic_classification
+from repro.methods import FlatSubstrate, Hyper, Method
 
 N_NODES = 5          # the paper uses 5 nodes throughout Appendix A
 
@@ -23,6 +24,14 @@ def randk_compressor(d: int, k: int, n: int = N_NODES, *,
     """The figure benches' standard compressor, on any execution backend."""
     return make_round_compressor("randk", d, n, k=k, mode=mode,
                                  backend=backend)
+
+
+def build_method(variant: str, problem, comp: RoundCompressor,
+                 hyper: Hyper) -> Method:
+    """One entrypoint for every figure: variant rule x compressor x the
+    flat (n, d) substrate (DESIGN.md §7)."""
+    sub = FlatSubstrate(problem=problem, n=comp.n, d=comp.spec.d)
+    return Method.build(variant, comp, sub, hyper)
 
 
 def glm_problem(d: int = 60, m: int = 64, key: int = 0) -> FiniteSumProblem:

@@ -8,9 +8,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import (N_NODES, emit, glm_problem, lipschitz_glm,
-                               randk_compressor, tune_gamma)
-from repro.core import dasha, marina, theory
+from benchmarks.common import (N_NODES, build_method, emit, glm_problem,
+                               lipschitz_glm, randk_compressor, tune_gamma)
+from repro.core import theory
+from repro.methods import Hyper
 
 D, K, ROUNDS = 60, 10, 800
 TARGET_FRAC = 0.02     # eps = 2% of ||grad f(x0)||^2
@@ -33,18 +34,20 @@ def run():
     gammas = [theory.gamma_dasha(L, L, comp.omega, N_NODES) * 2 ** i
               for i in range(0, 8)]
 
-    def run_dasha(gamma):
-        hp = dasha.DashaHyper(gamma=gamma, a=theory.momentum_a(comp.omega))
-        st = dasha.init(jnp.zeros(D), N_NODES, jax.random.PRNGKey(1),
-                        problem=problem)
-        st, trace, bits = dasha.run(st, hp, problem, comp, ROUNDS)
+    def run_variant(variant, gamma, **kw):
+        m = build_method(variant, problem, comp,
+                         Hyper(gamma=gamma, a=theory.momentum_a(comp.omega),
+                               variant=variant, **kw))
+        st = m.init(jnp.zeros(D), jax.random.PRNGKey(1))
+        st, trace, bits = m.run(st, ROUNDS)
         return {"final": float(trace[-1]), "trace": trace, "bits": bits}
 
+    def run_dasha(gamma):
+        return run_variant("dasha", gamma)
+
     def run_marina(gamma):
-        hp = marina.MarinaHyper(gamma=gamma, p=theory.marina_p(K, D))
-        st = marina.init(jnp.zeros(D), jax.random.PRNGKey(1), problem)
-        st, trace, bits = marina.run(st, hp, problem, comp, ROUNDS)
-        return {"final": float(trace[-1]), "trace": trace, "bits": bits}
+        # batch=0: exact full-gradient differences (plain MARINA)
+        return run_variant("marina", gamma, p=theory.marina_p(K, D), batch=0)
 
     best_d = tune_gamma(run_dasha, gammas)
     best_m = tune_gamma(run_marina, gammas)

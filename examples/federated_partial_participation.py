@@ -6,17 +6,25 @@ Each round a node joins with probability p'; absent nodes send nothing.
 Theorem D.1: C_{p'} in U((omega+1)/p' - 1) — so the same DASHA theory applies
 with the inflated omega, and crucially the server NEVER has to synchronize
 all clients (MARINA would periodically need every node online at once).
+
+The participation wrapper is a spec field (``p_participate``), so the same
+``Method.build`` call covers every participation level; ``Hyper.from_theory``
+absorbs the inflated omega automatically.
+
+``REPRO_EXAMPLE_ROUNDS`` shrinks the run for CI smoke jobs.
 """
+import os
+
 import jax
 import jax.numpy as jnp
 
-from repro.core import dasha, theory
-from repro.core.compressors import PartialParticipation, RandK
-from repro.core.node_compress import NodeCompressor
+from repro.compress import make_round_compressor
 from repro.core.oracles import FiniteSumProblem
 from repro.data.pipeline import synthetic_classification
+from repro.methods import FlatSubstrate, Hyper, Method
 
 N_NODES, M, D, K = 8, 32, 40, 8
+ROUNDS = int(os.environ.get("REPRO_EXAMPLE_ROUNDS", "800"))
 
 feats, labels = synthetic_classification(jax.random.PRNGKey(0), N_NODES, M, D)
 problem = FiniteSumProblem(
@@ -24,17 +32,17 @@ problem = FiniteSumProblem(
     features=feats, labels=labels)
 
 L = float(jnp.mean(jnp.sum(feats ** 2, -1)) * 2)
+substrate = FlatSubstrate(problem, N_NODES, D)
 
 for p_participate in (1.0, 0.5, 0.25):
-    base = RandK(D, K)
-    c = PartialParticipation(base, p_participate) if p_participate < 1 \
-        else base
-    comp = NodeCompressor(c, N_NODES)
-    gamma = 16 * theory.gamma_dasha(L, L, comp.omega, N_NODES)
-    hp = dasha.DashaHyper(gamma=gamma, a=theory.momentum_a(comp.omega))
-    st = dasha.init(jnp.zeros(D), N_NODES, jax.random.PRNGKey(1),
-                    problem=problem)
-    st, trace, bits = dasha.run(st, hp, problem, comp, 800)
+    comp = make_round_compressor("randk", D, N_NODES, k=K,
+                                 p_participate=p_participate)
+    hyper = Hyper.from_theory("dasha", comp.omega, N_NODES, L=L,
+                              gamma_mult=16)
+    method = Method.build("dasha", comp, substrate, hyper)
+    st = method.init(jnp.zeros(D), jax.random.PRNGKey(1))
+    st, trace, bits = method.run(st, ROUNDS)
     print(f"p'={p_participate:4.2f}  omega={comp.omega:6.1f}  "
-          f"gamma={gamma:.4f}  final ||grad||^2={float(trace[-1]):.3e}  "
-          f"avg coords/round/node={float(bits[-1] - bits[0]) / 800:.2f}")
+          f"gamma={hyper.gamma:.4f}  final ||grad||^2={float(trace[-1]):.3e}"
+          f"  avg coords/round/node="
+          f"{float(bits[-1] - bits[0]) / ROUNDS:.2f}")

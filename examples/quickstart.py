@@ -3,18 +3,24 @@
     PYTHONPATH=src python examples/quickstart.py
 
 Five nodes, RandK compression, theory hyperparameters — the gradient-setting
-experiment of the paper (Appendix A.1) at laptop scale.
+experiment of the paper (Appendix A.1) at laptop scale, through the
+one-method API (DESIGN.md §7): pick a variant rule, a compressor, a state
+substrate, and let ``Hyper.from_theory`` assemble the Section-6 constants.
+
+``REPRO_EXAMPLE_ROUNDS`` shrinks the run for CI smoke jobs.
 """
+import os
+
 import jax
 import jax.numpy as jnp
 
-from repro.core import dasha, theory
-from repro.core.compressors import RandK
-from repro.core.node_compress import NodeCompressor
+from repro.compress import make_round_compressor
 from repro.core.oracles import FiniteSumProblem
 from repro.data.pipeline import synthetic_classification
+from repro.methods import FlatSubstrate, Hyper, Method
 
 N_NODES, M, D, K = 5, 64, 60, 10
+ROUNDS = int(os.environ.get("REPRO_EXAMPLE_ROUNDS", "500"))
 
 # 1. a problem: f_i held by node i (nonconvex GLM, paper A.1)
 feats, labels = synthetic_classification(jax.random.PRNGKey(0), N_NODES, M, D)
@@ -22,20 +28,22 @@ problem = FiniteSumProblem(
     loss=lambda x, a, y: (1 - 1 / (1 + jnp.exp(y * jnp.dot(a, x)))) ** 2,
     features=feats, labels=labels)
 
-# 2. a compressor per node: RandK in U(d/K - 1)
-comp = NodeCompressor(RandK(D, K), N_NODES)
+# 2. a compressor per node: RandK in U(d/K - 1), from the spec registry
+comp = make_round_compressor("randk", D, N_NODES, k=K)
 
 # 3. theory hyperparameters (Theorem 6.1), stepsize fine-tuned x16
 L = float(jnp.mean(jnp.sum(feats ** 2, -1)) * 2)
-hp = dasha.DashaHyper(gamma=16 * theory.gamma_dasha(L, L, comp.omega, N_NODES),
-                      a=theory.momentum_a(comp.omega))
+hyper = Hyper.from_theory("dasha", comp.omega, N_NODES, L=L, gamma_mult=16)
 
-# 4. run: nodes only ever send K floats per round; no synchronization
-state = dasha.init(jnp.zeros(D), N_NODES, jax.random.PRNGKey(1),
-                   problem=problem)
-state, trace, bits = dasha.run(state, hp, problem, comp, num_rounds=500)
+# 4. one method = variant rule x compressor x substrate
+method = Method.build("dasha", comp, FlatSubstrate(problem, N_NODES, D),
+                      hyper)
 
-for t in range(0, 500, 100):
+# 5. run: nodes only ever send K floats per round; no synchronization
+state = method.init(jnp.zeros(D), jax.random.PRNGKey(1))
+state, trace, bits = method.run(state, ROUNDS)
+
+for t in range(0, ROUNDS, max(ROUNDS // 5, 1)):
     print(f"round {t:4d}  ||grad f||^2 = {float(trace[t]):.3e}  "
           f"coords sent/node = {float(bits[t]):.0f}")
 print(f"final ||grad f||^2 = {float(trace[-1]):.3e} "

@@ -11,6 +11,7 @@ reading like the paper.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional
 
 import jax
@@ -171,7 +172,14 @@ class PartialParticipation(Compressor):
 def make_compressor(name: str, d: int, *, k: Optional[int] = None,
                     n: int = 1, node_idx: int = 0, s: int = 15,
                     p_participate: float = 1.0) -> Compressor:
-    """Factory used by configs / CLI (registry-validated)."""
+    """Factory used by configs / CLI (registry-validated).
+
+    .. deprecated:: use :func:`repro.compress.make_round_compressor`, which
+       returns the spec/plan/backends front door directly."""
+    warnings.warn(
+        "make_compressor is deprecated; use "
+        "repro.compress.make_round_compressor instead.",
+        DeprecationWarning, stacklevel=2)
     name = name.lower()
     make_spec(name, d, k=k, n=n, s=s)      # validate against the registry
     if name == "identity":
@@ -213,6 +221,12 @@ class NodeCompressor:
     n: int
     mode: str = "independent"  # independent | shared_coords | permk
     backend: str = "dense"     # dense | sparse | fused
+
+    def __post_init__(self):
+        warnings.warn(
+            "NodeCompressor is a deprecated legacy view; construct "
+            "repro.compress.RoundCompressor (make_round_compressor) "
+            "directly.", DeprecationWarning, stacklevel=2)
 
     @property
     def rc(self) -> RoundCompressor:

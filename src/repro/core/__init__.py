@@ -1,7 +1,16 @@
-"""Core DASHA library — the paper's contribution as composable JAX modules."""
-from repro.core import compressors, dasha, marina, node_compress, oracles, theory  # noqa: F401
+"""Core DASHA library — the paper's contribution as composable JAX modules.
+
+The algorithm layer now lives in :mod:`repro.methods` (variant rules x
+state substrates, DESIGN.md §7); :mod:`repro.core.dasha` and
+:mod:`repro.core.marina` are paper-named shims over it.  Legacy compressor
+names re-export from :mod:`repro.compress.legacy` (the seed-era
+``repro.core.compressors`` / ``repro.core.node_compress`` module paths
+still import, with a DeprecationWarning).
+"""
+from repro.core import dasha, marina, oracles, theory  # noqa: F401
 from repro.compress import RoundCompressor, make_round_compressor  # noqa: F401
-from repro.core.compressors import (Identity, PartialParticipation, PermK,  # noqa: F401
-                                    QDither, RandK, make_compressor)
+from repro.compress.legacy import (Identity, NodeCompressor,  # noqa: F401
+                                   PartialParticipation, PermK, QDither,
+                                   RandK, make_compressor)
 from repro.core.dasha import DashaHyper, DashaState, init, run, step  # noqa: F401
-from repro.core.node_compress import NodeCompressor  # noqa: F401
+from repro.methods import Hyper, Method, MethodState  # noqa: F401

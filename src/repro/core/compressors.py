@@ -1,11 +1,19 @@
-"""Back-compat shim: the compressors now live in :mod:`repro.compress`.
+"""DEPRECATED seed-era shim: the compressors live in :mod:`repro.compress`.
 
 Kept so ``from repro.core.compressors import RandK`` (the seed's import
-path, used throughout tests/benchmarks/examples) keeps working; all omega
-calculus, masking randomness and execution now route through the layered
-subsystem (spec / plan / backends — see DESIGN.md §3-§6).
+path) keeps working; all omega calculus, masking randomness and execution
+route through the layered subsystem (spec / plan / backends — DESIGN.md
+§3-§6).  Import from :mod:`repro.compress` (or construct a
+:class:`repro.compress.RoundCompressor`) instead.
 """
-from repro.compress.legacy import (Compressor, Identity,  # noqa: F401
+import warnings
+
+warnings.warn(
+    "repro.core.compressors is a deprecated seed-era shim; import from "
+    "repro.compress instead (see DESIGN.md §2).",
+    DeprecationWarning, stacklevel=2)
+
+from repro.compress.legacy import (Compressor, Identity,  # noqa: F401,E402
                                    PartialParticipation, PermK, QDither,
                                    RandK, empirical_omega, make_compressor)
-from repro.compress.spec import CompressorSpec, make_spec  # noqa: F401
+from repro.compress.spec import CompressorSpec, make_spec  # noqa: F401,E402

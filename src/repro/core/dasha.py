@@ -1,179 +1,80 @@
-"""DASHA family (Algorithm 1) and DASHA-SYNC-MVR (Algorithm 2), verbatim.
+"""DASHA family (Algorithm 1) and DASHA-SYNC-MVR (Algorithm 2) — thin shim.
 
-Functional JAX: ``init(...) -> DashaState``; ``step(state, ...) -> DashaState``
-is jit-able and carries the full per-node state stacked on axis 0 (vmap on a
-single host; see optim/distributed.py for the sharded model-training
-integration).
-
-The four variants differ ONLY in the h-update (Alg. 1 line 8), exactly as in
-the paper.  The message/aggregation lines 9-14 are shared and run through
-:meth:`repro.compress.RoundCompressor.estimator_update`, which makes the
-loop generic over execution backends (DESIGN.md §5): ``dense`` reference,
-``sparse`` (messages travel as (indices, values) pairs and the aggregate
-touches K << d coords), and ``fused`` (one Pallas HBM pass):
+The paper-faithful flat research loop is now ONE instantiation of the
+methods layer (DESIGN.md §7): the variant rules (the h-updates of Alg. 1
+line 8) live in :mod:`repro.methods.rules`, the (n, d) state ops in
+:class:`repro.methods.substrates.FlatSubstrate`, and the shared skeleton —
+server step, compressed message, g_i update, aggregation, sync coin — in
+:meth:`repro.methods.engine.Method.build`.  These entry points keep the
+seed's signatures and are BIT-IDENTICAL to the seed loop (same RNG splits,
+same arithmetic grouping):
 
     m_i     = C_i(h_i^{t+1} - h_i^t - a (g_i^t - h_i^t))
     g_i    <- g_i + m_i
     g      <- g + (1/n) sum_i m_i
 
-Invariant (tested): g^t == mean_i g_i^t at every t, for every backend.
+Invariant (tested): g^t == mean_i g_i^t at every t, for every variant x
+compression mode x execution backend.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, NamedTuple, Optional
+from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
-from repro.compress import as_round_compressor
-from repro.core.node_compress import NodeCompressor
-from repro.core.oracles import FiniteSumProblem, StochasticProblem
+from repro.methods import FlatSubstrate, Hyper, Method, MethodState
 
-
-class DashaState(NamedTuple):
-    x: jax.Array          # (d,)  server iterate
-    g: jax.Array          # (d,)  server gradient estimator
-    g_local: jax.Array    # (n,d) per-node g_i
-    h_local: jax.Array    # (n,d) per-node h_i
-    key: jax.Array
-    t: jax.Array          # step counter
-    bits_sent: jax.Array  # cumulative scalar coords sent per node (accounting)
+#: unified state/hyper (aliases keep the seed's names importable)
+DashaState = MethodState
+DashaHyper = Hyper
 
 
-@dataclasses.dataclass(frozen=True)
-class DashaHyper:
-    gamma: float                    # stepsize
-    a: float                        # compressor momentum, 1/(2 omega + 1)
-    variant: str = "dasha"          # dasha | page | mvr | sync_mvr
-    b: float = 1.0                  # MVR momentum
-    p: float = 1.0                  # PAGE / SYNC-MVR coin probability
-    batch: int = 1                  # B
-    batch_sync: int = 1             # B' (SYNC-MVR big batch)
+def _substrate(problem, n: int, d: int) -> FlatSubstrate:
+    return FlatSubstrate(problem=problem, n=n, d=d)
 
 
-# ---------------------------------------------------------------------------
-# initialisation (Cor. 6.2 / 6.5: g_i^0 = h_i^0 = grad f_i(x^0); Cor. 6.8 /
-# 6.10: minibatch of size B_init; zeros also allowed under PL)
-# ---------------------------------------------------------------------------
+def _method(hp: DashaHyper, problem, comp, n: int, d: int) -> Method:
+    return Method.build(hp.variant, comp, _substrate(problem, n, d), hp)
+
 
 def init(x0: jax.Array, n: int, key: jax.Array, *,
-         problem: Optional[Any] = None, hyper: Optional[DashaHyper] = None,
+         problem=None, hyper: Optional[DashaHyper] = None,
          init_mode: str = "exact", batch_init: int = 1) -> DashaState:
-    d = x0.shape[0]
-    if init_mode == "zeros" or problem is None:
-        h0 = jnp.zeros((n, d), x0.dtype)
-        bits0 = 0.0
-    elif init_mode == "exact":
-        h0 = problem.full_grad(x0)
-        bits0 = float(d)
-    elif init_mode == "stoch":
-        key, sub = jax.random.split(key)
-        h0 = problem.stoch_grad(sub, x0, batch_init)
-        bits0 = float(d)
-    else:
-        raise ValueError(init_mode)
-    return DashaState(x=x0, g=jnp.mean(h0, 0), g_local=h0, h_local=h0,
-                      key=key, t=jnp.zeros((), jnp.int32),
-                      bits_sent=jnp.asarray(bits0, jnp.float32))
+    """Cor. 6.2 / 6.5: g_i^0 = h_i^0 = grad f_i(x^0); Cor. 6.8 / 6.10:
+    minibatch of size B_init; zeros also allowed under PL."""
+    hp = hyper or DashaHyper(gamma=0.0, a=1.0)
+    sub = _substrate(problem, n, x0.shape[0])
+    # the compressor plays no role at init; identity keeps build() total
+    m = Method.build(hp.variant, _identity(x0.shape[0], n), sub, hp)
+    return m.init(x0, key, init_mode=init_mode, batch_init=batch_init)
 
 
-# ---------------------------------------------------------------------------
-# h-updates (Alg. 1 line 8)
-# ---------------------------------------------------------------------------
+def _identity(d: int, n: int):
+    from repro.compress import make_round_compressor
+    return make_round_compressor("identity", d, n)
 
-def _h_dasha(problem, key, hp, x_new, x_old, h):
-    return problem.full_grad(x_new)
-
-
-def _h_page(problem: FiniteSumProblem, key, hp: DashaHyper, x_new, x_old, h):
-    k_coin, k_batch = jax.random.split(key)
-    coin = jax.random.bernoulli(k_coin, hp.p)
-    full = problem.full_grad(x_new)
-    inc = h + problem.minibatch_diff(k_batch, x_new, x_old, hp.batch)
-    return jnp.where(coin, full, inc)
-
-
-def _h_mvr(problem: StochasticProblem, key, hp: DashaHyper, x_new, x_old, h):
-    g_new, g_old = problem.stoch_grad_pair(key, x_new, x_old, hp.batch)
-    return g_new + (1.0 - hp.b) * (h - g_old)
-
-
-_H_UPDATES = {"dasha": _h_dasha, "page": _h_page, "mvr": _h_mvr}
-
-
-# ---------------------------------------------------------------------------
-# the step
-# ---------------------------------------------------------------------------
 
 def step(state: DashaState, hp: DashaHyper, problem, comp) -> DashaState:
-    """One communication round of Algorithm 1 (or Algorithm 2 for sync_mvr).
+    """One communication round of Algorithm 1 (or Algorithm 2 for
+    sync_mvr).
 
-    ``comp``: a :class:`repro.compress.RoundCompressor` (or a legacy
-    :class:`NodeCompressor`); its ``backend`` field selects dense / sparse /
-    fused execution of lines 9-10 without changing the math."""
-    rc = as_round_compressor(comp)
-    key, k_h, k_c, k_coin = jax.random.split(state.key, 4)
-    x_new = state.x - hp.gamma * state.g          # line 4 (server) + broadcast
-
-    if hp.variant == "sync_mvr":
-        return _step_sync_mvr(state, hp, problem, rc, x_new, key, k_h, k_c,
-                              k_coin)
-
-    h_new = _H_UPDATES[hp.variant](problem, k_h, hp, x_new, state.x,
-                                   state.h_local)                     # line 8
-    # lines 9-10: m_i = C_i(drift); g_i <- g_i + m_i (backend-dispatched)
-    msgs, h_new, g_local = rc.estimator_update(k_c, h_new, state.h_local,
-                                               state.g_local, hp.a)
-    g = state.g + msgs.mean()                                         # line 14
-    return DashaState(x=x_new, g=g, g_local=g_local, h_local=h_new, key=key,
-                      t=state.t + 1,
-                      bits_sent=state.bits_sent + rc.payload_per_node)
+    ``comp``: anything :func:`repro.compress.as_round_compressor` accepts —
+    a :class:`repro.compress.RoundCompressor` or a legacy
+    :class:`repro.compress.legacy.NodeCompressor` view; its ``backend``
+    field selects dense / sparse / fused execution of lines 9-10 without
+    changing the math."""
+    n, d = state.g_local.shape
+    return _method(hp, problem, comp, n, d).step(state)
 
 
-def _step_sync_mvr(state, hp, problem, rc, x_new, key, k_h, k_c, k_coin):
-    """Algorithm 2.  With prob p all nodes send a FRESH uncompressed megabatch
-    gradient (the synchronization step); otherwise a SARAH-style compressed
-    drift message."""
-    coin = jax.random.bernoulli(k_coin, hp.p)
-
-    # -- sync branch (lines 9-11): h_i = fresh B' batch; m_i = g_i = h_i ----
-    h_sync = problem.stoch_grad(k_h, x_new, hp.batch_sync)
-
-    # -- compressed branch (lines 13-15): b=0 MVR (SARAH) + usual message ---
-    g_pair_new, g_pair_old = problem.stoch_grad_pair(k_h, x_new, state.x,
-                                                     hp.batch)
-    h_inc = g_pair_new + (state.h_local - g_pair_old)
-    msgs, h_inc, g_comp = rc.estimator_update(k_c, h_inc, state.h_local,
-                                              state.g_local, hp.a)
-
-    h_new = jnp.where(coin, h_sync, h_inc)
-    g_local = jnp.where(coin, h_sync, g_comp)
-    g = jnp.where(coin, jnp.mean(h_sync, 0), state.g + msgs.mean())
-    d = state.x.shape[0]
-    payload = jnp.where(coin, float(d), rc.payload_per_node)
-    return DashaState(x=x_new, g=g, g_local=g_local, h_local=h_new, key=key,
-                      t=state.t + 1, bits_sent=state.bits_sent + payload)
-
-
-def run(state: DashaState, hp: DashaHyper, problem, comp: NodeCompressor,
+def run(state: DashaState, hp: DashaHyper, problem, comp,
         num_rounds: int, *, metric_every: int = 1, metric_fn=None):
-    """Drive T rounds under jax.lax.scan; returns final state + metric trace.
+    """Drive T rounds under jax.lax.scan; returns (final state, metric
+    trace, cumulative payload trace).
 
-    ``metric_fn(state) -> scalar`` (default: ||grad f(x)||^2 if the problem
-    exposes an exact gradient).
-    """
-    if metric_fn is None:
-        if hasattr(problem, "grad_f"):
-            metric_fn = lambda s: jnp.sum(problem.grad_f(s.x) ** 2)
-        elif getattr(problem, "true_grad", None) is not None:
-            metric_fn = lambda s: jnp.sum(problem.true_grad(s.x) ** 2)
-        else:
-            metric_fn = lambda s: jnp.float32(0)
-
-    def body(carry, _):
-        new = step(carry, hp, problem, comp)
-        return new, (metric_fn(new), new.bits_sent)
-
-    final, (trace, bits) = jax.lax.scan(body, state, None, length=num_rounds)
-    return final, trace, bits
+    ``comp`` is any ``RoundCompressor``-coercible compressor (see
+    :func:`step`); ``metric_fn(state) -> scalar`` defaults to
+    ||grad f(x)||^2 when the problem exposes an exact gradient."""
+    n, d = state.g_local.shape
+    return _method(hp, problem, comp, n, d).run(
+        state, num_rounds, metric_every=metric_every, metric_fn=metric_fn)

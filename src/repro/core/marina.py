@@ -1,33 +1,34 @@
-"""MARINA / VR-MARINA / VR-MARINA (online) baselines (Gorbunov et al., 2021).
+"""MARINA / VR-MARINA / VR-MARINA (online) baselines — thin shim.
 
-Implemented because every paper figure compares against them.  MARINA's server
-keeps a single estimator g; with probability p ALL nodes upload an
-uncompressed gradient simultaneously (the synchronization DASHA removes),
-otherwise compressed gradient differences:
+MARINA (Gorbunov et al., 2021) is now the fifth rule in the methods
+registry (DESIGN.md §7): track h_i^t = G_i(x^t) by telescoping the oracle
+difference, force the compressor momentum a = 0 so the drift is exactly
+C_i(G_i(x^{t+1}) - G_i(x^t)), and flip the probability-p coin for the
+uncompressed synchronization round (the very synchronization DASHA
+removes):
 
     g^{t+1} = (1/n) sum_i [ c=1 ?  G_i(x^{t+1})
                                 :  g^t + C_i(G_i(x^{t+1}) - G_i(x^t)) ]
 
-where G_i is the oracle (full grad / minibatch-diff / online minibatch-diff).
+The three seed variants map onto the one rule through the oracle:
+``marina`` uses exact full-gradient differences (batch=0), ``vr`` a
+shared-sample minibatch difference, and ``vr_online`` the stochastic
+same-sample pair — dispatch that now lives in the substrate's oracle ops,
+not here.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Optional
 
 import jax
-import jax.numpy as jnp
 
-from repro.compress import as_round_compressor
+from repro.methods import FlatSubstrate, Hyper, Method, MethodState
 
+#: unified method state (x, g, g_local, h_local, ..., bits_sent); h_local
+#: carries G_i(x^t), which replaces the seed's explicit x_prev field
+MarinaState = MethodState
 
-class MarinaState(NamedTuple):
-    x: jax.Array
-    x_prev: jax.Array
-    g: jax.Array
-    key: jax.Array
-    t: jax.Array
-    bits_sent: jax.Array
+_VARIANTS = ("marina", "vr", "vr_online")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,56 +40,50 @@ class MarinaHyper:
     batch_sync: int = 1          # megabatch B' for vr_online sync step
 
 
+def _hyper(hp: MarinaHyper) -> Hyper:
+    if hp.variant not in _VARIANTS:
+        raise ValueError(hp.variant)
+    # batch=0 asks the oracle for the exact full-gradient difference
+    batch = 0 if hp.variant == "marina" else hp.batch
+    return Hyper(gamma=hp.gamma, a=0.0, variant="marina", p=hp.p,
+                 batch=batch, batch_sync=hp.batch_sync)
+
+
+def _check_oracle(problem, variant: str) -> None:
+    """The seed dispatched on hp.variant and failed loudly on a mismatched
+    oracle; keep that contract now that dispatch lives in the oracle ops."""
+    if variant == "vr_online" and not hasattr(problem, "stoch_grad"):
+        raise ValueError("variant='vr_online' needs a StochasticProblem-"
+                         "style oracle (stoch_grad / stoch_grad_pair)")
+    if variant in ("marina", "vr") and not hasattr(problem, "full_grad"):
+        raise ValueError(f"variant={variant!r} needs a FiniteSumProblem-"
+                         "style oracle (full_grad / minibatch_diff)")
+
+
+def _method(hp: MarinaHyper, problem, comp, n: int, d: int) -> Method:
+    _check_oracle(problem, hp.variant)
+    sub = FlatSubstrate(problem=problem, n=n, d=d)
+    return Method.build("marina", comp, sub, _hyper(hp))
+
+
 def init(x0: jax.Array, key: jax.Array, problem) -> MarinaState:
-    g0 = jnp.mean(problem.full_grad(x0), 0) if hasattr(problem, "full_grad") \
-        else jnp.mean(problem.stoch_grad(key, x0, 64), 0)
-    return MarinaState(x=x0, x_prev=x0, g=g0, key=key,
-                       t=jnp.zeros((), jnp.int32),
-                       bits_sent=jnp.asarray(float(x0.shape[0]), jnp.float32))
+    from repro.compress import make_round_compressor
+    n = problem.n
+    d = x0.shape[0]
+    sub = FlatSubstrate(problem=problem, n=n, d=d)
+    m = Method.build("marina", make_round_compressor("identity", d, n), sub,
+                     Hyper(gamma=0.0, a=0.0, variant="marina"))
+    mode = "exact" if hasattr(problem, "full_grad") else "stoch"
+    return m.init(x0, key, init_mode=mode, batch_init=64)
 
 
 def step(state: MarinaState, hp: MarinaHyper, problem, comp) -> MarinaState:
-    rc = as_round_compressor(comp)
-    key, k_coin, k_b, k_c = jax.random.split(state.key, 4)
-    x_new = state.x - hp.gamma * state.g
-    coin = jax.random.bernoulli(k_coin, hp.p)
-    d = state.x.shape[0]
-
-    if hp.variant == "marina":
-        sync = problem.full_grad(x_new)                      # (n, d)
-        diff = problem.full_grad(x_new) - problem.full_grad(state.x)
-    elif hp.variant == "vr":
-        sync = problem.full_grad(x_new)
-        diff = problem.minibatch_diff(k_b, x_new, state.x, hp.batch)
-    elif hp.variant == "vr_online":
-        sync = problem.stoch_grad(k_b, x_new, hp.batch_sync)
-        gn, go = problem.stoch_grad_pair(k_b, x_new, state.x, hp.batch)
-        diff = gn - go
-    else:
-        raise ValueError(hp.variant)
-
-    msgs = rc.compress(k_c, diff)          # dense / sparse wire format
-    g_comp = state.g + msgs.mean()
-    g_sync = jnp.mean(sync, 0)
-    g = jnp.where(coin, g_sync, g_comp)
-    payload = jnp.where(coin, float(d), rc.payload_per_node)
-    return MarinaState(x=x_new, x_prev=state.x, g=g, key=key, t=state.t + 1,
-                       bits_sent=state.bits_sent + payload)
+    n, d = state.g_local.shape
+    return _method(hp, problem, comp, n, d).step(state)
 
 
 def run(state: MarinaState, hp: MarinaHyper, problem, comp,
         num_rounds: int, metric_fn=None):
-    if metric_fn is None:
-        if hasattr(problem, "grad_f"):
-            metric_fn = lambda s: jnp.sum(problem.grad_f(s.x) ** 2)
-        elif getattr(problem, "true_grad", None) is not None:
-            metric_fn = lambda s: jnp.sum(problem.true_grad(s.x) ** 2)
-        else:
-            metric_fn = lambda s: jnp.float32(0)
-
-    def body(carry, _):
-        new = step(carry, hp, problem, comp)
-        return new, (metric_fn(new), new.bits_sent)
-
-    final, (trace, bits) = jax.lax.scan(body, state, None, length=num_rounds)
-    return final, trace, bits
+    n, d = state.g_local.shape
+    return _method(hp, problem, comp, n, d).run(state, num_rounds,
+                                                metric_fn=metric_fn)

@@ -1,8 +1,15 @@
-"""Back-compat shim: NodeCompressor now lives in :mod:`repro.compress`.
+"""DEPRECATED seed-era shim: NodeCompressor lives in :mod:`repro.compress`.
 
 The (n, d) execution modes (independent | shared_coords | permk) are
 documented in DESIGN.md §3; the backend column (dense | sparse | fused) in
-§5.  New code should construct :class:`repro.compress.RoundCompressor`
-directly (or via :func:`repro.compress.make_round_compressor`).
+§5.  Construct :class:`repro.compress.RoundCompressor` directly (or via
+:func:`repro.compress.make_round_compressor`) instead.
 """
-from repro.compress.legacy import NodeCompressor  # noqa: F401
+import warnings
+
+warnings.warn(
+    "repro.core.node_compress is a deprecated seed-era shim; use "
+    "repro.compress.RoundCompressor / make_round_compressor instead.",
+    DeprecationWarning, stacklevel=2)
+
+from repro.compress.legacy import NodeCompressor  # noqa: F401,E402

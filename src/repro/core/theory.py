@@ -73,6 +73,12 @@ def marina_p(zeta: float, d: int) -> float:
     return zeta / d
 
 
+def gamma_marina(L: float, omega: float, n: int, p: float) -> float:
+    """MARINA stepsize (Gorbunov et al. 2021, Theorem 2.1):
+    gamma <= (L (1 + sqrt((1-p) omega / (p n))))^{-1}."""
+    return 1.0 / (L * (1.0 + math.sqrt((1.0 - p) * omega / (p * n))))
+
+
 # ---------------------------------------------------------------------------
 # Table 1 (general nonconvex) communication-round counts, up to constants.
 # These power benchmarks/table1_complexity.py.

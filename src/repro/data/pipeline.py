@@ -2,7 +2,7 @@
 
 The container is offline, so LIBSVM/CIFAR10 from the paper's experiments are
 replaced by synthetic generators with the same statistical roles (documented
-in DESIGN.md §8):
+in DESIGN.md §9):
 
 * ``synthetic_classification`` — (features, labels) split across n nodes, for
   the nonconvex GLM experiments (paper A.1/A.2/A.3).

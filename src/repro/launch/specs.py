@@ -132,14 +132,15 @@ def train_spec(cfg: ArchConfig, mesh: Mesh, *, seq: int, global_batch: int,
     from repro.optim.distributed import DashaTrainState
     state_specs = DashaTrainState(
         params=p_specs_f,
-        prev_params=p_specs_f if dasha.variant == "mvr" else (),
+        prev_params=(),
         g=p_specs_f,
         h_local=node_specs(p_specs),
         g_local=node_specs(p_specs),
         opt_state=opt_specs,
         key=P(), step=P())
     batch_specs_ = _batch_sharding(cfg, mesh, global_batch, node_axis=True)
-    out_specs = (state_specs, {"g_norm_sq": P(), "payload_frac": P()})
+    out_specs = (state_specs, {"g_norm_sq": P(), "payload_frac": P(),
+                               "payload_coords": P()})
     return LoweredSpec(fn=step, args=(state_s, batch_s),
                        in_shardings=(state_specs, batch_specs_),
                        out_shardings=out_specs,

@@ -38,8 +38,11 @@ def main(argv=None) -> int:
     ap.add_argument("--compression", type=float, default=1 / 32)
     ap.add_argument("--mode", default="independent",
                     choices=["independent", "permk"])
-    ap.add_argument("--variant", default="dasha", choices=["dasha", "mvr"])
+    ap.add_argument("--variant", default="dasha",
+                    choices=["dasha", "mvr", "page", "sync_mvr"])
     ap.add_argument("--mvr-b", type=float, default=0.1)
+    ap.add_argument("--coin-p", type=float, default=0.25,
+                    help="PAGE / SYNC-MVR sync-round probability")
     ap.add_argument("--server-opt", default="adam", choices=["sgd", "adam"])
     ap.add_argument("--use-kernel", action="store_true",
                     help="fused Pallas dasha_update path")
@@ -59,7 +62,8 @@ def main(argv=None) -> int:
 
     dasha = DashaTrainConfig(
         gamma=args.gamma, compression=args.compression, mode=args.mode,
-        variant=args.variant, b=args.mvr_b, n_nodes=args.nodes,
+        variant=args.variant, b=args.mvr_b, p=args.coin_p,
+        n_nodes=args.nodes,
         server_opt=args.server_opt, use_kernel=args.use_kernel)
 
     def node_loss(p, b):

@@ -1,0 +1,20 @@
+"""One-method API (DESIGN.md §7): variant rules x state substrates.
+
+* :mod:`repro.methods.rules`      — VariantRule registry: dasha | page |
+  mvr | sync_mvr | marina, each ONE h-update against an abstract substrate;
+* :mod:`repro.methods.substrates` — FlatSubstrate ((n, d) research loop)
+  and TreeSubstrate (node-axis pytrees, sharding-aware), exposing the
+  handful of ops the skeleton needs;
+* :mod:`repro.methods.engine`     — Method.build(variant, compressor,
+  substrate, hyper) -> (init, step, run), Hyper.from_theory;
+* :mod:`repro.methods.accounting` — unified payload accounting.
+"""
+from repro.methods.accounting import (expected_payload_frac,  # noqa: F401
+                                      round_payload)
+from repro.methods.engine import Hyper, Method, MethodState  # noqa: F401
+from repro.methods.rules import (VARIANTS, MvrFusion,  # noqa: F401
+                                 VariantRule, get_rule, register_variant)
+from repro.methods.substrates import (BatchLossOracle,  # noqa: F401
+                                      FlatSubstrate, LeafProblemOracle,
+                                      LeafSpecCompressor, TreeCompression,
+                                      TreeSubstrate)

@@ -1,0 +1,40 @@
+"""Unified payload accounting for the methods layer (DESIGN.md §6-§7).
+
+The flat research loop used to keep a scalar ``bits_sent`` and the sharded
+trainer emitted an unrelated static ``payload_frac`` metric; both now route
+through these two helpers so a variant's *sync rounds* (MARINA / DASHA-
+SYNC-MVR send a dense, uncompressed message with probability p) are billed
+identically everywhere:
+
+* :func:`round_payload` — the traced per-round coords/node, coin-aware;
+* :func:`expected_payload_frac` — the static expectation, used for metrics
+  and for sizing runs (payload + p * (dense - payload), Definition 1.3).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def round_payload(payload_compressed, dense_coords: float,
+                  coin: Optional[jax.Array] = None):
+    """Coords per node actually sent this round.
+
+    ``coin`` is the variant's synchronization coin (None for variants with
+    no sync branch): on a sync round every node uploads the full dense
+    vector, otherwise the compressor's payload."""
+    if coin is None:
+        return payload_compressed
+    return jnp.where(coin, dense_coords, payload_compressed)
+
+
+def expected_payload_frac(rule, hyper, payload_per_node: float,
+                          dense_coords: float = 1.0) -> float:
+    """E[coords sent] / d for one round of ``rule`` under ``hyper``.
+
+    With ``dense_coords=1.0`` the ``payload_per_node`` argument is read as a
+    fraction directly (the trainer's static ``compression`` knob)."""
+    extra = rule.extra_payload(hyper, payload_per_node, dense_coords)
+    return float((payload_per_node + extra) / dense_coords)

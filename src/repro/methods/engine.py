@@ -1,0 +1,184 @@
+"""The one method skeleton: ``Method.build(variant, compressor, substrate,
+hyper) -> (init, step, run)``.
+
+Algorithm 1 (and Algorithm 2's sync round, and MARINA's) written ONCE:
+
+    x^{t+1}  = server_update(x^t, g^t)                      # line 4
+    h^{t+1}  = rule.h_update(...)                           # line 8  (varies)
+    m, g_i   = substrate.estimator_update(...)              # lines 9-10
+    g^{t+1}  = g^t + (1/n) sum_i m_i                        # line 14
+    [coin]   with prob p: dense sync round (where-selected) # Alg. 2 / MARINA
+
+Everything variant-specific lives in :mod:`repro.methods.rules`; everything
+representation-specific lives in :mod:`repro.methods.substrates`.  The RNG
+contract reproduces the seed's flat loop exactly
+(``key, k_h, k_c, k_coin = split(key, 4)``), so the legacy
+:mod:`repro.core.dasha` entry points are bit-identical shims over this
+engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.methods import accounting
+from repro.methods.rules import VariantRule, get_rule
+
+
+class MethodState(NamedTuple):
+    """Unified method state; the substrate decides what each field holds
+    ((n, d) arrays + a (d,) iterate, or node-axis pytrees + a params tree).
+    """
+
+    x: Any                # server iterate
+    g: Any                # server gradient estimator
+    g_local: Any          # per-node g_i
+    h_local: Any          # per-node h_i
+    opt_state: Any        # server optimizer state (() for plain SGD-flat)
+    key: jax.Array
+    t: jax.Array
+    bits_sent: jax.Array  # cumulative coords sent per node (accounting)
+
+
+@dataclasses.dataclass(frozen=True)
+class Hyper:
+    """Method hyperparameters, shared by every variant (unused fields keep
+    their neutral defaults)."""
+
+    gamma: float                    # stepsize
+    a: float                        # compressor momentum, 1/(2 omega + 1)
+    variant: str = "dasha"          # dasha | page | mvr | sync_mvr | marina
+    b: float = 1.0                  # MVR momentum
+    p: float = 1.0                  # PAGE / SYNC-MVR / MARINA coin prob
+    batch: int = 1                  # B   (0 = exact full-gradient oracle)
+    batch_sync: int = 1             # B'  (sync-round megabatch)
+
+    @classmethod
+    def from_theory(cls, variant: str, omega: float, n: int, *, L: float,
+                    L_hat: Optional[float] = None,
+                    L_max: Optional[float] = None,
+                    L_sigma: Optional[float] = None,
+                    B: int = 1, m: int = 1, eps: float = 0.01,
+                    sigma2: float = 0.0, zeta: float = 1.0, d: int = 1,
+                    batch_sync: int = 1, gamma_mult: float = 1.0) -> "Hyper":
+        """Assemble the Section-6 constants for ``variant``: gamma from the
+        matching theorem, a = 1/(2 omega + 1), and the derived p / b / B —
+        so callers stop hand-assembling them.  ``gamma_mult`` is the paper's
+        powers-of-two stepsize fine-tune (Appendix A)."""
+        from repro.compress.spec import momentum_a
+        from repro.core.theory import ProblemConstants
+        rule = get_rule(variant)
+        if rule.theory_gamma is None:
+            raise ValueError(f"variant {rule.name!r} has no theory_gamma")
+        consts = ProblemConstants(
+            eps=eps, n=n, omega=omega, L=L, L_hat=L_hat or L,
+            L_max=L_max or L, L_sigma=L_sigma or L, m=m, B=B,
+            sigma2=sigma2, d=d, zeta=zeta)
+        gamma, extras = rule.theory_gamma(consts)
+        return cls(gamma=gamma_mult * gamma, a=momentum_a(omega),
+                   variant=rule.name, batch_sync=batch_sync, **extras)
+
+
+class Method(NamedTuple):
+    """``init(x0, key, ...) -> MethodState``; ``step(state, data=None) ->
+    MethodState`` (jit-able); ``run(state, num_rounds, ...)`` scans."""
+
+    init: Callable[..., MethodState]
+    step: Callable[..., MethodState]
+    run: Callable[..., Any]
+
+    @classmethod
+    def build(cls, variant, compressor, substrate, hyper: Hyper) -> "Method":
+        """One entrypoint for every variant x substrate x compressor."""
+        rule: VariantRule = get_rule(variant)
+        sub = substrate.with_compressor(compressor)
+        hp = hyper
+        a_eff = rule.force_a if rule.force_a is not None else hp.a
+
+        def init(x0, key, *, init_mode: str = "exact", batch_init: int = 1,
+                 grads0=None, data=None) -> MethodState:
+            """Cor. 6.2/6.5: g_i^0 = h_i^0 = grad f_i(x^0); Cor. 6.8/6.10:
+            a size-B_init minibatch; zeros also allowed (PL setting)."""
+            if rule.init_h is not None:
+                h0 = rule.init_h(sub, key, hp, x0, data)
+                bits0 = sub.dense_coords(h0)
+            elif grads0 is not None:
+                h0 = grads0
+                bits0 = sub.dense_coords(h0)
+            elif init_mode == "zeros" or \
+                    (getattr(sub, "problem", True) is None):
+                h0 = sub.zeros_per_node(x0)
+                bits0 = 0.0
+            elif init_mode == "exact":
+                h0 = sub.grad(key, x0, data, batch_init)
+                bits0 = sub.dense_coords(h0)
+            elif init_mode == "stoch":
+                key, k_init = jax.random.split(key)
+                h0 = sub.grad_minibatch(k_init, x0, batch_init, data)
+                bits0 = sub.dense_coords(h0)
+            else:
+                raise ValueError(init_mode)
+            return MethodState(x=x0, g=sub.mean_nodes(h0), g_local=h0,
+                               h_local=h0, opt_state=sub.init_opt(x0),
+                               key=key, t=jnp.zeros((), jnp.int32),
+                               bits_sent=jnp.asarray(bits0, jnp.float32))
+
+        def step(state: MethodState, data=None) -> MethodState:
+            key, k_h, k_c, k_coin = jax.random.split(state.key, 4)
+            # line 4 (server) + broadcast
+            x_new, opt_state = sub.server_update(state.x, state.g,
+                                                 state.opt_state, hp)
+            # line 8: THE variant-specific line
+            h_new, aux = rule.h_update(sub, k_h, hp, x_new, state.x,
+                                       state.h_local, data)
+            # lines 9-10: m_i = C_i(drift); g_i <- g_i + m_i
+            agg, h_out, g_local, payload = sub.estimator_update(
+                k_c, h_new, state.h_local, state.g_local, a_eff, aux)
+            g = sub.add_server(state.g, agg)                   # line 14
+            coin = None
+            if rule.has_sync:
+                # Alg. 2 lines 9-11 / MARINA: with prob p ALL nodes upload
+                # a fresh dense megabatch gradient instead
+                coin = jax.random.bernoulli(k_coin, hp.p)
+                h_sync = rule.sync_update(sub, k_h, hp, x_new, data)
+                h_out = sub.where(coin, h_sync, h_out)
+                g_local = sub.where(coin, h_sync, g_local)
+                g = sub.where(coin, sub.mean_nodes(h_sync), g)
+            payload = accounting.round_payload(
+                payload, sub.dense_coords(h_out), coin)
+            return MethodState(x=x_new, g=g, g_local=g_local,
+                               h_local=h_out, opt_state=opt_state, key=key,
+                               t=state.t + 1,
+                               bits_sent=state.bits_sent + payload)
+
+        def run(state: MethodState, num_rounds: int, *,
+                metric_every: int = 1, metric_fn=None, data=None):
+            """T rounds under jax.lax.scan; returns (final, metric trace,
+            cumulative payload trace).  ``metric_fn(state) -> scalar``
+            defaults to ||grad f(x)||^2 when the substrate's problem
+            exposes an exact gradient.  ``metric_every > 1`` evaluates the
+            metric only on every k-th round (the trace stays length T,
+            holding the last evaluated value in between — metrics like the
+            exact gradient norm can dominate step cost)."""
+            if metric_fn is None:
+                metric_fn = sub.default_metric()
+
+            def body(carry, i):
+                st, last = carry
+                new = step(st, data)
+                if metric_every > 1:
+                    m = jax.lax.cond(i % metric_every == 0, metric_fn,
+                                     lambda s: last, new)
+                else:
+                    m = metric_fn(new)
+                return (new, m), (m, new.bits_sent)
+
+            m0 = jnp.zeros((), jax.eval_shape(metric_fn, state).dtype)
+            (final, _), (trace, bits) = jax.lax.scan(
+                body, (state, m0), jnp.arange(num_rounds))
+            return final, trace, bits
+
+        return cls(init=init, step=step, run=run)

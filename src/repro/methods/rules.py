@@ -1,0 +1,202 @@
+"""The variant-rule registry: each method is ONE h-update (Alg. 1 line 8).
+
+The paper's observation — DASHA, DASHA-PAGE, DASHA-MVR and DASHA-SYNC-MVR
+differ *only* in how node i refreshes h_i, while the compressed-message and
+aggregation lines are shared — is made literal here.  A
+:class:`VariantRule` defines that single line against an abstract substrate
+(:mod:`repro.methods.substrates`), plus the analytics that go with it:
+
+* ``h_update``   — (sub, key, hp, x_new, x_old, h, data) -> (h_new, aux);
+  ``aux`` optionally carries an :class:`MvrFusion` hint so a fused backend
+  can recompute the momentum h-update inside the kernel pass;
+* ``sync_update`` — if present, the method has a probability-p
+  synchronization round (Alg. 2 lines 9-11 / MARINA's dense upload): the
+  engine flips ONE coin, where-selects the dense branch, and bills a dense
+  payload for that round;
+* ``force_a``    — overrides the compressor momentum (MARINA has none: its
+  message is the raw compressed difference, i.e. a = 0);
+* ``init_h``     — optional initialisation override (default: the oracle
+  gradient at x^0, Cor. 6.2/6.5);
+* ``theory_gamma`` — Section 6 stepsize + derived constants, consumed by
+  :meth:`repro.methods.engine.Hyper.from_theory`;
+* ``extra_payload`` — expected coords/round beyond the compressed message
+  (the sync branch's dense uploads), consumed by
+  :func:`repro.methods.accounting.expected_payload_frac`.
+
+MARINA (Gorbunov et al., 2021) fits the same skeleton: track
+h_i^t = G_i(x^t) by telescoping (h <- h + [G_i(x^{t+1}) - G_i(x^t)]), and
+with a = 0 the drift h^{t+1} - h^t - a(g_i - h^t) is exactly the compressed
+difference the MARINA server averages.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+
+
+class MvrFusion(NamedTuple):
+    """Fusion hint: h_new = grads_new + (1-b)(h - grads_old), recomputable
+    inside the fused Pallas kernel (one HBM pass; SARAH is b = 0)."""
+
+    grads_new: Any
+    grads_old: Any
+    b: float
+
+
+def _no_extra_payload(hp, payload: float, dense: float) -> float:
+    return 0.0
+
+
+def _sync_extra_payload(hp, payload: float, dense: float) -> float:
+    """A probability-p round uploads dense instead of compressed coords."""
+    return hp.p * (dense - payload)
+
+
+@dataclasses.dataclass(frozen=True)
+class VariantRule:
+    """One method = one h-update + its analytics (see module docstring)."""
+
+    name: str
+    h_update: Callable[..., Tuple[Any, Any]]
+    sync_update: Optional[Callable[..., Any]] = None
+    force_a: Optional[float] = None
+    init_h: Optional[Callable[..., Any]] = None
+    theory_gamma: Optional[Callable[..., Tuple[float, Dict[str, Any]]]] = None
+    extra_payload: Callable[..., float] = _no_extra_payload
+
+    @property
+    def has_sync(self) -> bool:
+        return self.sync_update is not None
+
+
+VARIANTS: Dict[str, VariantRule] = {}
+
+
+def register_variant(rule: VariantRule) -> VariantRule:
+    VARIANTS[rule.name] = rule
+    return rule
+
+
+def get_rule(variant) -> VariantRule:
+    if isinstance(variant, VariantRule):
+        return variant
+    if variant not in VARIANTS:
+        raise ValueError(f"unknown method variant {variant!r}; "
+                         f"registered: {sorted(VARIANTS)}")
+    return VARIANTS[variant]
+
+
+# ---------------------------------------------------------------------------
+# h-updates (each is Alg. 1 line 8 for one method, written once)
+# ---------------------------------------------------------------------------
+
+def _h_dasha(sub, key, hp, x_new, x_old, h, data):
+    """h_i^{t+1} = grad f_i(x^{t+1}) (the GD-like line)."""
+    return sub.grad(key, x_new, data, hp.batch), None
+
+
+def _h_page(sub, key, hp, x_new, x_old, h, data):
+    """PAGE: full reset with prob p, else SARAH increment on a shared-sample
+    minibatch difference (Theorem 6.4)."""
+    k_coin, k_batch = jax.random.split(key)
+    coin = jax.random.bernoulli(k_coin, hp.p)
+    full = sub.grad(k_batch, x_new, data, hp.batch)
+    diff = sub.grad_diff(k_batch, x_new, x_old, hp.batch, data)
+    inc = sub.lin(lambda h_, d_: h_ + d_, h, diff)
+    return sub.where(coin, full, inc), None
+
+
+def _h_mvr(sub, key, hp, x_new, x_old, h, data):
+    """Momentum variance reduction: h = g(x_new) + (1-b)(h - g(x_old)) with
+    the SAME samples at both points (Theorem 6.7)."""
+    gn, go = sub.grad_pair(key, x_new, x_old, hp.batch, data)
+    h_new = sub.lin(lambda gn_, h_, go_: gn_ + (1.0 - hp.b) * (h_ - go_),
+                    gn, h, go)
+    return h_new, MvrFusion(gn, go, hp.b)
+
+
+def _h_sarah(sub, key, hp, x_new, x_old, h, data):
+    """SYNC-MVR's compressed branch: MVR with b = 0 (SARAH recursion)."""
+    gn, go = sub.grad_pair(key, x_new, x_old, hp.batch, data)
+    h_new = sub.lin(lambda gn_, h_, go_: gn_ + (h_ - go_), gn, h, go)
+    return h_new, MvrFusion(gn, go, 0.0)
+
+
+def _h_marina(sub, key, hp, x_new, x_old, h, data):
+    """MARINA: telescoped oracle difference; with force_a=0 the drift is
+    exactly C_i(G_i(x^{t+1}) - G_i(x^t))."""
+    diff = sub.grad_diff(key, x_new, x_old, hp.batch, data)
+    return sub.lin(lambda h_, d_: h_ + d_, h, diff), None
+
+
+def _sync_megabatch(sub, key, hp, x_new, data):
+    """The dense sync round: a FRESH uncompressed megabatch gradient (B' for
+    SYNC-MVR; the exact gradient where the oracle has one)."""
+    return sub.megabatch(key, x_new, hp.batch_sync, data)
+
+
+# ---------------------------------------------------------------------------
+# theory glue (Section 6): gamma + derived constants from ProblemConstants-
+# style inputs.  Imported lazily to keep repro.methods import-light.
+# ---------------------------------------------------------------------------
+
+def _theory_dasha(c):
+    from repro.core import theory
+    return theory.gamma_dasha(c.L, c.L_hat, c.omega, c.n), {}
+
+
+def _theory_page(c):
+    from repro.core import theory
+    p = theory.page_p(c.B, c.m)
+    return (theory.gamma_dasha_page(c.L, c.L_hat, c.L_max, c.omega, c.n,
+                                    c.B, p),
+            {"p": p, "batch": c.B})
+
+
+def _theory_mvr(c):
+    from repro.core import theory
+    b = theory.mvr_b(c.omega, c.n, c.B, c.eps, c.sigma2)
+    return (theory.gamma_dasha_mvr(c.L, c.L_hat, c.L_sigma, c.omega, c.n,
+                                   c.B, b),
+            {"b": b, "batch": c.B})
+
+
+def _theory_sync_mvr(c):
+    from repro.core import theory
+    p = theory.sync_mvr_p(c.zeta, c.d, c.n, c.B, c.eps, c.sigma2)
+    return (theory.gamma_sync_mvr(c.L, c.L_hat, c.L_sigma, c.omega, c.n,
+                                  c.B, p),
+            {"p": p, "batch": c.B})
+
+
+def _theory_marina(c):
+    from repro.core import theory
+    p = theory.marina_p(c.zeta, c.d)
+    # batch=0: gamma_marina is the PLAIN MARINA stepsize (Gorbunov et al.
+    # Theorem 2.1), which assumes exact full-gradient differences
+    return theory.gamma_marina(c.L, c.omega, c.n, p), {"p": p, "batch": 0}
+
+
+# ---------------------------------------------------------------------------
+# the registry
+# ---------------------------------------------------------------------------
+
+register_variant(VariantRule(
+    name="dasha", h_update=_h_dasha, theory_gamma=_theory_dasha))
+
+register_variant(VariantRule(
+    name="page", h_update=_h_page, theory_gamma=_theory_page))
+
+register_variant(VariantRule(
+    name="mvr", h_update=_h_mvr, theory_gamma=_theory_mvr))
+
+register_variant(VariantRule(
+    name="sync_mvr", h_update=_h_sarah, sync_update=_sync_megabatch,
+    theory_gamma=_theory_sync_mvr, extra_payload=_sync_extra_payload))
+
+register_variant(VariantRule(
+    name="marina", h_update=_h_marina, sync_update=_sync_megabatch,
+    force_a=0.0, theory_gamma=_theory_marina,
+    extra_payload=_sync_extra_payload))

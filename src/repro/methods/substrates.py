@@ -1,0 +1,459 @@
+"""State substrates: the handful of ops the method skeleton needs, twice.
+
+A substrate answers "what shape is the per-node state and how do I act on
+it":
+
+* :class:`FlatSubstrate` — stacked ``(n, d)`` arrays, vmap on one host (the
+  research loop of :mod:`repro.core.dasha`); compression through a
+  :class:`repro.compress.RoundCompressor` (dense | sparse | fused backends);
+* :class:`TreeSubstrate` — params-shaped pytrees with a leading node axis,
+  GSPMD-sharding aware (the trainer of :mod:`repro.optim.distributed`);
+  compression either tree-native (:class:`TreeCompression` →
+  :mod:`repro.compress.treelevel`, incl. the fused Pallas path) or per-leaf
+  through the same RoundCompressor specs (:class:`LeafSpecCompressor`).
+
+Oracles are pluggable on the tree side: :class:`BatchLossOracle` derives
+per-node gradients from a loss function (training), while
+:class:`LeafProblemOracle` adapts a flat Section-1.2 problem to a
+single-leaf tree — under it, a single-leaf TreeSubstrate is BIT-IDENTICAL
+to FlatSubstrate (same RNG, same compressor plan), which is the substrate-
+parity contract tested in tests/test_methods_api.py.
+
+RNG contract: the engine hands each substrate the same round keys; per-leaf
+fanout is ``split(key, n_leaves)`` EXCEPT a single-leaf tree uses the round
+key directly (the degenerate tree *is* the flat substrate).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.compress import as_round_compressor
+from repro.compress.backends import RoundCompressor
+from repro.compress.treelevel import (bernoulli_compress, fused_tree_update,
+                                      permk_compress)
+from repro.methods.rules import MvrFusion
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# shared oracle semantics over the Section 1.2 problem classes
+# ---------------------------------------------------------------------------
+
+def _problem_grad(problem, key, x, size):
+    """Finite-sum: the exact nabla f_i; stochastic: a fresh size-B batch."""
+    if hasattr(problem, "full_grad"):
+        return problem.full_grad(x)
+    return problem.stoch_grad(key, x, size)
+
+
+def _problem_grad_pair(problem, key, x_new, x_old, size):
+    """Same-sample gradients at two points (MVR / SARAH)."""
+    if hasattr(problem, "stoch_grad_pair"):
+        return problem.stoch_grad_pair(key, x_new, x_old, size)
+    # finite-sum: the SAME key draws the same multiset at both points
+    return (problem.minibatch_grad(key, x_new, size),
+            problem.minibatch_grad(key, x_old, size))
+
+
+def _problem_grad_diff(problem, key, x_new, x_old, size):
+    """Shared-sample difference (PAGE / MARINA).  ``size == 0`` requests the
+    exact full-gradient difference (plain MARINA on finite sums)."""
+    if hasattr(problem, "minibatch_diff"):
+        if size == 0:
+            return problem.full_grad(x_new) - problem.full_grad(x_old)
+        return problem.minibatch_diff(key, x_new, x_old, size)
+    gn, go = problem.stoch_grad_pair(key, x_new, x_old, size)
+    return gn - go
+
+
+def _problem_megabatch(problem, key, x, size):
+    """The sync round's dense upload: exact gradient when the oracle has
+    one, else a fresh B' megabatch."""
+    if hasattr(problem, "full_grad"):
+        return problem.full_grad(x)
+    return problem.stoch_grad(key, x, size)
+
+
+def _problem_grad_minibatch(problem, key, x, size):
+    """An honest size-B minibatch gradient on EITHER oracle (the Cor.
+    6.8/6.10 B_init initialisation; never silently the exact gradient)."""
+    if hasattr(problem, "stoch_grad"):
+        return problem.stoch_grad(key, x, size)
+    return problem.minibatch_grad(key, x, size)
+
+
+# ---------------------------------------------------------------------------
+# FlatSubstrate
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FlatSubstrate:
+    """Stacked (n, d) per-node state on one host (vmap-ed oracles)."""
+
+    problem: Any
+    n: int
+    d: int
+    rc: Optional[RoundCompressor] = None
+
+    def with_compressor(self, comp) -> "FlatSubstrate":
+        rc = as_round_compressor(comp)
+        return dataclasses.replace(self, rc=rc)
+
+    # -- oracle ops --------------------------------------------------------
+    def grad(self, key, x, data=None, size: int = 1):
+        return _problem_grad(self.problem, key, x, size)
+
+    def grad_pair(self, key, x_new, x_old, size: int, data=None):
+        return _problem_grad_pair(self.problem, key, x_new, x_old, size)
+
+    def grad_diff(self, key, x_new, x_old, size: int, data=None):
+        return _problem_grad_diff(self.problem, key, x_new, x_old, size)
+
+    def megabatch(self, key, x, size: int, data=None):
+        return _problem_megabatch(self.problem, key, x, size)
+
+    def grad_minibatch(self, key, x, size: int, data=None):
+        return _problem_grad_minibatch(self.problem, key, x, size)
+
+    # -- arithmetic --------------------------------------------------------
+    def lin(self, fn: Callable, *arrays):
+        return fn(*arrays)
+
+    def where(self, coin, a, b):
+        return jnp.where(coin, a, b)
+
+    def mean_nodes(self, per_node):
+        return jnp.mean(per_node, 0)
+
+    def add_server(self, g, agg):
+        return g + agg
+
+    def zeros_per_node(self, x0):
+        return jnp.zeros((self.n, self.d), x0.dtype)
+
+    def dense_coords(self, per_node_tree=None) -> float:
+        return float(self.d)
+
+    # -- server ------------------------------------------------------------
+    def init_opt(self, x0):
+        return ()
+
+    def server_update(self, x, g, opt_state, hp):
+        return x - hp.gamma * g, opt_state
+
+    # -- compression (Alg. 1 lines 9-10) -----------------------------------
+    def estimator_update(self, key, h_new, h, g_local, a: float, aux=None):
+        msgs, h_out, gl = self.rc.estimator_update(key, h_new, h, g_local, a)
+        return msgs.mean(), h_out, gl, self.rc.payload_per_node
+
+    # -- metrics -----------------------------------------------------------
+    def default_metric(self):
+        p = self.problem
+        if hasattr(p, "grad_f"):
+            return lambda s: jnp.sum(p.grad_f(s.x) ** 2)
+        if getattr(p, "true_grad", None) is not None:
+            return lambda s: jnp.sum(p.true_grad(s.x) ** 2)
+        return lambda s: jnp.float32(0)
+
+
+# ---------------------------------------------------------------------------
+# tree oracles
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BatchLossOracle:
+    """Per-node gradients from ``loss_fn(params, node_batch)`` (training).
+
+    ``data`` is a batch pytree with a leading node axis (n, ...); the vmap
+    lifts the node axis with ``spmd_axis_name`` so GSPMD keeps the scan
+    accumulators sharded, and ``grad_specs`` pins per-param shardings.
+    The same data batch evaluates both points of a pair — the "same
+    samples" requirement of MVR/PAGE — and the megabatch sync round reuses
+    the round's batch (B' = B at this layer).
+    """
+
+    loss_fn: Callable[[PyTree, Any], jax.Array]
+    spmd_axes: Optional[Tuple[str, ...]] = None
+    grad_specs: Optional[PyTree] = None
+    state_dtype: Any = jnp.float32
+
+    def per_node_grads(self, params, data):
+        def gfun(p, b):
+            g_ = jax.grad(lambda pp, bb: self.loss_fn(pp, bb))(p, b)
+            if self.grad_specs is not None:
+                g_ = jax.tree_util.tree_map(
+                    jax.lax.with_sharding_constraint, g_, self.grad_specs)
+            return g_
+        vkw = {}
+        if self.spmd_axes:
+            vkw["spmd_axis_name"] = self.spmd_axes
+        grads = jax.vmap(gfun, in_axes=(None, 0), **vkw)(params, data)
+        return jax.tree_util.tree_map(
+            lambda g_: g_.astype(self.state_dtype), grads)
+
+    def grad(self, key, x, data, size: int = 1):
+        return self.per_node_grads(x, data)
+
+    def grad_pair(self, key, x_new, x_old, size: int, data):
+        return (self.per_node_grads(x_new, data),
+                self.per_node_grads(x_old, data))
+
+    def grad_diff(self, key, x_new, x_old, size: int, data):
+        gn, go = self.grad_pair(key, x_new, x_old, size, data)
+        return jax.tree_util.tree_map(
+            lambda a, b: (a.astype(jnp.float32)
+                          - b.astype(jnp.float32)).astype(self.state_dtype),
+            gn, go)
+
+    def megabatch(self, key, x, size: int, data):
+        return self.per_node_grads(x, data)
+
+    def grad_minibatch(self, key, x, size: int, data):
+        return self.per_node_grads(x, data)
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafProblemOracle:
+    """Adapt a flat Section-1.2 problem to a single-leaf tree substrate.
+
+    The parity bridge: per-node quantities are the problem's (n, d) arrays
+    wrapped back into the x-tree's (single-leaf) structure, so a
+    TreeSubstrate over it reproduces FlatSubstrate bit for bit.
+    """
+
+    problem: Any
+    treedef: Any
+
+    @classmethod
+    def wrapping(cls, problem, x0_tree) -> "LeafProblemOracle":
+        leaves, treedef = jax.tree_util.tree_flatten(x0_tree)
+        assert len(leaves) == 1, "LeafProblemOracle is single-leaf only"
+        return cls(problem=problem, treedef=treedef)
+
+    def _leaf(self, tree):
+        return jax.tree_util.tree_leaves(tree)[0]
+
+    def _wrap(self, arr):
+        return jax.tree_util.tree_unflatten(self.treedef, [arr])
+
+    def grad(self, key, x, data=None, size: int = 1):
+        return self._wrap(_problem_grad(self.problem, key, self._leaf(x),
+                                        size))
+
+    def grad_pair(self, key, x_new, x_old, size: int, data=None):
+        gn, go = _problem_grad_pair(self.problem, key, self._leaf(x_new),
+                                    self._leaf(x_old), size)
+        return self._wrap(gn), self._wrap(go)
+
+    def grad_diff(self, key, x_new, x_old, size: int, data=None):
+        return self._wrap(_problem_grad_diff(
+            self.problem, key, self._leaf(x_new), self._leaf(x_old), size))
+
+    def megabatch(self, key, x, size: int, data=None):
+        return self._wrap(_problem_megabatch(self.problem, key,
+                                             self._leaf(x), size))
+
+    def grad_minibatch(self, key, x, size: int, data=None):
+        return self._wrap(_problem_grad_minibatch(self.problem, key,
+                                                  self._leaf(x), size))
+
+
+# ---------------------------------------------------------------------------
+# tree compression strategies
+# ---------------------------------------------------------------------------
+
+def _leaf_fanout(key, leaves):
+    """split(key, n_leaves); a single leaf uses the round key directly so
+    the single-leaf tree substrate matches the flat substrate bit for bit."""
+    if len(leaves) == 1:
+        return [key]
+    return list(jax.random.split(key, len(leaves)))
+
+
+def _leaf_size(leaf) -> float:
+    sz = 1.0
+    for s in leaf.shape[1:]:
+        sz *= s
+    return sz
+
+
+@dataclasses.dataclass(frozen=True)
+class TreeCompression:
+    """Tree-native compression: the trainer's mode knob over
+    :mod:`repro.compress.treelevel` (sharding-spec aware, fused-capable)."""
+
+    mode: str = "independent"     # independent | shared_coords | permk
+    p: float = 1.0                # Bernoulli-RandP keep probability
+    n: int = 1
+    use_kernel: bool = False
+    specs: Optional[PyTree] = None
+
+    @property
+    def static_frac(self) -> float:
+        """Payload / dense, per node (the trainer's payload_frac metric)."""
+        return 1.0 / self.n if self.mode == "permk" else self.p
+
+    def payload_per_node(self, per_node_tree) -> float:
+        return sum(self.static_frac * _leaf_size(l)
+                   for l in jax.tree_util.tree_leaves(per_node_tree))
+
+    def estimator_update(self, key, h_new, h, g_local, a: float, aux=None):
+        f32 = jnp.float32
+        if self.use_kernel:
+            if isinstance(aux, MvrFusion):
+                # recompute the momentum h-update INSIDE the kernel pass
+                m, h_out, gl = fused_tree_update(
+                    key, aux.grads_new, h, g_local, mode=self.mode, a=a,
+                    p=self.p, n=self.n, variant="mvr", b=aux.b,
+                    grads_old=aux.grads_old, specs=self.specs)
+            else:
+                m, h_out, gl = fused_tree_update(
+                    key, h_new, h, g_local, mode=self.mode, a=a, p=self.p,
+                    n=self.n, variant="dasha", specs=self.specs)
+            agg = jax.tree_util.tree_map(
+                lambda mm: jnp.mean(mm.astype(f32), 0), m)
+            return agg, h_out, gl, self.payload_per_node(h_new)
+
+        delta = jax.tree_util.tree_map(
+            lambda hn, hh, gl_: hn - hh - a * (gl_ - hh),
+            h_new, h, g_local)
+        if self.mode == "permk":
+            m, agg = permk_compress(key, delta, self.n, specs=self.specs)
+        else:
+            m = bernoulli_compress(key, delta, self.p, specs=self.specs,
+                                   shared=self.mode == "shared_coords")
+            agg = jax.tree_util.tree_map(
+                lambda mm: jnp.mean(mm.astype(f32), 0), m)
+        gl_new = jax.tree_util.tree_map(jnp.add, g_local, m)
+        return agg, h_new, gl_new, self.payload_per_node(h_new)
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSpecCompressor:
+    """Per-leaf RoundCompressor execution: the flat subsystem's spec/plan/
+    backend stack applied leaf-by-leaf (each leaf reshaped to (n, d_leaf),
+    the spec re-dimensioned).  This is how registry compressors — RandK,
+    PermK, QDither, partial participation — run on a tree substrate."""
+
+    rc: RoundCompressor
+
+    @property
+    def static_frac(self) -> float:
+        return self.rc.payload_per_node / float(self.rc.spec.d)
+
+    def _leaf_rc(self, d_leaf: int) -> RoundCompressor:
+        spec = dataclasses.replace(self.rc.spec, d=d_leaf)
+        return RoundCompressor(spec, self.rc.n, self.rc.mode,
+                               self.rc.backend)
+
+    def payload_per_node(self, per_node_tree) -> float:
+        return sum(self._leaf_rc(int(_leaf_size(l))).payload_per_node
+                   for l in jax.tree_util.tree_leaves(per_node_tree))
+
+    def estimator_update(self, key, h_new, h, g_local, a: float, aux=None):
+        hn_leaves, treedef = jax.tree_util.tree_flatten(h_new)
+        h_leaves = jax.tree_util.tree_leaves(h)
+        gl_leaves = jax.tree_util.tree_leaves(g_local)
+        keys = _leaf_fanout(key, hn_leaves)
+        aggs, h_outs, gls, payload = [], [], [], 0.0
+        for k, hn, hh, gl in zip(keys, hn_leaves, h_leaves, gl_leaves):
+            n = hn.shape[0]
+            shape = hn.shape[1:]
+            d_leaf = int(_leaf_size(hn))
+            rc = self._leaf_rc(d_leaf)
+            flat = lambda t: t.reshape(n, d_leaf)
+            msgs, h_out, gl_new = rc.estimator_update(
+                k, flat(hn), flat(hh), flat(gl), a)
+            aggs.append(msgs.mean().reshape(shape))
+            h_outs.append(h_out.reshape(hn.shape))
+            gls.append(gl_new.reshape(hn.shape))
+            payload += rc.payload_per_node
+        unflat = lambda ls: jax.tree_util.tree_unflatten(treedef, ls)
+        return unflat(aggs), unflat(h_outs), unflat(gls), payload
+
+
+# ---------------------------------------------------------------------------
+# TreeSubstrate
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TreeSubstrate:
+    """Params-shaped pytrees with a leading node axis (sharded trainer)."""
+
+    oracle: Any
+    n: int
+    server_opt: Any                     # repro.optim.base SGD / Adam
+    state_dtype: Any = jnp.float32
+    comp: Any = None                    # TreeCompression | LeafSpecCompressor
+
+    def with_compressor(self, comp) -> "TreeSubstrate":
+        if isinstance(comp, (TreeCompression, LeafSpecCompressor)):
+            bound = comp
+        else:                           # RoundCompressor / legacy view
+            bound = LeafSpecCompressor(as_round_compressor(comp))
+        return dataclasses.replace(self, comp=bound)
+
+    # -- oracle ops (delegated) --------------------------------------------
+    def grad(self, key, x, data=None, size: int = 1):
+        return self.oracle.grad(key, x, data, size)
+
+    def grad_pair(self, key, x_new, x_old, size: int, data=None):
+        return self.oracle.grad_pair(key, x_new, x_old, size, data)
+
+    def grad_diff(self, key, x_new, x_old, size: int, data=None):
+        return self.oracle.grad_diff(key, x_new, x_old, size, data)
+
+    def megabatch(self, key, x, size: int, data=None):
+        return self.oracle.megabatch(key, x, size, data)
+
+    def grad_minibatch(self, key, x, size: int, data=None):
+        return self.oracle.grad_minibatch(key, x, size, data)
+
+    # -- arithmetic --------------------------------------------------------
+    def lin(self, fn: Callable, *trees):
+        sdt = self.state_dtype
+        return jax.tree_util.tree_map(
+            lambda *ls: fn(*[l.astype(jnp.float32) for l in ls]).astype(sdt),
+            *trees)
+
+    def where(self, coin, a, b):
+        return jax.tree_util.tree_map(
+            lambda a_, b_: jnp.where(coin, a_, b_), a, b)
+
+    def mean_nodes(self, per_node):
+        return jax.tree_util.tree_map(
+            lambda h: jnp.mean(h.astype(jnp.float32), 0), per_node)
+
+    def add_server(self, g, agg):
+        return jax.tree_util.tree_map(jnp.add, g, agg)
+
+    def zeros_per_node(self, x0):
+        return jax.tree_util.tree_map(
+            lambda p: jnp.zeros((self.n,) + p.shape, self.state_dtype), x0)
+
+    def dense_coords(self, per_node_tree) -> float:
+        return sum(_leaf_size(l)
+                   for l in jax.tree_util.tree_leaves(per_node_tree))
+
+    # -- server ------------------------------------------------------------
+    def init_opt(self, x0):
+        return self.server_opt.init(x0)
+
+    def server_update(self, x, g, opt_state, hp):
+        from repro.optim.base import apply_updates
+        updates, opt_state = self.server_opt.update(g, opt_state, x)
+        return apply_updates(x, updates), opt_state
+
+    # -- compression -------------------------------------------------------
+    def estimator_update(self, key, h_new, h, g_local, a: float, aux=None):
+        return self.comp.estimator_update(key, h_new, h, g_local, a, aux)
+
+    # -- metrics -----------------------------------------------------------
+    def default_metric(self):
+        return lambda s: sum(jnp.sum(jnp.square(x))
+                             for x in jax.tree_util.tree_leaves(s.g))

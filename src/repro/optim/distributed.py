@@ -1,32 +1,29 @@
-"""DASHA as a first-class distributed training feature.
+"""DASHA as a first-class distributed training feature — thin shim.
 
-This is the paper's Algorithm 1 integrated with model training on a TPU mesh:
-the "nodes" are the data-parallel groups (axis n = ("pod","data")); every
-DASHA quantity (h_i, g_i, messages) is a PYTREE shaped like the params with a
-leading node axis, so each leaf keeps its tensor-parallel ("model") sharding.
+This is the paper's algorithm family integrated with model training on a
+TPU mesh: the "nodes" are the data-parallel groups (axis n =
+("pod","data")); every method quantity (h_i, g_i, messages) is a PYTREE
+shaped like the params with a leading node axis, so each leaf keeps its
+tensor-parallel ("model") sharding.
 
-Compression runs through :mod:`repro.compress.treelevel` (the pytree adapter
-of the unified compression subsystem — DESIGN.md §3-§5):
+The algorithm itself now comes from the methods layer (DESIGN.md §7):
+:meth:`repro.methods.Method.build` over a
+:class:`repro.methods.TreeSubstrate` whose oracle derives per-node
+gradients from the loss, with compression through
+:class:`repro.methods.TreeCompression` (the
+:mod:`repro.compress.treelevel` modes — independent | shared_coords |
+permk — including the fused Pallas path).  Because the h-updates are
+registry rules, the trainer supports EVERY variant — ``dasha``, ``mvr``,
+and (new) ``page`` and ``sync_mvr``, the latter with the probability-p
+uncompressed megabatch sync round and honest per-round payload accounting
+(``payload_coords`` metric; the static ``payload_frac`` expectation folds
+the dense sync rounds in via
+:func:`repro.methods.accounting.expected_payload_frac`).
 
-* ``independent`` — per-node Bernoulli-RandP sparsifier (unbiased, omega =
-  1/p - 1, E[density] = p*d).  Aggregation is a dense all-reduce over the
-  node axis: the paper-faithful baseline.
-* ``shared_coords`` — one mask per round shared by all nodes; the aggregate
-  is supported on ~p*d common coords (a mesh all-reduce moves p*d floats).
-* ``permk`` — PermK partition compressor: after a shared pseudo-random
-  cyclic shift, node i keeps exactly block i of every leaf (scaled by n).
-  The aggregate touches only d coordinates total (vs n*d), which GSPMD can
-  lower to gather + all-gather instead of a full all-reduce — the
-  beyond-paper collective optimization measured in EXPERIMENTS.md §Perf.
-
-Variants: ``dasha`` (per-node batch gradient as h, i.e. the GD-like line with
-a stochastic oracle) and ``mvr`` (momentum variance reduction, needs the
-previous params to evaluate the same batch at both points).
-
-``use_kernel=True`` routes EVERY mode x variant combination through the
-fused Pallas path (:func:`repro.compress.treelevel.fused_tree_update`): the
-h-update, drift, masking and g_i update run in one HBM pass per leaf.  The
-seed's restriction (kernel only for independent x dasha) is gone.
+``use_kernel=True`` routes every mode x variant through the fused Pallas
+path; the MVR/SARAH h-update is recomputed inside the kernel pass
+(:class:`repro.methods.rules.MvrFusion`), preserving the seed's one-HBM-
+pass property.
 """
 from __future__ import annotations
 
@@ -37,11 +34,16 @@ import jax
 import jax.numpy as jnp
 
 # canonical compression primitives (single definitions live in repro.compress;
-# re-exported here for back-compat with seed-era imports)
+# re-exported here for back-compat with seed-era imports — the trainer's own
+# compression calls now live in repro.methods.substrates.TreeCompression)
 from repro.compress import draw_mask  # noqa: F401
-from repro.compress import (bernoulli_compress, fused_tree_update, leaf_keys,
-                            omega_bernoulli, omega_permk, permk_compress)
-from repro.optim.base import SGD, Adam, apply_updates
+from repro.compress import (bernoulli_compress,  # noqa: F401
+                            fused_tree_update, leaf_keys, omega_bernoulli,
+                            omega_permk, permk_compress)
+from repro.methods import (BatchLossOracle, Hyper, Method, MethodState,
+                           TreeCompression, TreeSubstrate,
+                           expected_payload_frac, get_rule)
+from repro.optim.base import SGD, Adam, apply_updates  # noqa: F401
 
 PyTree = Any
 
@@ -54,8 +56,9 @@ class DashaTrainConfig:
     gamma: float                      # server stepsize
     compression: float = 0.03125     # fraction of coords sent (1/32)
     mode: str = "independent"        # independent | shared_coords | permk
-    variant: str = "dasha"           # dasha | mvr
+    variant: str = "dasha"           # dasha | mvr | page | sync_mvr
     b: float = 0.1                   # MVR momentum
+    p: float = 0.25                  # PAGE / SYNC-MVR coin probability
     n_nodes: int = 1
     server_opt: str = "sgd"          # sgd | adam (adam = beyond-paper)
     use_kernel: bool = False         # fused Pallas path (all modes/variants)
@@ -81,10 +84,17 @@ class DashaTrainConfig:
         return {"float32": jnp.float32,
                 "bfloat16": jnp.bfloat16}[self.state_dtype]
 
+    @property
+    def hyper(self) -> Hyper:
+        return Hyper(gamma=self.gamma, a=self.a, variant=self.variant,
+                     b=self.b, p=self.p)
+
 
 class DashaTrainState(NamedTuple):
     params: PyTree        # replicated over nodes, sharded over "model"
-    prev_params: PyTree   # only for MVR (else () placeholder)
+    prev_params: PyTree   # retired (always ()); kept for state-structure
+                          # compat — both gradient points of an MVR round
+                          # are evaluated inside the same step
     g: PyTree             # server estimator (like params, fp32)
     h_local: PyTree       # per-node h_i: leading node axis
     g_local: PyTree       # per-node g_i
@@ -119,8 +129,7 @@ def dasha_train_init(params: PyTree, cfg: DashaTrainConfig,
     g = jax.tree_util.tree_map(
         lambda h: jnp.mean(h.astype(jnp.float32), 0), per_node)
     opt = _server_opt(cfg)
-    prev = params if cfg.variant == "mvr" else ()
-    return DashaTrainState(params=params, prev_params=prev, g=g,
+    return DashaTrainState(params=params, prev_params=(), g=g,
                            h_local=per_node, g_local=per_node,
                            opt_state=opt.init(params), key=key,
                            step=jnp.zeros((), jnp.int32))
@@ -131,7 +140,7 @@ def make_train_step(cfg: DashaTrainConfig,
                     grad_specs: Optional[PyTree] = None
                     ) -> Callable[[DashaTrainState, Any],
                                   Tuple[DashaTrainState, dict]]:
-    """Build the jit-able DASHA train step.
+    """Build the jit-able train step for ANY registry variant.
 
     ``loss_fn(params, node_batch) -> scalar``; the returned step takes
     ``batch`` with a leading node axis (n, ...) sharded over ("pod","data").
@@ -139,10 +148,6 @@ def make_train_step(cfg: DashaTrainConfig,
     onto each node's gradient so the scan-backward accumulators compile
     sharded (the vmap spmd_axis_name lifts in the node axis).
     """
-    n = cfg.n_nodes
-    opt = _server_opt(cfg)
-    sdt = cfg.jax_state_dtype
-
     # full specs (node axis + per-param spec) for pinning mask RNG sharding
     node_full_specs = None
     if grad_specs is not None and cfg.spmd_axes:
@@ -151,87 +156,38 @@ def make_train_step(cfg: DashaTrainConfig,
             lambda s_: P(cfg.spmd_axes, *tuple(s_)), grad_specs,
             is_leaf=lambda x: isinstance(x, P))
 
-    def per_node_grads(params, batch):
-        def gfun(p, b):
-            g_ = jax.grad(lambda pp, bb: loss_fn(pp, bb))(p, b)
-            if grad_specs is not None:
-                g_ = jax.tree_util.tree_map(
-                    jax.lax.with_sharding_constraint, g_, grad_specs)
-            return g_
-        vkw = {}
-        if cfg.spmd_axes:
-            vkw["spmd_axis_name"] = cfg.spmd_axes
-        grads = jax.vmap(gfun, in_axes=(None, 0), **vkw)(params, batch)
-        return jax.tree_util.tree_map(lambda g_: g_.astype(sdt), grads)
+    oracle = BatchLossOracle(loss_fn=loss_fn, spmd_axes=cfg.spmd_axes,
+                             grad_specs=grad_specs,
+                             state_dtype=cfg.jax_state_dtype)
+    substrate = TreeSubstrate(oracle=oracle, n=cfg.n_nodes,
+                              server_opt=_server_opt(cfg),
+                              state_dtype=cfg.jax_state_dtype)
+    comp = TreeCompression(mode=cfg.mode, p=cfg.compression, n=cfg.n_nodes,
+                           use_kernel=cfg.use_kernel, specs=node_full_specs)
+    hyper = cfg.hyper
+    method = Method.build(cfg.variant, comp, substrate, hyper)
+    # static expectation: compressed fraction + the sync rounds' dense
+    # uploads (SYNC-MVR's prob-p megabatch), via the ONE accounting helper
+    frac = expected_payload_frac(get_rule(cfg.variant), hyper,
+                                 comp.static_frac)
 
     def step(state: DashaTrainState, batch) -> Tuple[DashaTrainState, dict]:
-        key, k_c = jax.random.split(state.key)
-
-        # ---- server update: x^{t+1} = x^t - gamma g^t (or server Adam) ----
-        updates, opt_state = opt.update(state.g, state.opt_state,
-                                        state.params)
-        params_new = apply_updates(state.params, updates)
-
-        # ---- line 8 oracles ----------------------------------------------
-        grads_new = per_node_grads(params_new, batch)           # (n, *shape)
-        grads_old = per_node_grads(state.params, batch) \
-            if cfg.variant == "mvr" else None
-
-        a = cfg.a
-        if cfg.use_kernel:
-            # fused Pallas path (all modes x variants): h-update + drift +
-            # mask + g_i update in ONE HBM pass per leaf (DESIGN.md §5)
-            m, h_new, g_local = fused_tree_update(
-                k_c, grads_new, state.h_local, state.g_local,
-                mode=cfg.mode, a=a, p=cfg.compression, n=n,
-                variant=cfg.variant, b=cfg.b, grads_old=grads_old,
-                specs=node_full_specs)
-            agg = jax.tree_util.tree_map(
-                lambda mm: jnp.mean(mm.astype(jnp.float32), 0), m)
-            g = jax.tree_util.tree_map(jnp.add, state.g, agg)
-        else:
-            # ---- h update (line 8) ---------------------------------------
-            if cfg.variant == "mvr":
-                h_new = jax.tree_util.tree_map(
-                    lambda gn, h, go: (gn.astype(jnp.float32)
-                                       + (1.0 - cfg.b)
-                                       * (h.astype(jnp.float32)
-                                          - go.astype(jnp.float32))
-                                       ).astype(sdt),
-                    grads_new, state.h_local, grads_old)
-            else:
-                h_new = grads_new
-
-            # ---- message (line 9) + state updates (lines 10, 14) ---------
-            delta = jax.tree_util.tree_map(
-                lambda hn, h, gl: hn - h - a * (gl - h),
-                h_new, state.h_local, state.g_local)
-
-            if cfg.mode == "permk":
-                m, agg = permk_compress(k_c, delta, n,
-                                        specs=node_full_specs)
-            else:
-                m = bernoulli_compress(k_c, delta, cfg.compression,
-                                       specs=node_full_specs,
-                                       shared=cfg.mode == "shared_coords")
-                agg = jax.tree_util.tree_map(
-                    lambda mm: jnp.mean(mm.astype(jnp.float32), 0), m)
-
-            g_local = jax.tree_util.tree_map(jnp.add, state.g_local, m)
-            g = jax.tree_util.tree_map(jnp.add, state.g, agg)
-
         # NOTE: jnp.sum(x*x), NOT jnp.vdot — vdot ravels each leaf, which
         # forces GSPMD to all-gather the full (sharded) estimator (20 GB/dev
         # for a 16B model) just to compute a scalar metric.
         gn = sum(jnp.sum(jnp.square(x))
                  for x in jax.tree_util.tree_leaves(state.g))
+        ms = MethodState(x=state.params, g=state.g, g_local=state.g_local,
+                         h_local=state.h_local, opt_state=state.opt_state,
+                         key=state.key, t=state.step,
+                         bits_sent=jnp.zeros((), jnp.float32))
+        ms = method.step(ms, batch)
         metrics = {"g_norm_sq": gn,
-                   "payload_frac": jnp.float32(
-                       1.0 / n if cfg.mode == "permk" else cfg.compression)}
-        prev = state.params if cfg.variant == "mvr" else ()
-        return DashaTrainState(params=params_new, prev_params=prev, g=g,
-                               h_local=h_new, g_local=g_local,
-                               opt_state=opt_state, key=key,
-                               step=state.step + 1), metrics
+                   "payload_frac": jnp.float32(frac),
+                   "payload_coords": ms.bits_sent}
+        return DashaTrainState(params=ms.x, prev_params=(), g=ms.g,
+                               h_local=ms.h_local, g_local=ms.g_local,
+                               opt_state=ms.opt_state, key=ms.key,
+                               step=ms.t), metrics
 
     return step
