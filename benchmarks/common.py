@@ -2,7 +2,6 @@
 run loops with bits-vs-metric traces, CSV emission."""
 from __future__ import annotations
 
-import time
 from typing import Dict, List
 
 import jax
@@ -10,7 +9,6 @@ import jax.numpy as jnp
 
 from repro.compress import (NodeCompressor, RandK,  # noqa: F401
                             RoundCompressor, make_round_compressor)
-from repro.core import dasha, marina, theory
 from repro.core.oracles import FiniteSumProblem, StochasticProblem
 from repro.data.pipeline import synthetic_classification
 from repro.methods import FlatSubstrate, Hyper, Method
@@ -79,9 +77,51 @@ def lipschitz_glm(problem: FiniteSumProblem) -> float:
     return float(jnp.mean(jnp.sum(a * a, -1)) * 2.0)
 
 
+def problem_metric(problem):
+    """||grad f(x)||^2 from whichever exact gradient the problem exposes."""
+    if hasattr(problem, "grad_f"):
+        return lambda s: jnp.sum(problem.grad_f(s.x) ** 2)
+    if getattr(problem, "true_grad", None) is not None:
+        return lambda s: jnp.sum(problem.true_grad(s.x) ** 2)
+    raise ValueError("problem exposes no exact gradient for the metric")
+
+
+def sweep_tune(method_fn, values, state, rounds, *, metric_fn,
+               final_of=None, chunk: int = None) -> Dict:
+    """Paper protocol (Appendix A): fine-tune the stepsize over powers of
+    two, keep the run with the best final metric — now ONE vmapped driver
+    sweep (DESIGN.md §10): the G tunes compile once and run as a single
+    batched scan instead of G sequential replays.
+
+    ``method_fn(value) -> Method`` (value may be a scalar gamma or a pytree
+    like ``{"gamma": ..., "b": ...}``); ``state`` is the shared init state;
+    ``final_of(trace_row) -> float`` selects the figure's summary statistic
+    (default: the last trace entry)."""
+    import numpy as np
+
+    from repro.methods.driver import sweep
+
+    _, traces = sweep(method_fn, values, state, rounds,
+                      metrics={"metric": lambda s, d: metric_fn(s)},
+                      chunk=chunk)
+    tr = np.asarray(traces["metric"], np.float64)
+    bits = np.asarray(traces["bits_sent"])
+    finals = np.array([(final_of(row) if final_of else row[-1])
+                       for row in tr])
+    finite = np.isfinite(finals)
+    if not finite.any():
+        return {"final": float("nan"), "gamma": None}
+    i = int(np.argmin(np.where(finite, finals, np.inf)))
+    leaves = jax.tree_util.tree_leaves(values)
+    gamma = values["gamma"][i] if isinstance(values, dict) and \
+        "gamma" in values else leaves[0][i]
+    return {"final": float(finals[i]), "gamma": float(gamma),
+            "trace": tr[i], "bits": bits[i], "index": i}
+
+
 def tune_gamma(run_fn, gammas) -> Dict:
-    """Paper protocol: fine-tune the stepsize over powers of two, keep the
-    run with the best final metric."""
+    """Sequential legacy tune (one replay per gamma); prefer
+    :func:`sweep_tune`, which runs the whole grid as one batched scan."""
     best = None
     for g in gammas:
         out = run_fn(g)

@@ -9,7 +9,8 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import (N_NODES, build_method, emit, glm_problem,
-                               lipschitz_glm, randk_compressor, tune_gamma)
+                               lipschitz_glm, problem_metric,
+                               randk_compressor, sweep_tune)
 from repro.core import theory
 from repro.methods import Hyper
 
@@ -34,23 +35,26 @@ def run():
     gammas = [theory.gamma_dasha(L, L, comp.omega, N_NODES) * 2 ** i
               for i in range(0, 8)]
 
-    def run_variant(variant, gamma, **kw):
-        m = build_method(variant, problem, comp,
-                         Hyper(gamma=gamma, a=theory.momentum_a(comp.omega),
-                               variant=variant, **kw))
-        st = m.init(jnp.zeros(D), jax.random.PRNGKey(1))
-        st, trace, bits = m.run(st, ROUNDS)
-        return {"final": float(trace[-1]), "trace": trace, "bits": bits}
+    def method_fn(variant, **kw):
+        # gamma stays a (batched) tracer inside the vmapped sweep
+        return lambda gamma: build_method(
+            variant, problem, comp,
+            Hyper(gamma=gamma, a=theory.momentum_a(comp.omega),
+                  variant=variant, **kw))
 
-    def run_dasha(gamma):
-        return run_variant("dasha", gamma)
+    def init_state(variant, **kw):
+        return method_fn(variant, **kw)(0.0).init(jnp.zeros(D),
+                                                  jax.random.PRNGKey(1))
 
-    def run_marina(gamma):
-        # batch=0: exact full-gradient differences (plain MARINA)
-        return run_variant("marina", gamma, p=theory.marina_p(K, D), batch=0)
-
-    best_d = tune_gamma(run_dasha, gammas)
-    best_m = tune_gamma(run_marina, gammas)
+    metric = problem_metric(problem)
+    # one vmapped driver sweep per method: the 8-gamma tune compiles once
+    best_d = sweep_tune(method_fn("dasha"), jnp.array(gammas),
+                        init_state("dasha"), ROUNDS, metric_fn=metric)
+    # batch=0: exact full-gradient differences (plain MARINA)
+    mar = dict(p=theory.marina_p(K, D), batch=0)
+    best_m = sweep_tune(method_fn("marina", **mar), jnp.array(gammas),
+                        init_state("marina", **mar), ROUNDS,
+                        metric_fn=metric)
     rows = []
     for name, best in [("dasha", best_d), ("marina", best_m)]:
         rows.append({

@@ -1,14 +1,19 @@
 """Figure 2: finite-sum setting — DASHA-PAGE vs VR-MARINA (B=1) for several
 RandK K values.  Paper claim: DASHA-PAGE converges faster; the gap closes for
-large K (the 1+omega/sqrt(n) term dominates)."""
+large K (the 1+omega/sqrt(n) term dominates).
+
+Each 8-gamma stepsize tune is ONE vmapped driver sweep (DESIGN.md §10)."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from benchmarks.common import (N_NODES, emit, glm_problem, lipschitz_glm,
-                               randk_compressor, tune_gamma)
-from repro.core import dasha, marina, theory
+from benchmarks.common import (N_NODES, build_method, emit, glm_problem,
+                               lipschitz_glm, problem_metric,
+                               randk_compressor, sweep_tune)
+from repro.core import theory
+from repro.methods import Hyper
 
 D, M, ROUNDS, B = 60, 64, 1200, 1
 
@@ -16,37 +21,39 @@ D, M, ROUNDS, B = 60, 64, 1200, 1
 def run():
     problem = glm_problem(D, M, key=2)
     L = lipschitz_glm(problem)
+    metric = problem_metric(problem)
+    tail = lambda row: float(np.mean(row[-50:]))
     rows = []
     for K in (2, 10, 30):
         comp = randk_compressor(D, K)
         p = theory.page_p(B, M)
 
-        def run_page(gamma):
-            hp = dasha.DashaHyper(gamma=gamma,
-                                  a=theory.momentum_a(comp.omega),
-                                  variant="page", p=p, batch=B)
-            st = dasha.init(jnp.zeros(D), N_NODES, jax.random.PRNGKey(1),
-                            problem=problem)
-            st, trace, bits = dasha.run(st, hp, problem, comp, ROUNDS)
-            return {"final": float(jnp.mean(trace[-50:])), "bits": bits}
+        def mfn_page(gamma):
+            return build_method("page", problem, comp,
+                                Hyper(gamma=gamma,
+                                      a=theory.momentum_a(comp.omega),
+                                      variant="page", p=p, batch=B))
 
-        def run_vr_marina(gamma):
-            hp = marina.MarinaHyper(gamma=gamma, p=theory.marina_p(K, D),
-                                    variant="vr", batch=B)
-            st = marina.init(jnp.zeros(D), jax.random.PRNGKey(1), problem)
-            st, trace, bits = marina.run(st, hp, problem, comp, ROUNDS)
-            return {"final": float(jnp.mean(trace[-50:])), "bits": bits}
+        def mfn_marina(gamma):
+            # VR-MARINA: shared-sample minibatch difference (batch=B)
+            return build_method("marina", problem, comp,
+                                Hyper(gamma=gamma, a=0.0, variant="marina",
+                                      p=theory.marina_p(K, D), batch=B))
 
         base = theory.gamma_dasha_page(L, L, L, comp.omega, N_NODES, B, p)
-        gammas = [base * 2 ** i for i in range(0, 8)]
-        best_p = tune_gamma(run_page, gammas)
-        best_m = tune_gamma(run_vr_marina, gammas)
-        rows.append({"bench": "fig2_finite_sum", "k": K, "method": "dasha_page",
-                     "gamma": best_p["gamma"],
+        gammas = jnp.array([base * 2 ** i for i in range(0, 8)])
+        st_p = mfn_page(0.0).init(jnp.zeros(D), jax.random.PRNGKey(1))
+        st_m = mfn_marina(0.0).init(jnp.zeros(D), jax.random.PRNGKey(1))
+        best_p = sweep_tune(mfn_page, gammas, st_p, ROUNDS,
+                            metric_fn=metric, final_of=tail)
+        best_m = sweep_tune(mfn_marina, gammas, st_m, ROUNDS,
+                            metric_fn=metric, final_of=tail)
+        rows.append({"bench": "fig2_finite_sum", "k": K,
+                     "method": "dasha_page", "gamma": best_p["gamma"],
                      "grad_sq_tail": best_p["final"],
                      "coords_sent": float(best_p["bits"][-1])})
-        rows.append({"bench": "fig2_finite_sum", "k": K, "method": "vr_marina",
-                     "gamma": best_m["gamma"],
+        rows.append({"bench": "fig2_finite_sum", "k": K,
+                     "method": "vr_marina", "gamma": best_m["gamma"],
                      "grad_sq_tail": best_m["final"],
                      "coords_sent": float(best_m["bits"][-1])})
     return rows

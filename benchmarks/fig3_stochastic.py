@@ -1,15 +1,19 @@
 """Figure 3: stochastic setting — DASHA-MVR / DASHA-SYNC-MVR / VR-MARINA
 (online), B=1, parameters tied to the common ratio sigma^2/(n eps B) as in
-the paper (footnote 4)."""
+the paper (footnote 4).
+
+Each 9-gamma stepsize tune is ONE vmapped driver sweep (DESIGN.md §10)."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from benchmarks.common import (N_NODES, emit, logreg_nonconvex_problem,
-                               randk_compressor,
-                               tune_gamma)
-from repro.core import dasha, marina, theory
+from benchmarks.common import (N_NODES, build_method, emit,
+                               logreg_nonconvex_problem, problem_metric,
+                               randk_compressor, sweep_tune)
+from repro.core import theory
+from repro.methods import Hyper
 
 D, ROUNDS, B = 60, 1500, 1
 SIGMA2 = 0.09        # additive-noise variance (see common.py)
@@ -17,6 +21,8 @@ SIGMA2 = 0.09        # additive-noise variance (see common.py)
 
 def run():
     problem = logreg_nonconvex_problem(D)
+    metric = problem_metric(problem)
+    tail = lambda row: float(np.mean(row[-100:]))
     rows = []
     for ratio in (1e2, 1e3):          # sigma^2 / (n eps B)
         eps = SIGMA2 / (N_NODES * ratio * B)
@@ -27,46 +33,34 @@ def run():
             p_sync = theory.sync_mvr_p(K, D, N_NODES, B, eps, SIGMA2)
             p_mar = min(K / D, N_NODES * eps * B / SIGMA2)
 
-            def run_mvr(gamma):
-                hp = dasha.DashaHyper(gamma=gamma,
-                                      a=theory.momentum_a(omega),
-                                      variant="mvr", b=b, batch=B)
-                st = dasha.init(jnp.zeros(D), N_NODES, jax.random.PRNGKey(1),
-                                problem=problem, init_mode="stoch",
-                                batch_init=max(int(B / max(b, 1e-3)), 1))
-                st, trace, bits = dasha.run(st, hp, problem, comp, ROUNDS)
-                return {"final": float(jnp.mean(trace[-100:])),
-                        "bits": bits}
+            def mfn(variant, **kw):
+                return lambda gamma: build_method(
+                    variant, problem, comp,
+                    Hyper(gamma=gamma, a=theory.momentum_a(omega),
+                          variant=variant, batch=B, **kw))
 
-            def run_sync(gamma):
-                hp = dasha.DashaHyper(gamma=gamma,
-                                      a=theory.momentum_a(omega),
-                                      variant="sync_mvr", p=p_sync, batch=B,
-                                      batch_sync=32)
-                st = dasha.init(jnp.zeros(D), N_NODES, jax.random.PRNGKey(1),
-                                problem=problem, init_mode="stoch",
-                                batch_init=32)
-                st, trace, bits = dasha.run(st, hp, problem, comp, ROUNDS)
-                return {"final": float(jnp.mean(trace[-100:])),
-                        "bits": bits}
-
-            def run_vr_online(gamma):
-                hp = marina.MarinaHyper(gamma=gamma, p=p_mar,
-                                        variant="vr_online", batch=B,
-                                        batch_sync=32)
-                st = marina.init(jnp.zeros(D), jax.random.PRNGKey(1),
-                                 problem)
-                st, trace, bits = marina.run(st, hp, problem, comp, ROUNDS)
-                return {"final": float(jnp.mean(trace[-100:])),
-                        "bits": bits}
-
+            cases = [
+                ("dasha_mvr", mfn("mvr", b=b),
+                 dict(init_mode="stoch",
+                      batch_init=max(int(B / max(b, 1e-3)), 1))),
+                ("dasha_sync_mvr", mfn("sync_mvr", p=p_sync, batch_sync=32),
+                 dict(init_mode="stoch", batch_init=32)),
+                # VR-MARINA (online): stochastic same-sample pair oracle
+                ("vr_marina_online",
+                 lambda gamma: build_method(
+                     "marina", problem, comp,
+                     Hyper(gamma=gamma, a=0.0, variant="marina", p=p_mar,
+                           batch=B, batch_sync=32)),
+                 dict(init_mode="stoch", batch_init=64)),
+            ]
             gamma0 = theory.gamma_dasha_mvr(2.0, 2.0, 1.0, omega, N_NODES,
                                             B, b)
-            gammas = [gamma0 * 2 ** i for i in range(0, 9)]
-            for name, fn in [("dasha_mvr", run_mvr),
-                             ("dasha_sync_mvr", run_sync),
-                             ("vr_marina_online", run_vr_online)]:
-                best = tune_gamma(fn, gammas)
+            gammas = jnp.array([gamma0 * 2 ** i for i in range(0, 9)])
+            for name, method_fn, init_kw in cases:
+                st = method_fn(0.0).init(jnp.zeros(D), jax.random.PRNGKey(1),
+                                         **init_kw)
+                best = sweep_tune(method_fn, gammas, st, ROUNDS,
+                                  metric_fn=metric, final_of=tail)
                 rows.append({"bench": "fig3_stochastic", "ratio": ratio,
                              "k": K, "method": name, "gamma": best["gamma"],
                              "grad_sq_tail": best["final"],

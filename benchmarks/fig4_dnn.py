@@ -3,9 +3,15 @@ compressed communication — here a reduced starcoder2-family LM on the
 synthetic token stream (offline container), comparing DASHA(-MVR) against
 uncompressed distributed SGD at equal *communication* budget.
 
+All loops run through the compiled driver (DESIGN.md §10): batches are
+drawn inside the jitted scan, and each method's 3-gamma stepsize tune is
+one vmapped sweep instead of three sequential replays.
+
 Metric: loss reached per coordinates-sent-per-node.
 """
 from __future__ import annotations
+
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -13,12 +19,15 @@ import jax.numpy as jnp
 from benchmarks.common import emit
 from repro.configs import get_smoke_config
 from repro.data.pipeline import SyntheticTextConfig, make_node_batches
+from repro.methods.driver import run as drive
+from repro.methods.driver import sweep
 from repro.models import init_params, lm
 from repro.optim.base import Adam, apply_updates
-from repro.optim.distributed import (DashaTrainConfig, dasha_train_init,
-                                     make_train_step)
+from repro.optim.distributed import (DashaTrainConfig, make_method,
+                                     payload_frac)
 
 N_NODES, BATCH, SEQ, STEPS = 4, 2, 64, 120
+GAMMAS = (0.0005, 0.001, 0.003)   # paper: tune the stepsize
 
 
 def run():
@@ -36,57 +45,63 @@ def run():
             lambda x: x.reshape((-1,) + x.shape[2:]), b)
         return float(lm.loss_fn(cfg, p, flat)[1]["loss"])
 
+    def data_fn(k, t):
+        return make_node_batches(k, tcfg, N_NODES, BATCH)
+
     rows = []
     fixed_batch = make_node_batches(jax.random.PRNGKey(99), tcfg, N_NODES,
                                     BATCH)
 
-    # --- DASHA variants ---------------------------------------------------
+    # --- DASHA variants: one vmapped 3-gamma sweep each -------------------
     for name, kw in [("dasha_1/32", dict(compression=1 / 32)),
                      ("dasha_mvr_1/32", dict(compression=1 / 32,
                                              variant="mvr", b=0.2)),
                      ("dasha_permk", dict(mode="permk"))]:
-        best = None
-        for gamma in (0.0005, 0.001, 0.003):   # paper: tune the stepsize
+        def method_fn(gamma, kw=kw):
             dcfg = DashaTrainConfig(gamma=gamma, n_nodes=N_NODES,
                                     server_opt="adam", **kw)
-            state = dasha_train_init(params, dcfg, jax.random.PRNGKey(1))
-            step = jax.jit(make_train_step(dcfg, node_loss))
-            k = jax.random.PRNGKey(2)
-            for _ in range(STEPS):
-                k, kb = jax.random.split(k)
-                state, m = step(state, make_node_batches(kb, tcfg, N_NODES,
-                                                         BATCH))
-            fl = eval_loss(state.params, fixed_batch)
+            return make_method(dcfg, node_loss)
+
+        state = method_fn(GAMMAS[0]).init(params, jax.random.PRNGKey(1),
+                                          init_mode="zeros")
+        finals, _ = sweep(method_fn, jnp.array(GAMMAS), state, STEPS,
+                          data_fn=data_fn, data_key=jax.random.PRNGKey(2),
+                          chunk=40)
+        best = None
+        for i, gamma in enumerate(GAMMAS):
+            lane = jax.tree_util.tree_map(lambda l: l[i], finals.x)
+            fl = eval_loss(lane, fixed_batch)
             if best is None or fl < best[0]:
                 best = (fl, gamma)
-        frac = 1 / N_NODES if kw.get("mode") == "permk" \
-            else kw.get("compression", 1 / 32)
+        frac = payload_frac(DashaTrainConfig(gamma=0.0, n_nodes=N_NODES,
+                                             **kw))
         rows.append({"bench": "fig4_dnn", "method": name,
                      "final_loss": round(best[0], 4),
                      "gamma": best[1],
                      "coords_per_node": int(STEPS * frac * d_total),
                      "steps": STEPS})
 
-    # --- uncompressed distributed Adam-SGD baseline ------------------------
+    # --- uncompressed distributed Adam-SGD baseline (same driver) ---------
     opt = Adam(lr=0.003)
-    p, ost = params, opt.init(params)
 
-    @jax.jit
-    def sgd_step(p, ost, batch):
+    class SgdState(NamedTuple):
+        p: Any
+        ost: Any
+        t: jax.Array
+
+    def sgd_step(st, batch):
         def mean_loss(pp):
             losses = jax.vmap(lambda b: node_loss(pp, b))(batch)
             return jnp.mean(losses)
-        g = jax.grad(mean_loss)(p)
-        upd, ost2 = opt.update(g, ost, p)
-        return apply_updates(p, upd), ost2
+        g = jax.grad(mean_loss)(st.p)
+        upd, ost2 = opt.update(g, st.ost, st.p)
+        return SgdState(apply_updates(st.p, upd), ost2, st.t + 1)
 
-    k = jax.random.PRNGKey(2)
-    for _ in range(STEPS):
-        k, kb = jax.random.split(k)
-        p, ost = sgd_step(p, ost, make_node_batches(kb, tcfg, N_NODES,
-                                                    BATCH))
+    st0 = SgdState(params, opt.init(params), jnp.zeros((), jnp.int32))
+    final, _ = drive(sgd_step, st0, STEPS, data_fn=data_fn,
+                     data_key=jax.random.PRNGKey(2), chunk=40)
     rows.append({"bench": "fig4_dnn", "method": "sgd_uncompressed",
-                 "final_loss": round(eval_loss(p, fixed_batch), 4),
+                 "final_loss": round(eval_loss(final.p, fixed_batch), 4),
                  "gamma": 0.003,
                  "coords_per_node": STEPS * d_total, "steps": STEPS})
     return rows

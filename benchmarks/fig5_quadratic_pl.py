@@ -14,10 +14,13 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, randk_compressor
-from repro.core import dasha, theory
+from benchmarks.common import (build_method, emit, problem_metric,
+                               randk_compressor)
+from repro.core import theory
 from repro.core.oracles import StochasticProblem
 from repro.data.pipeline import synthetic_quadratic
+from repro.methods import Hyper
+from repro.methods.driver import sweep
 
 D, K, ROUNDS, B = 256, 2, 3000, 1
 MU, SIGMA2 = 1.0, 1.0
@@ -50,17 +53,31 @@ def run():
     b_large = max(min(1.0 / omega, RATIO ** -1 * SIGMA2 / SIGMA2), b_theory)
     b_large = min(1.0 / omega, 1.0)
 
+    names = ["b_theory", "b_large"]
+    bs = [b_theory, b_large]
+    gs = [theory.gamma_dasha_mvr(2.0, 2.0, 2.0, omega, 1, B, b) * 4
+          for b in bs]
+
+    # BOTH momentum settings run as one vmapped driver sweep over the
+    # {gamma, b} axis (DESIGN.md §10)
+    def method_fn(v):
+        hp = Hyper(gamma=v["gamma"], a=theory.momentum_a(omega),
+                   variant="mvr", b=v["b"], batch=B)
+        return build_method("mvr", problem, comp, hp)
+
+    st = method_fn({"gamma": 0.0, "b": 0.0}).init(
+        jnp.zeros(D), jax.random.PRNGKey(1), init_mode="stoch",
+        batch_init=64)
+    metric = problem_metric(problem)
+    _, traces = sweep(method_fn,
+                      {"gamma": jnp.array(gs), "b": jnp.array(bs)},
+                      st, ROUNDS,
+                      metrics={"metric": lambda s, d: metric(s)})
     rows = []
-    for name, b in [("b_theory", b_theory), ("b_large", b_large)]:
-        gamma = theory.gamma_dasha_mvr(2.0, 2.0, 2.0, omega, 1, B, b) * 4
-        hp = dasha.DashaHyper(gamma=gamma, a=theory.momentum_a(omega),
-                              variant="mvr", b=b, batch=B)
-        st = dasha.init(jnp.zeros(D), 1, jax.random.PRNGKey(1),
-                        problem=problem, init_mode="stoch", batch_init=64)
-        st, trace, _ = dasha.run(st, hp, problem, comp, ROUNDS)
-        floor = float(jnp.mean(trace[-300:]))
+    for i, name in enumerate(names):
+        floor = float(jnp.mean(traces["metric"][i, -300:]))
         rows.append({"bench": "fig5_quadratic_pl", "momentum": name,
-                     "b": round(b, 6), "gamma": round(gamma, 5),
+                     "b": round(bs[i], 6), "gamma": round(gs[i], 5),
                      "grad_sq_floor": floor})
     # tightness: larger b converges to a higher noise floor
     ok = rows[1]["grad_sq_floor"] >= rows[0]["grad_sq_floor"]

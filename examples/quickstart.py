@@ -6,6 +6,9 @@ Five nodes, RandK compression, theory hyperparameters — the gradient-setting
 experiment of the paper (Appendix A.1) at laptop scale, through the
 one-method API (DESIGN.md §7): pick a variant rule, a compressor, a state
 substrate, and let ``Hyper.from_theory`` assemble the Section-6 constants.
+The run itself goes through the compiled driver (DESIGN.md §10), which
+streams a NAMED metric trace — read results from ``traces["grad_sq"]`` /
+``traces["bits_sent"]`` instead of indexing an anonymous scalar array.
 
 ``REPRO_EXAMPLE_ROUNDS`` shrinks the run for CI smoke jobs.
 """
@@ -18,6 +21,7 @@ from repro.compress import make_round_compressor
 from repro.core.oracles import FiniteSumProblem
 from repro.data.pipeline import synthetic_classification
 from repro.methods import FlatSubstrate, Hyper, Method
+from repro.methods import driver
 
 N_NODES, M, D, K = 5, 64, 60, 10
 ROUNDS = int(os.environ.get("REPRO_EXAMPLE_ROUNDS", "500"))
@@ -39,12 +43,17 @@ hyper = Hyper.from_theory("dasha", comp.omega, N_NODES, L=L, gamma_mult=16)
 method = Method.build("dasha", comp, FlatSubstrate(problem, N_NODES, D),
                       hyper)
 
-# 5. run: nodes only ever send K floats per round; no synchronization
+# 5. run: nodes only ever send K floats per round; no synchronization.
+#    The driver executes chunked compiled scans and returns a dict of
+#    named metric traces (plus the coords-sent accounting trace).
 state = method.init(jnp.zeros(D), jax.random.PRNGKey(1))
-state, trace, bits = method.run(state, ROUNDS)
+state, traces = driver.run(
+    method, state, ROUNDS,
+    metrics={"grad_sq": lambda s, d: jnp.sum(problem.grad_f(s.x) ** 2)})
 
+grad_sq, bits = traces["grad_sq"], traces["bits_sent"]
 for t in range(0, ROUNDS, max(ROUNDS // 5, 1)):
-    print(f"round {t:4d}  ||grad f||^2 = {float(trace[t]):.3e}  "
+    print(f"round {t:4d}  ||grad f||^2 = {float(grad_sq[t]):.3e}  "
           f"coords sent/node = {float(bits[t]):.0f}")
-print(f"final ||grad f||^2 = {float(trace[-1]):.3e} "
+print(f"final ||grad f||^2 = {float(grad_sq[-1]):.3e} "
       f"(vs {float(jnp.sum(problem.grad_f(jnp.zeros(D))**2)):.3e} at x0)")

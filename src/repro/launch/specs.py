@@ -132,7 +132,6 @@ def train_spec(cfg: ArchConfig, mesh: Mesh, *, seq: int, global_batch: int,
     from repro.optim.distributed import DashaTrainState
     state_specs = DashaTrainState(
         params=p_specs_f,
-        prev_params=(),
         g=p_specs_f,
         h_local=node_specs(p_specs),
         g_local=node_specs(p_specs),

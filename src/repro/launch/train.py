@@ -2,27 +2,42 @@
 
     PYTHONPATH=src python -m repro.launch.train --arch starcoder2-3b \
         --steps 200 --nodes 4 --batch 2 --seq 128 [--smoke/--full] \
-        --compression 0.03125 --variant dasha [--ckpt out/ckpt]
+        --compression 0.03125 --variant dasha \
+        [--ckpt out/ckpt --ckpt-every 1 --resume]
+
+The whole experiment now runs through the compiled driver (DESIGN.md §10):
+batches are drawn INSIDE the jitted scan (``data_fn``), so the per-step
+host round-trip of the old Python loop (eager batch generation +
+``eval_loss`` + metric ``float()`` casts serializing against the device)
+is gone — the host only wakes up once per ``--chunk`` rounds to log and
+checkpoint.  Checkpoints hold the FULL ``MethodState`` (params, h_i, g_i,
+optimizer state, RNG key, round counter), so ``--resume`` continues
+bit-identically with the same data stream (per-round data keys are
+``fold_in(data_seed, t)``).
 
 On this CPU container the driver runs the REDUCED (smoke) config of the
-selected architecture family on a 1-device mesh — the same code path that the
-dry-run lowers for the 256/512-chip production meshes.  ``--full`` selects
-the assigned full config (only sensible on a real cluster).
+selected architecture family on a 1-device mesh — the same code path that
+the dry-run lowers for the 256/512-chip production meshes.  ``--full``
+selects the assigned full config (only sensible on a real cluster).
+``REPRO_EXAMPLE_ROUNDS`` overrides ``--steps`` for CI smoke jobs.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 
-from repro.checkpoint.io import save_checkpoint
+from repro.checkpoint.io import (checkpoint_step, load_method_state,
+                                 save_method_state)
 from repro.configs import get_config, get_smoke_config
 from repro.data.pipeline import SyntheticTextConfig, make_node_batches
+from repro.methods.driver import Driver
 from repro.models import init_params, lm
-from repro.optim.distributed import (DashaTrainConfig, dasha_train_init,
-                                     make_train_step)
+from repro.optim.distributed import (DashaTrainConfig, make_method,
+                                     payload_frac)
 
 
 def main(argv=None) -> int:
@@ -30,7 +45,8 @@ def main(argv=None) -> int:
     ap.add_argument("--arch", default="starcoder2-3b")
     ap.add_argument("--full", action="store_true",
                     help="use the full assigned config (cluster only)")
-    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--steps", type=int,
+                    default=int(os.environ.get("REPRO_EXAMPLE_ROUNDS", 100)))
     ap.add_argument("--nodes", type=int, default=4)
     ap.add_argument("--batch", type=int, default=2, help="per-node batch")
     ap.add_argument("--seq", type=int, default=128)
@@ -46,7 +62,15 @@ def main(argv=None) -> int:
     ap.add_argument("--server-opt", default="adam", choices=["sgd", "adam"])
     ap.add_argument("--use-kernel", action="store_true",
                     help="fused Pallas dasha_update path")
-    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt", default=None,
+                    help="full-MethodState checkpoint directory")
+    ap.add_argument("--ckpt-every", type=int, default=1,
+                    help="checkpoint cadence in chunks")
+    ap.add_argument("--resume", action="store_true",
+                    help="continue from --ckpt (bit-identical to an "
+                         "uninterrupted run)")
+    ap.add_argument("--chunk", type=int, default=None,
+                    help="scan-segment length (default: --log-every)")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -69,8 +93,15 @@ def main(argv=None) -> int:
     def node_loss(p, b):
         return lm.loss_fn(cfg, p, b)[0]
 
-    state = dasha_train_init(params, dasha, k_state)
-    step = jax.jit(make_train_step(dasha, node_loss))
+    method = make_method(dasha, node_loss)
+    state = method.init(params, k_state, init_mode="zeros")
+    done = 0
+    if args.resume:
+        if not args.ckpt:
+            raise SystemExit("--resume requires --ckpt")
+        state = load_method_state(args.ckpt, state)
+        done = checkpoint_step(args.ckpt)
+        print(f"[train] resumed from {args.ckpt} at step {done}")
 
     tcfg = SyntheticTextConfig(vocab_size=cfg.vocab_size, seq_len=args.seq)
     data_kw = {}
@@ -81,24 +112,47 @@ def main(argv=None) -> int:
         data_kw = dict(with_frames=cfg.num_audio_frames,
                        d_model=cfg.d_model, dtype=cfg.jax_dtype)
 
-    eval_loss = jax.jit(lambda p, b: lm.loss_fn(
-        cfg, p, jax.tree_util.tree_map(
-            lambda x: x.reshape((-1,) + x.shape[2:]), b))[1]["loss"])
+    def data_fn(k, t):
+        return make_node_batches(k, tcfg, args.nodes, args.batch, **data_kw)
 
+    def g_norm_sq(s, b):
+        return sum(jnp.sum(jnp.square(x))
+                   for x in jax.tree_util.tree_leaves(s.g))
+
+    # held-out eval batch, evaluated once per chunk at the logged step
+    # (fresh — not a scan-held value from the chunk's first round)
+    k_data, k_eval = jax.random.split(k_data)
+    eval_batch = jax.tree_util.tree_map(
+        lambda x: x.reshape((-1,) + x.shape[2:]),
+        make_node_batches(k_eval, tcfg, args.nodes, args.batch, **data_kw))
+    eval_loss = jax.jit(lambda p: lm.loss_fn(cfg, p, eval_batch)[1]["loss"])
+
+    frac = payload_frac(dasha)
+    chunk = args.chunk or args.log_every
+    drv = Driver(method, data_fn=data_fn,
+                 metrics={"g_norm_sq": g_norm_sq}, chunk=chunk)
     t0 = time.time()
-    for t in range(args.steps):
-        k_data, k_b = jax.random.split(k_data)
-        batch = make_node_batches(k_b, tcfg, args.nodes, args.batch, **data_kw)
-        state, metrics = step(state, batch)
-        if t % args.log_every == 0 or t == args.steps - 1:
-            lo = float(eval_loss(state.params, batch))
-            gn = float(metrics["g_norm_sq"])
-            print(f"[train] step {t:5d} loss={lo:.4f} |g|^2={gn:.3e} "
-                  f"payload={float(metrics['payload_frac']):.4f} "
-                  f"({time.time()-t0:.1f}s)")
+
+    def hook(ms, t, tr):
+        print(f"[train] step {done + t:5d} "
+              f"loss={float(eval_loss(ms.x)):.4f} "
+              f"|g|^2={float(tr['g_norm_sq'][-1]):.3e} "
+              f"payload={frac:.4f} "
+              f"coords/node={float(ms.bits_sent):.3e} "
+              f"({time.time()-t0:.1f}s)")
+        if args.ckpt:
+            save_method_state(args.ckpt, ms, step=int(ms.t))
+
+    remaining = args.steps - done
+    if remaining <= 0:
+        print(f"[train] checkpoint already at step {done} >= {args.steps}")
+        return 0
+    state, _ = drv.run(state, remaining, data_key=k_data,
+                       checkpoint=hook, checkpoint_every=args.ckpt_every)
     if args.ckpt:
-        save_checkpoint(args.ckpt, state.params, step=args.steps)
-        print(f"[train] saved params to {args.ckpt}")
+        print(f"[train] saved full method state to {args.ckpt}")
+    sps = remaining / max(time.time() - t0, 1e-9)
+    print(f"[train] done: {remaining} rounds at {sps:.2f} steps/s")
     return 0
 
 

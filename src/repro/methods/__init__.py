@@ -7,10 +7,14 @@
   handful of ops the skeleton needs;
 * :mod:`repro.methods.engine`     — Method.build(variant, compressor,
   substrate, hyper) -> (init, step, run), Hyper.from_theory;
+* :mod:`repro.methods.driver`     — the compiled run driver: chunked
+  donated scans, in-jit data, named-metric traces, checkpoint hooks, and
+  vmapped hyperparameter sweeps (DESIGN.md §10);
 * :mod:`repro.methods.accounting` — unified payload accounting.
 """
 from repro.methods.accounting import (expected_payload_frac,  # noqa: F401
                                       round_payload)
+from repro.methods.driver import Driver, sweep  # noqa: F401
 from repro.methods.engine import Hyper, Method, MethodState  # noqa: F401
 from repro.methods.rules import (VARIANTS, MvrFusion,  # noqa: F401
                                  VariantRule, get_rule, register_variant)

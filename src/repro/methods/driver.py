@@ -1,0 +1,271 @@
+"""The compiled experiment driver (DESIGN.md §10).
+
+Every run loop in the repo is a caller of this module: ``run(method, state,
+rounds, ...)`` executes rounds in chunked ``jax.lax.scan`` segments whose
+carry is donated back to XLA (``jax.jit(..., donate_argnums=(0,))``), so the
+h/g/opt buffers of long runs never double-allocate; data is drawn *inside*
+the scan via ``data_fn(key, t)`` (no per-step host round-trip); metrics
+stream out as a NAMED dict trace per chunk; and a checkpoint hook fires
+between chunks for resumable runs.
+
+Key contracts:
+
+* **Chunking is invisible**: the step sequence of a chunked run is the step
+  sequence of one monolithic scan (the method's RNG lives in its state), so
+  ``chunk`` is a compile-time/memory knob, never a semantics knob.
+* **Data keys are stateless**: the per-round data key is
+  ``fold_in(data_key, state.t)`` — no key chain in the carry — so a
+  checkpoint-restored run regenerates the SAME data stream as an
+  uninterrupted one (resume bit-identity, tested in tests/test_driver.py).
+* **Donation is safe**: the caller's input state is defensively copied
+  before the first donating call; only driver-internal carries are donated.
+  On backends without donation support (CPU) donation is auto-disabled.
+* ``sweep(method_fn, values, state, rounds, ...)`` vmaps the chunk runner
+  over a hyperparameter axis (the Appendix-A powers-of-two stepsize tunes):
+  G methods compile ONCE and run as one batched scan.
+
+``method`` may be a :class:`repro.methods.Method` or a bare
+``step(state, data) -> state`` callable; any state NamedTuple works —
+``bits_sent`` is traced when present, and ``state.t`` (when present) indexes
+the data stream, falling back to the driver's own round counter.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+MetricFn = Callable[[Any, Any], jax.Array]       # (state, data) -> scalar
+
+#: default scan-segment length; a pure compile-time/memory knob
+DEFAULT_CHUNK = 128
+
+
+def _resolve_step(method) -> Callable:
+    return method.step if hasattr(method, "step") else method
+
+
+def _round_index(state, i):
+    """The global round counter: ``state.t`` when the state carries one
+    (survives checkpoint-resume), else the driver's own per-run counter."""
+    t = getattr(state, "t", None)
+    return i if t is None else t
+
+
+def _scan_chunk(step, data_fn, data, metrics: Dict[str, MetricFn],
+                metric_every: int, length: int, carry, data_key):
+    """One donated scan segment: carry = (state, i0, last-metric dict)."""
+
+    def body(c, j):
+        st, i0, last = c
+        # pre-step global round index: drives BOTH the data key and the
+        # metric cadence, so a resumed run draws the same batches and
+        # evaluates metrics at the same global rounds as an uninterrupted
+        # one (the held value between evaluations restarts at 0 per run()
+        # call — metric_every=1, the default, holds nothing)
+        t = _round_index(st, i0 + j)
+        d = data if data_fn is None else \
+            data_fn(jax.random.fold_in(data_key, t), t)
+        new = step(st, d)
+        vals = {}
+        for name, fn in metrics.items():
+            if metric_every > 1:
+                vals[name] = jax.lax.cond(t % metric_every == 0,
+                                          lambda _: fn(new, d),
+                                          lambda _: last[name], None)
+            else:
+                vals[name] = fn(new, d)
+        out = dict(vals)
+        bits = getattr(new, "bits_sent", None)
+        if bits is not None:
+            out["bits_sent"] = bits
+        return (new, i0, vals), out
+
+    (state, i0, last), traces = jax.lax.scan(body, carry,
+                                             jnp.arange(length, dtype=jnp.int32))
+    return (state, i0 + length, last), traces
+
+
+def _metric_zeros(metrics: Dict[str, MetricFn], state, data_template,
+                  batch_shape: Tuple[int, ...] = ()):
+    """Initial "last evaluated value" per metric (matches the engine's
+    seed-era m0 = zeros contract for metric_every > 1)."""
+    out = {}
+    for name, fn in metrics.items():
+        s = jax.eval_shape(fn, state, data_template)
+        out[name] = jnp.zeros(batch_shape + s.shape, s.dtype)
+    return out
+
+
+def _data_template(data_fn, data, data_key):
+    if data_fn is None:
+        return data
+    return jax.eval_shape(data_fn, data_key,
+                          jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def _empty_traces(metrics, state, data_template, bits: bool):
+    tr = {name: jnp.zeros((0,) + s.shape, s.dtype)
+          for name, s in ((n, jax.eval_shape(f, state, data_template))
+                          for n, f in metrics.items())}
+    if bits:
+        tr["bits_sent"] = jnp.zeros((0,), jnp.float32)
+    return tr
+
+
+class Driver:
+    """Reusable compiled runner for one (method, data, metrics) config.
+
+    ``Driver(method, ...).run(state, rounds)`` keeps the jitted chunk
+    functions cached across calls, so repeated runs (resumed runs, repeated
+    experiments) recompile nothing.
+    """
+
+    def __init__(self, method, *, data_fn=None, data=None,
+                 metrics: Optional[Dict[str, MetricFn]] = None,
+                 metric_every: int = 1, chunk: Optional[int] = None,
+                 donate: Optional[bool] = None):
+        if data_fn is not None and data is not None:
+            raise ValueError("pass data_fn (in-jit) OR data (static), "
+                             "not both")
+        self.step = _resolve_step(method)
+        self.data_fn = data_fn
+        self.data = data
+        self.metrics = dict(metrics or {})
+        self.metric_every = int(metric_every)
+        self.chunk = chunk
+        if donate is None:
+            # donation is unimplemented on CPU (jax warns and ignores it)
+            donate = jax.default_backend() != "cpu"
+        self.donate = bool(donate)
+        self._compiled: Dict[int, Callable] = {}
+
+    def _chunk_fn(self, length: int) -> Callable:
+        fn = self._compiled.get(length)
+        if fn is None:
+            def run_chunk(carry, data_key):
+                return _scan_chunk(self.step, self.data_fn, self.data,
+                                   self.metrics, self.metric_every, length,
+                                   carry, data_key)
+            fn = jax.jit(run_chunk,
+                         donate_argnums=(0,) if self.donate else ())
+            self._compiled[length] = fn
+        return fn
+
+    def run(self, state, rounds: int, *, data_key: Optional[jax.Array] = None,
+            checkpoint: Optional[Callable] = None,
+            checkpoint_every: int = 1):
+        """Drive ``rounds`` rounds; returns ``(final_state, traces)`` with
+        ``traces`` a dict of length-``rounds`` arrays (named metrics plus
+        ``bits_sent`` when the state carries it).
+
+        ``checkpoint(state, rounds_done, chunk_traces)`` fires after every
+        ``checkpoint_every``-th chunk and after the final one.
+        """
+        if self.data_fn is not None and data_key is None:
+            raise ValueError("data_fn requires an explicit data_key")
+        if data_key is None:
+            data_key = jax.random.PRNGKey(0)        # unused
+        template = _data_template(self.data_fn, self.data, data_key)
+        if rounds <= 0:
+            return state, _empty_traces(
+                self.metrics, state, template,
+                bits=hasattr(state, "bits_sent"))
+        if self.donate:
+            # the first donating call would invalidate the caller's buffers
+            state = jax.tree_util.tree_map(jnp.copy, state)
+        chunk = self.chunk or min(rounds, DEFAULT_CHUNK)
+        carry = (state, jnp.zeros((), jnp.int32),
+                 _metric_zeros(self.metrics, state, template))
+        done, n_chunk, parts = 0, 0, []
+        while done < rounds:
+            length = min(chunk, rounds - done)
+            carry, tr = self._chunk_fn(length)(carry, data_key)
+            done += length
+            n_chunk += 1
+            parts.append(tr)
+            if checkpoint is not None and \
+                    (done >= rounds or n_chunk % checkpoint_every == 0):
+                checkpoint(carry[0], done, tr)
+        traces = {k: jnp.concatenate([p[k] for p in parts])
+                  for k in parts[0]}
+        return carry[0], traces
+
+
+def run(method, state, rounds: int, *, data_fn=None, data=None,
+        data_key=None, metrics=None, metric_every: int = 1,
+        chunk: Optional[int] = None, checkpoint=None,
+        checkpoint_every: int = 1, donate: Optional[bool] = None):
+    """One-shot convenience over :class:`Driver` (see its docs)."""
+    drv = Driver(method, data_fn=data_fn, data=data, metrics=metrics,
+                 metric_every=metric_every, chunk=chunk, donate=donate)
+    return drv.run(state, rounds, data_key=data_key, checkpoint=checkpoint,
+                   checkpoint_every=checkpoint_every)
+
+
+# ---------------------------------------------------------------------------
+# vmapped hyperparameter sweeps (Appendix A stepsize tunes)
+# ---------------------------------------------------------------------------
+
+def sweep(method_fn, values, state, rounds: int, *, data_fn=None, data=None,
+          data_key=None, metrics: Optional[Dict[str, MetricFn]] = None,
+          metric_every: int = 1, chunk: Optional[int] = None,
+          donate: Optional[bool] = None):
+    """Vmap the chunked driver over a hyperparameter axis.
+
+    ``method_fn(value) -> Method`` is traced ONCE with a batched tracer for
+    ``value`` — the value must only enter arithmetic (a stepsize, a momentum
+    b), never Python control flow.  ``values`` is an array or a pytree of
+    same-length arrays (e.g. ``{"gamma": ..., "b": ...}``); ``state`` is one
+    init state, broadcast across the G lanes (every lane starts from the
+    same iterate and RNG key, the paper's tuning protocol — lane j of the
+    result is bit-equal to a sequential run at ``values[j]``).
+
+    Returns ``(final_states, traces)`` with a leading (G,) axis on every
+    state leaf and (G, rounds) traces.
+    """
+    values = jax.tree_util.tree_map(jnp.asarray, values)
+    leaves = jax.tree_util.tree_leaves(values)
+    if not leaves:
+        raise ValueError("sweep needs at least one value axis")
+    G = leaves[0].shape[0]
+    metrics = dict(metrics or {})
+    if data_fn is not None and data_key is None:
+        raise ValueError("data_fn requires an explicit data_key")
+    if data_key is None:
+        data_key = jax.random.PRNGKey(0)            # unused
+    template = _data_template(data_fn, data, data_key)
+    if donate is None:
+        donate = jax.default_backend() != "cpu"
+    chunk = chunk or min(rounds, DEFAULT_CHUNK)
+
+    compiled: Dict[int, Callable] = {}
+
+    def chunk_fn(length):
+        fn = compiled.get(length)
+        if fn is None:
+            def vrun(vals, carry, dk):
+                def one(v, c):
+                    step = _resolve_step(method_fn(v))
+                    return _scan_chunk(step, data_fn, data, metrics,
+                                       metric_every, length, c, dk)
+                return jax.vmap(one)(vals, carry)
+            fn = jax.jit(vrun, donate_argnums=(1,) if donate else ())
+            compiled[length] = fn
+        return fn
+
+    stacked = jax.tree_util.tree_map(
+        lambda l: jnp.tile(l, (G,) + (1,) * jnp.ndim(l)), state)
+    carry = (stacked, jnp.zeros((G,), jnp.int32),
+             _metric_zeros(metrics, state, template, batch_shape=(G,)))
+    done, parts = 0, []
+    while done < rounds:
+        length = min(chunk, rounds - done)
+        carry, tr = chunk_fn(length)(values, carry, data_key)
+        done += length
+        parts.append(tr)
+    traces = {k: jnp.concatenate([p[k] for p in parts], axis=1)
+              for k in parts[0]} if parts else {}
+    return carry[0], traces

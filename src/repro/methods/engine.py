@@ -155,30 +155,31 @@ class Method(NamedTuple):
                                bits_sent=state.bits_sent + payload)
 
         def run(state: MethodState, num_rounds: int, *,
-                metric_every: int = 1, metric_fn=None, data=None):
-            """T rounds under jax.lax.scan; returns (final, metric trace,
-            cumulative payload trace).  ``metric_fn(state) -> scalar``
-            defaults to ||grad f(x)||^2 when the substrate's problem
-            exposes an exact gradient.  ``metric_every > 1`` evaluates the
-            metric only on every k-th round (the trace stays length T,
-            holding the last evaluated value in between — metrics like the
-            exact gradient norm can dominate step cost)."""
+                metric_every: int = 1, metric_fn=None, data=None,
+                chunk=None, checkpoint=None, checkpoint_every: int = 1):
+            """T rounds through the compiled driver (DESIGN.md §10);
+            returns (final, metric trace, cumulative payload trace) —
+            the seed's RNG/trace contract.  Results are bit-invariant
+            across chunk sizes; vs the retired monolithic scan they can
+            differ at the last ulp (XLA fusion depends on the scan-body
+            shape — compare across shapes with tolerances, DESIGN.md §10).
+
+            ``metric_fn(state) -> scalar`` defaults to ||grad f(x)||^2
+            when the substrate's problem exposes an exact gradient.
+            ``metric_every > 1`` evaluates the metric only on every k-th
+            round (the trace stays length T, holding the last evaluated
+            value in between — metrics like the exact gradient norm can
+            dominate step cost).  ``chunk`` / ``checkpoint`` /
+            ``checkpoint_every`` pass through to the driver (chunking
+            never changes results; the hook enables resumable runs)."""
+            from repro.methods.driver import run as drive
             if metric_fn is None:
                 metric_fn = sub.default_metric()
-
-            def body(carry, i):
-                st, last = carry
-                new = step(st, data)
-                if metric_every > 1:
-                    m = jax.lax.cond(i % metric_every == 0, metric_fn,
-                                     lambda s: last, new)
-                else:
-                    m = metric_fn(new)
-                return (new, m), (m, new.bits_sent)
-
-            m0 = jnp.zeros((), jax.eval_shape(metric_fn, state).dtype)
-            (final, _), (trace, bits) = jax.lax.scan(
-                body, (state, m0), jnp.arange(num_rounds))
-            return final, trace, bits
+            final, traces = drive(
+                step, state, num_rounds, data=data,
+                metrics={"metric": lambda s, d: metric_fn(s)},
+                metric_every=metric_every, chunk=chunk,
+                checkpoint=checkpoint, checkpoint_every=checkpoint_every)
+            return final, traces["metric"], traces["bits_sent"]
 
         return cls(init=init, step=step, run=run)

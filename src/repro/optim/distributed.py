@@ -91,10 +91,13 @@ class DashaTrainConfig:
 
 
 class DashaTrainState(NamedTuple):
+    """Trainer-facing state; ``prev_params`` (dead since the methods-layer
+    refactor — both gradient points of an MVR round are evaluated inside
+    the same step) is RETIRED from the structure.  v1 checkpoints that
+    still carry it restore through the versioned format's field-name shim
+    (:func:`repro.checkpoint.io.load_state`)."""
+
     params: PyTree        # replicated over nodes, sharded over "model"
-    prev_params: PyTree   # retired (always ()); kept for state-structure
-                          # compat — both gradient points of an MVR round
-                          # are evaluated inside the same step
     g: PyTree             # server estimator (like params, fp32)
     h_local: PyTree       # per-node h_i: leading node axis
     g_local: PyTree       # per-node g_i
@@ -129,21 +132,23 @@ def dasha_train_init(params: PyTree, cfg: DashaTrainConfig,
     g = jax.tree_util.tree_map(
         lambda h: jnp.mean(h.astype(jnp.float32), 0), per_node)
     opt = _server_opt(cfg)
-    return DashaTrainState(params=params, prev_params=(), g=g,
+    return DashaTrainState(params=params, g=g,
                            h_local=per_node, g_local=per_node,
                            opt_state=opt.init(params), key=key,
                            step=jnp.zeros((), jnp.int32))
 
 
-def make_train_step(cfg: DashaTrainConfig,
-                    loss_fn: Callable[[PyTree, Any], jax.Array],
-                    grad_specs: Optional[PyTree] = None
-                    ) -> Callable[[DashaTrainState, Any],
-                                  Tuple[DashaTrainState, dict]]:
-    """Build the jit-able train step for ANY registry variant.
+def make_method(cfg: DashaTrainConfig,
+                loss_fn: Callable[[PyTree, Any], jax.Array],
+                grad_specs: Optional[PyTree] = None) -> Method:
+    """The trainer's Method (variant rule x TreeCompression x
+    TreeSubstrate) as a first-class object, for direct use with the
+    compiled run driver (:mod:`repro.methods.driver`, DESIGN.md §10):
+    ``method.init(params, key, init_mode="zeros")`` then
+    ``driver.run(method, state, rounds, data_fn=..., ...)``.
 
-    ``loss_fn(params, node_batch) -> scalar``; the returned step takes
-    ``batch`` with a leading node axis (n, ...) sharded over ("pod","data").
+    ``loss_fn(params, node_batch) -> scalar``; steps take ``batch`` with a
+    leading node axis (n, ...) sharded over ("pod","data").
     ``grad_specs``: optional per-param PartitionSpecs (no node axis) pinned
     onto each node's gradient so the scan-backward accumulators compile
     sharded (the vmap spmd_axis_name lifts in the node axis).
@@ -164,12 +169,47 @@ def make_train_step(cfg: DashaTrainConfig,
                               state_dtype=cfg.jax_state_dtype)
     comp = TreeCompression(mode=cfg.mode, p=cfg.compression, n=cfg.n_nodes,
                            use_kernel=cfg.use_kernel, specs=node_full_specs)
-    hyper = cfg.hyper
-    method = Method.build(cfg.variant, comp, substrate, hyper)
-    # static expectation: compressed fraction + the sync rounds' dense
-    # uploads (SYNC-MVR's prob-p megabatch), via the ONE accounting helper
-    frac = expected_payload_frac(get_rule(cfg.variant), hyper,
+    return Method.build(cfg.variant, comp, substrate, cfg.hyper)
+
+
+def payload_frac(cfg: DashaTrainConfig) -> float:
+    """Static E[coords sent]/d: the compressor's fraction
+    (TreeCompression.static_frac — the ONE mode->fraction rule) + the sync
+    rounds' dense uploads (SYNC-MVR's prob-p megabatch), via the ONE
+    accounting helper."""
+    comp = TreeCompression(mode=cfg.mode, p=cfg.compression,
+                           n=cfg.n_nodes)
+    return expected_payload_frac(get_rule(cfg.variant), cfg.hyper,
                                  comp.static_frac)
+
+
+def method_state(state: DashaTrainState,
+                 bits_sent: Optional[jax.Array] = None) -> MethodState:
+    """View a trainer state as the engine's MethodState."""
+    if bits_sent is None:
+        bits_sent = jnp.zeros((), jnp.float32)
+    return MethodState(x=state.params, g=state.g, g_local=state.g_local,
+                       h_local=state.h_local, opt_state=state.opt_state,
+                       key=state.key, t=state.step, bits_sent=bits_sent)
+
+
+def train_state(ms: MethodState) -> DashaTrainState:
+    """Project a MethodState back onto the trainer state (drops the
+    cumulative ``bits_sent`` — the trainer traces it as a metric)."""
+    return DashaTrainState(params=ms.x, g=ms.g, h_local=ms.h_local,
+                           g_local=ms.g_local, opt_state=ms.opt_state,
+                           key=ms.key, step=ms.t)
+
+
+def make_train_step(cfg: DashaTrainConfig,
+                    loss_fn: Callable[[PyTree, Any], jax.Array],
+                    grad_specs: Optional[PyTree] = None
+                    ) -> Callable[[DashaTrainState, Any],
+                                  Tuple[DashaTrainState, dict]]:
+    """Build the jit-able train step for ANY registry variant (thin wrapper
+    over :func:`make_method`; see it for the argument contracts)."""
+    method = make_method(cfg, loss_fn, grad_specs)
+    frac = payload_frac(cfg)
 
     def step(state: DashaTrainState, batch) -> Tuple[DashaTrainState, dict]:
         # NOTE: jnp.sum(x*x), NOT jnp.vdot — vdot ravels each leaf, which
@@ -177,17 +217,10 @@ def make_train_step(cfg: DashaTrainConfig,
         # for a 16B model) just to compute a scalar metric.
         gn = sum(jnp.sum(jnp.square(x))
                  for x in jax.tree_util.tree_leaves(state.g))
-        ms = MethodState(x=state.params, g=state.g, g_local=state.g_local,
-                         h_local=state.h_local, opt_state=state.opt_state,
-                         key=state.key, t=state.step,
-                         bits_sent=jnp.zeros((), jnp.float32))
-        ms = method.step(ms, batch)
+        ms = method.step(method_state(state), batch)
         metrics = {"g_norm_sq": gn,
                    "payload_frac": jnp.float32(frac),
                    "payload_coords": ms.bits_sent}
-        return DashaTrainState(params=ms.x, prev_params=(), g=ms.g,
-                               h_local=ms.h_local, g_local=ms.g_local,
-                               opt_state=ms.opt_state, key=ms.key,
-                               step=ms.t), metrics
+        return train_state(ms), metrics
 
     return step

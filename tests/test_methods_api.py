@@ -349,12 +349,17 @@ def test_metric_every_subsamples_and_matches_dense_trace():
         np.testing.assert_allclose(t4[i], t1[4 * (i // 4)], rtol=1e-6)
 
 
-def test_trainer_state_has_no_dead_prev_params_copy():
+def test_trainer_state_has_no_dead_prev_params_field():
+    """The dead seed-era prev_params slot is RETIRED from the state
+    structure itself (v1 checkpoints restore through the versioned
+    field-name shim, tested in test_driver.py)."""
+    from repro.optim.distributed import DashaTrainState
+    assert "prev_params" not in DashaTrainState._fields
     params, loss, make_batch = _mlp_problem()
     cfg = DashaTrainConfig(gamma=0.05, compression=0.5, variant="mvr",
                            b=0.3, n_nodes=2)
     state = dasha_train_init(params, cfg, jax.random.PRNGKey(14))
-    assert state.prev_params == ()
     state, _ = jax.jit(make_train_step(cfg, loss))(
         state, make_batch(jax.random.PRNGKey(15), 2))
-    assert state.prev_params == ()
+    assert set(state._fields) == {"params", "g", "h_local", "g_local",
+                                  "opt_state", "key", "step"}
