@@ -77,6 +77,24 @@ def lipschitz_glm(problem: FiniteSumProblem) -> float:
     return float(jnp.mean(jnp.sum(a * a, -1)) * 2.0)
 
 
+def theory_hyper(variant: str, omega: float, L: float, *, d: int, k: int,
+                 n: int = N_NODES, m: int = 64, B: int = 8,
+                 gamma_mult: float = 4.0):
+    """The fed bench/tests' per-variant ``Hyper.from_theory`` kwargs table
+    in ONE place: mvr-family variants get the stochastic constants, page
+    gets the finite-sum pair, sync-round variants get zeta/d for their
+    coin probability."""
+    kw = {}
+    if variant in ("mvr", "sync_mvr"):
+        kw = dict(B=B, sigma2=0.1, L_sigma=L)
+    if variant == "page":
+        kw = dict(B=B, m=m)
+    if variant in ("sync_mvr", "marina"):
+        kw.update(zeta=float(k), d=d)
+    return Hyper.from_theory(variant, omega, n, L=L, gamma_mult=gamma_mult,
+                             **kw)
+
+
 def problem_metric(problem):
     """||grad f(x)||^2 from whichever exact gradient the problem exposes."""
     if hasattr(problem, "grad_f"):

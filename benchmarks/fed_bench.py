@@ -1,0 +1,207 @@
+"""Federated transport bench: the paper's "no client synchronization"
+claim as MEASURED wall-clock and bytes (DESIGN.md §12).
+
+Two experiments, emitted to ``BENCH_fed.json``:
+
+1. **Wall-clock vs straggler severity.** DASHA, DASHA under Appendix-D
+   partial participation, and MARINA run through the event-driven
+   simulator on the same GLM problem, same RandK compressor, and the SAME
+   network draws (common random numbers), while the straggler severity
+   (half-lognormal sigma) sweeps.  MARINA's prob-p synchronization rounds
+   ship a dense upload from every client through the same heavy tail, so
+   its wall-clock must degrade strictly faster than DASHA's — the bench
+   records the degradation curves and checks the gap widens monotonically.
+
+2. **Measured vs analytic payload.** For all five variants the codec's
+   measured bytes are reconciled against the accounting layer:
+   Definition-1.3 value bytes vs ``expected_payload_frac`` and total wire
+   bytes vs ``expected_wire_coords`` (sync megabatch rounds included).
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.run --only fed
+    PYTHONPATH=src python -m benchmarks.fed_bench [--smoke]
+
+Env: ``REPRO_BENCH_QUICK=1`` (or ``--smoke``) shrinks d / rounds for CI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import sys
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (N_NODES, glm_problem, lipschitz_glm,
+                               theory_hyper)
+from repro.compress import make_round_compressor
+from repro.fed import wire
+from repro.fed.net import Constant, LinkModel, Lognormal
+from repro.fed.sim import FedSim
+from repro.methods import FlatSubstrate
+from repro.methods.accounting import (expected_payload_frac,
+                                      expected_wire_coords)
+from repro.methods.rules import get_rule
+
+QUICK = bool(os.environ.get("REPRO_BENCH_QUICK"))
+
+D = 1024 if QUICK else 4096
+K = max(D // 64, 8)
+M = 16                      # samples per node (compute cost is not the point)
+ROUNDS = 80 if QUICK else 240
+PAYLOAD_ROUNDS = 160 if QUICK else 400
+SIGMAS = (0.0, 1.0, 2.0) if QUICK else (0.0, 0.5, 1.0, 1.5, 2.0)
+SEED = 7
+
+#: WAN-ish client links; uplink is the bottleneck (and carries the
+#: straggler tail), so dense sync uploads are where rounds go to die
+UP_BW, DOWN_BW, LATENCY = 1e6, 1e8, 1e-3
+
+
+def _problem():
+    prob = glm_problem(d=D, m=M)
+    return prob, FlatSubstrate(prob, N_NODES, D), lipschitz_glm(prob)
+
+
+def _hyper(variant, rc, L):
+    return theory_hyper(variant, rc.omega, L, d=D, k=K, m=M)
+
+
+def _links(sigma: float):
+    strag = Lognormal(sigma) if sigma > 0 else Constant()
+    return (LinkModel(latency_s=LATENCY, bandwidth_Bps=UP_BW,
+                      straggler=strag),
+            LinkModel(latency_s=LATENCY, bandwidth_Bps=DOWN_BW))
+
+
+def _wall(variant, rc, sub, hp, sigma) -> Dict[str, float]:
+    up, down = _links(sigma)
+    sim = FedSim(variant, rc, sub, hp, uplink=up, downlink=down,
+                 compute_s=0.0, seed=SEED)
+    st = sim.init(jnp.zeros(D), jax.random.PRNGKey(1))
+    res = sim.run(st, ROUNDS)
+    return res.summary
+
+
+def straggler_curves() -> Dict:
+    """Experiment 1: wall-clock vs severity, common random numbers."""
+    prob, sub, L = _problem()
+    rc = make_round_compressor("randk", D, N_NODES, k=K, backend="sparse")
+    rc_pp = make_round_compressor("randk", D, N_NODES, k=K,
+                                  backend="sparse", p_participate=0.5)
+    # MARINA's own tuning: p = zeta/d would fire ~ROUNDS*K/D sync rounds;
+    # keep it but floor so short runs always see the barrier
+    hp_m = _hyper("marina", rc, L)
+    hp_m = dataclasses.replace(hp_m, p=max(hp_m.p, 8.0 / ROUNDS))
+    methods = {
+        "dasha": ("dasha", rc, _hyper("dasha", rc, L)),
+        "dasha_pp": ("dasha", rc_pp, _hyper("dasha", rc_pp, L)),
+        "marina": ("marina", rc, hp_m),
+    }
+    curves = {name: [] for name in methods}
+    sync_counts = {}
+    for sigma in SIGMAS:
+        for name, (variant, rc_, hp) in methods.items():
+            s = _wall(variant, rc_, sub, hp, sigma)
+            curves[name].append(s["wall_clock_s"])
+            sync_counts[name] = s["sync_rounds"]
+    base = {name: c[0] for name, c in curves.items()}
+    degradation = {name: [w - base[name] for w in c]
+                   for name, c in curves.items()}
+    gaps = [m - d for m, d in zip(curves["marina"], curves["dasha"])]
+    ok = all(degradation["marina"][i] > degradation["dasha"][i]
+             for i in range(1, len(SIGMAS))) \
+        and all(gaps[i] > gaps[i - 1] for i in range(1, len(gaps)))
+    return {"sigmas": list(SIGMAS), "wall_clock_s": curves,
+            "degradation_s": degradation, "marina_minus_dasha_s": gaps,
+            "sync_rounds": sync_counts, "rounds": ROUNDS,
+            "no_sync_advantage_ok": ok}
+
+
+def payload_table() -> Dict:
+    """Experiment 2: measured vs analytic payload, all five variants."""
+    prob, sub, L = _problem()
+    rc = make_round_compressor("randk", D, N_NODES, k=K, backend="sparse")
+    wire_coords = rc.spec.wire_coords("independent")
+    out = {}
+    for variant in ("dasha", "page", "mvr", "sync_mvr", "marina"):
+        hp = _hyper(variant, rc, L)
+        sim = FedSim(variant, rc, sub, hp, seed=SEED)
+        st = sim.init(jnp.zeros(D), jax.random.PRNGKey(1))
+        res = sim.run(st, PAYLOAD_ROUNDS)
+        rule = get_rule(variant)
+        measured_frac = float(res.traces["value_bytes"].mean()
+                              / (4 * N_NODES * D))
+        measured_wire = float(res.traces["bytes_up"].mean() / N_NODES
+                              - wire.HEADER_BYTES)
+        p = hp.p if rule.has_sync else 0.0
+        syncs = float(res.traces["sync_round"].sum())
+        expected = expected_payload_frac(rule, hp, float(K), float(D))
+        # the coin is the only randomness: conditioned on the realized
+        # sync count the measured bytes are an identity, and the analytic
+        # expectation must sit within the coin's 4-sigma band
+        given_coins = (K + syncs / PAYLOAD_ROUNDS * (D - K)) / D
+        tol = 4.0 * np.sqrt(max(p * (1 - p), 0.0) / PAYLOAD_ROUNDS) \
+            * (D - K) / D
+        out[variant] = {
+            "p_sync": p,
+            "sync_rounds": syncs,
+            "measured_payload_frac": measured_frac,
+            "expected_payload_frac": expected,
+            "frac_given_realized_coins": given_coins,
+            "within_sampling_error":
+                bool(abs(measured_frac - expected) <= tol + 1e-12),
+            "measured_wire_bytes_per_node": measured_wire,
+            "expected_wire_bytes_per_node": 4 * expected_wire_coords(
+                rule, hp, wire_coords, float(D)),
+        }
+    return out
+
+
+def run() -> List[Dict]:
+    jax.config.update("jax_platforms", "cpu")
+    strag = straggler_curves()
+    payload = payload_table()
+    recon_ok = all(v["within_sampling_error"] for v in payload.values())
+    report = {"config": {"d": D, "k": K, "n": N_NODES, "rounds": ROUNDS,
+                         "uplink_Bps": UP_BW, "downlink_Bps": DOWN_BW,
+                         "latency_s": LATENCY, "quick": QUICK},
+              "straggler": strag, "payload": payload,
+              "payload_reconciles": recon_ok}
+    with open("BENCH_fed.json", "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"[fed_bench] no_sync_advantage_ok={strag['no_sync_advantage_ok']}"
+          f" payload_reconciles={recon_ok} (wrote BENCH_fed.json)")
+
+    # one flat schema so emit()'s first-row header covers every row
+    cols = ["bench", "sigma", "variant", "wall_dasha_s", "wall_dasha_pp_s",
+            "wall_marina_s", "measured_frac", "expected_frac",
+            "measured_wire_B", "expected_wire_B"]
+    blank = {c: "" for c in cols}
+    rows = []
+    for i, sigma in enumerate(strag["sigmas"]):
+        row = dict(blank, bench="fed_straggler", sigma=sigma)
+        for name in ("dasha", "dasha_pp", "marina"):
+            row[f"wall_{name}_s"] = round(strag["wall_clock_s"][name][i], 4)
+        rows.append(row)
+    for variant, p in payload.items():
+        rows.append(dict(
+            blank, bench="fed_payload", variant=variant,
+            measured_frac=round(p["measured_payload_frac"], 5),
+            expected_frac=round(p["expected_payload_frac"], 5),
+            measured_wire_B=round(p["measured_wire_bytes_per_node"], 1),
+            expected_wire_B=round(p["expected_wire_bytes_per_node"], 1)))
+    return rows
+
+
+if __name__ == "__main__":
+    if "--smoke" in sys.argv:
+        os.environ["REPRO_BENCH_QUICK"] = "1"
+        print("[fed_bench] --smoke: rerun under REPRO_BENCH_QUICK")
+        os.execv(sys.executable, [sys.executable, "-m",
+                                  "benchmarks.fed_bench"])
+    from benchmarks.common import emit
+    emit(run())

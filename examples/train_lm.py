@@ -3,18 +3,25 @@ steps (the deliverable-(b) scenario; scaled to this CPU container).
 
     PYTHONPATH=src python examples/train_lm.py [--steps 300] [--arch ...]
 
-This wraps the production launcher (repro.launch.train); on a TPU cluster the
-same entry point takes --full to select the assigned full-size config under
-the 16x16 / 2x16x16 meshes validated by the dry-run.
+This wraps the production launcher (repro.launch.train), which runs
+entirely through the compiled run driver (DESIGN.md §10): batches are
+drawn inside the jitted scan, metrics stream as named traces, and the
+checkpoint hook fires between chunks.  On a TPU cluster the same entry
+point takes --full to select the assigned full-size config under the
+16x16 / 2x16x16 meshes validated by the dry-run.
+
+``REPRO_EXAMPLE_ROUNDS`` overrides the step count (the CI smoke path).
 """
 import argparse
+import os
 import sys
 
 from repro.launch.train import main as train_main
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
-    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--steps", type=int,
+                    default=int(os.environ.get("REPRO_EXAMPLE_ROUNDS", 300)))
     ap.add_argument("--arch", default="starcoder2-3b")
     args, rest = ap.parse_known_args()
     sys.exit(train_main([

@@ -1,0 +1,19 @@
+"""Federated transport subsystem (DESIGN.md §12): what the repo's analytic
+payload accounting only asserts, this layer measures.
+
+* :mod:`repro.fed.wire` — byte-exact wire codec for every compressed
+  message the plan layer can emit (dense / RandK / TopK / PermK / shared-
+  seed formats), with measured-vs-analytic byte reconciliation;
+* :mod:`repro.fed.net`  — pluggable latency / bandwidth / straggler link
+  models (constant, lognormal, heavy-tail Pareto);
+* :mod:`repro.fed.sim`  — the event-driven client/server simulator: engine
+  math, real bytes, real clocks; DASHA applies each client's message as it
+  lands while MARINA / SYNC-MVR block on their synchronization barrier.
+"""
+from repro.fed.net import (Constant, LinkModel, Lognormal,  # noqa: F401
+                           Pareto, Straggler, severity_grid)
+from repro.fed.sim import FedEvent, FedSim, SimResult, simulate  # noqa: F401
+from repro.fed.wire import (FMT_DENSE, FMT_PERMK,  # noqa: F401
+                            FMT_SPARSE_IDX, FMT_SPARSE_SEED, RoundBytes,
+                            WireMessage, decode, decode_round, encode_round,
+                            measured_bytes, round_bytes, topk_messages)

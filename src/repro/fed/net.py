@@ -1,0 +1,90 @@
+"""Layer 2 of the federated transport subsystem: network models.
+
+A :class:`LinkModel` turns message bytes into seconds: fixed latency plus
+bytes / bandwidth, scaled by a per-client per-round straggler multiplier
+drawn from a pluggable distribution.  Multipliers are SLOWDOWNS (>= 1,
+with 1 = the nominal link): a straggler delays, never accelerates, and
+for a fixed underlying draw the multiplier is monotone in the severity
+knob — so under common random numbers, raising severity degrades every
+round time pointwise.  That is exactly the regime where MARINA's
+all-client dense sync rounds lose to DASHA's never-synchronized
+compressed uploads (benchmarks/fed_bench.py measures this).
+
+Randomness is host-side ``numpy.random.Generator`` — the simulator models
+the network, it never touches the method's jax RNG stream.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+class Straggler:
+    """Slowdown-multiplier distribution (>= 1);
+    ``draw(rng, size) -> (size,)``."""
+
+    def draw(self, rng: np.random.Generator, size: int) -> np.ndarray:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class Constant(Straggler):
+    """No stragglers (severity floor): every multiplier is exactly 1."""
+
+    def draw(self, rng, size):
+        return np.ones(size)
+
+
+@dataclasses.dataclass(frozen=True)
+class Lognormal(Straggler):
+    """exp(sigma |Z|), Z ~ N(0, 1): a half-lognormal slowdown >= 1 whose
+    tail weight grows with sigma (sigma = 0 recovers the nominal link)."""
+
+    sigma: float = 1.0
+
+    def draw(self, rng, size):
+        z = np.abs(rng.standard_normal(size))
+        return np.exp(self.sigma * z) if self.sigma > 0 else np.ones(size)
+
+
+@dataclasses.dataclass(frozen=True)
+class Pareto(Straggler):
+    """Heavy tail: Pareto(alpha, x_m=1), a slowdown >= 1.  Smaller alpha =
+    heavier tail = worse stragglers (alpha <= 1 has infinite mean)."""
+
+    alpha: float = 2.0
+
+    def draw(self, rng, size):
+        u = rng.random(size)
+        return (1.0 - u) ** (-1.0 / self.alpha)
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkModel:
+    """seconds = latency + bytes / bandwidth * straggler_multiplier.
+
+    Defaults model a 100 Mbit/s WAN client link with 20 ms latency —
+    coarse, but the simulator's comparisons are relative (same link for
+    every method)."""
+
+    latency_s: float = 0.02
+    bandwidth_Bps: float = 12.5e6
+    straggler: Straggler = Constant()
+
+    def delays(self, rng: np.random.Generator,
+               nbytes: np.ndarray) -> np.ndarray:
+        """Per-client transfer times for one round; ``nbytes`` is (n,)."""
+        nbytes = np.asarray(nbytes, np.float64)
+        mult = self.straggler.draw(rng, nbytes.size)
+        return self.latency_s + nbytes / self.bandwidth_Bps * mult
+
+
+def severity_grid(kind: str = "lognormal", levels=(0.0, 0.5, 1.0, 1.5, 2.0)):
+    """The bench's straggler-severity axis: a list of (label, Straggler)."""
+    if kind == "lognormal":
+        return [(f"sigma={s:g}", Lognormal(s) if s > 0 else Constant())
+                for s in levels]
+    if kind == "pareto":
+        return [(f"alpha={a:g}", Pareto(a)) for a in levels]
+    raise ValueError(kind)

@@ -1,0 +1,219 @@
+"""Layer 3 of the federated transport subsystem: the event-driven
+client/server simulator (DESIGN.md §12).
+
+The method MATH is exactly the engine's: every round executes
+``Method.step_full`` (the same traced body as ``Method.step``), so the
+simulated run's iterates, RNG stream and ``bits_sent`` are those of the
+lockstep driver.  What the simulator adds is TIME and BYTES:
+
+* each client's upload is encoded onto the byte-exact wire
+  (:mod:`repro.fed.wire`) and shipped through a :class:`~repro.fed.net.
+  LinkModel` (latency + bytes/bandwidth x straggler multiplier);
+* the server applies client i's message ``m_i`` the moment it lands — an
+  ordered event log, valid because DASHA's server state is the SUM
+  ``g^{t+1} = g^t + (1/n) sum_i m_i``: addition commutes, so arrival order
+  never changes the math (the paper's "no client synchronization");
+* a round completes when the server has everything it NEEDS: for DASHA /
+  PAGE / MVR that is the participating clients only (Appendix D absent
+  clients send nothing and nobody waits for them); for rules with
+  ``sync_requires_all`` (SYNC-MVR, MARINA) a sync-coin round is a
+  synchronization BARRIER — all n clients must land their DENSE upload, so
+  the slowest straggler gates the round.
+
+Partial participation is an arrival process whose per-round realization is
+the engine's own Appendix-D coins (``StepInfo.present``, recovered from the
+plan) — the bytes the simulator bills and the math the engine runs always
+agree about who was absent.
+
+Straggler draws are common random numbers: every round draws exactly one
+downlink and one uplink multiplier per client whether or not the client
+participates, so two methods simulated with the same ``seed`` face the
+same network and their wall-clock difference is the methods', not the
+noise's.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Any, Callable, Dict, List, NamedTuple, Optional
+
+import jax
+import numpy as np
+
+from repro.fed import wire
+from repro.fed.net import LinkModel
+from repro.methods.engine import Hyper, Method
+from repro.methods.rules import get_rule
+
+X_BYTES_PER_COORD = 4                  # the server broadcast is dense fp32
+
+
+class FedEvent(NamedTuple):
+    """One server-side event: ``m_i`` applied the moment it lands."""
+
+    time: float
+    kind: str                          # "apply" | "round"
+    client: int
+    round: int
+    nbytes: int
+
+
+class SimResult(NamedTuple):
+    state: Any                         # final MethodState
+    traces: Dict[str, np.ndarray]      # driver-style named metric traces
+    events: Optional[List[FedEvent]]
+    summary: Dict[str, float]
+
+
+@dataclasses.dataclass
+class FedSim:
+    """Event-driven federated run of one variant x compressor x substrate.
+
+    ``uplink`` / ``downlink`` are :class:`repro.fed.net.LinkModel`;
+    ``compute_s`` is the per-client local compute time per round.  Traces
+    use the driver's named-metric convention, with ``bytes_up`` /
+    ``bytes_down`` / ``sim_wall_clock`` streaming next to ``bits_sent``.
+    """
+
+    variant: str
+    comp: Any                          # RoundCompressor
+    substrate: Any                     # FlatSubstrate
+    hyper: Hyper
+    uplink: LinkModel = LinkModel()
+    downlink: LinkModel = LinkModel()
+    compute_s: float = 0.01
+    seed: int = 0
+
+    def __post_init__(self):
+        self.rule = get_rule(self.variant)
+        if self.rule.sync_requires_all and self.comp.spec.p_participate < 1:
+            raise ValueError(
+                f"{self.rule.name!r} has a client-synchronization barrier "
+                "(sync_requires_all): Appendix-D partial participation "
+                "does not apply — every client must answer sync rounds")
+        if not hasattr(self.substrate, "estimator_update_full"):
+            raise ValueError(
+                "FedSim needs a substrate exposing estimator_update_full "
+                "(per-node wire messages) — currently FlatSubstrate only; "
+                f"got {type(self.substrate).__name__}")
+        self.method: Method = Method.build(self.variant, self.comp,
+                                           self.substrate, self.hyper)
+        self._step = jax.jit(lambda s: self.method.step_full(s, None))
+        # the engine's round keys: key, k_h, k_c, k_coin = split(key, 4);
+        # the plan (and with it the wire support) is drawn from k_c.
+        # (Eager, not jitted: Plan.kind is a static string.)  The codec
+        # only reads the plan when the support is not already in the
+        # message records (PermK slice headers, shared seeds, dense-backend
+        # masks) — skip the per-round host recompute otherwise.
+        self._plan = lambda key: self.comp.plan(jax.random.split(key, 4)[2])
+        spec = self.comp.spec
+        self._need_plan = not (spec.name == "randk"
+                               and self.comp.mode == "independent"
+                               and self.comp.backend == "sparse")
+
+    def init(self, x0, key, **kw):
+        return self.method.init(x0, key, **kw)
+
+    def run(self, state, rounds: int, *,
+            metric_fn: Optional[Callable] = None,
+            log_events: bool = False, max_events: int = 100_000
+            ) -> SimResult:
+        if metric_fn is None:
+            metric_fn = self.substrate.default_metric()
+        rng = np.random.default_rng(self.seed)
+        n = self.comp.n
+        d = int(self.comp.spec.d)
+        x_bytes = X_BYTES_PER_COORD * d
+
+        names = ("metric", "bits_sent", "bytes_up", "value_bytes",
+                 "bytes_down", "sim_wall_clock", "sync_round",
+                 "participants")
+        tr = {k: np.zeros(rounds) for k in names}
+        events: List[FedEvent] = []
+        now = 0.0
+        bytes_up_total = 0
+        bytes_down_total = 0
+        sync_rounds = 0
+
+        for t in range(rounds):
+            plan = self._plan(state.key) if self._need_plan else None
+            state, info = self._step(state)
+            coin = bool(info.coin) if info.coin is not None else False
+            present = np.ones(n, bool) if info.present is None \
+                else np.asarray(info.present)
+            if coin and self.rule.sync_requires_all:
+                # the barrier: ALL clients answer the sync round
+                active = np.ones(n, bool)
+            else:
+                active = present
+            bufs = wire.encode_round(
+                self.comp, plan, info.messages, t, coin=coin,
+                sync_values=info.sync_dense, present=active)
+            rb = wire.round_bytes(bufs)
+            up_bytes = np.asarray(rb.per_node, np.float64)
+            down_bytes = np.where(active, x_bytes, 0).astype(np.float64)
+
+            # common-random-numbers: both links draw all n multipliers
+            # every round, participant or not
+            t_down = self.downlink.delays(rng, down_bytes)
+            t_up = self.uplink.delays(rng, up_bytes)
+            heap = []
+            for i in range(n):
+                if not active[i]:
+                    continue
+                arrive = now + t_down[i] + self.compute_s + t_up[i]
+                heapq.heappush(heap, (arrive, i))
+            # drain arrivals in time order: the server applies m_i the
+            # moment it lands (sum-structured g makes order irrelevant to
+            # the math; the LAST required arrival completes the round)
+            completion = now + self.downlink.latency_s
+            while heap:
+                at, i = heapq.heappop(heap)
+                completion = at
+                if log_events and len(events) < max_events:
+                    events.append(FedEvent(at, "apply", i, t,
+                                           rb.per_node[i]))
+            if log_events and len(events) < max_events:
+                events.append(FedEvent(completion, "round", -1, t,
+                                       rb.total_bytes))
+            now = completion
+
+            bytes_up_total += rb.total_bytes
+            bytes_down_total += int(down_bytes.sum())
+            sync_rounds += int(coin)
+            tr["metric"][t] = float(metric_fn(state))
+            tr["bits_sent"][t] = float(state.bits_sent)
+            tr["bytes_up"][t] = rb.total_bytes
+            tr["value_bytes"][t] = rb.value_bytes
+            tr["bytes_down"][t] = down_bytes.sum()
+            tr["sim_wall_clock"][t] = now
+            tr["sync_round"][t] = float(coin)
+            tr["participants"][t] = float(active.sum())
+
+        summary = {
+            "rounds": float(rounds),
+            "wall_clock_s": now,
+            "bytes_up": float(bytes_up_total),
+            "bytes_down": float(bytes_down_total),
+            "sync_rounds": float(sync_rounds),
+            "mean_participants": float(tr["participants"].mean()),
+            "mean_bytes_up_per_round": float(bytes_up_total) / rounds,
+        }
+        return SimResult(state=state, traces=tr,
+                         events=events if log_events else None,
+                         summary=summary)
+
+
+def simulate(variant: str, comp, substrate, hyper: Hyper, x0, key, *,
+             rounds: int, uplink: Optional[LinkModel] = None,
+             downlink: Optional[LinkModel] = None, compute_s: float = 0.01,
+             seed: int = 0, init_kw: Optional[dict] = None,
+             metric_fn=None, log_events: bool = False) -> SimResult:
+    """One-shot convenience: build the sim, init the method, run it."""
+    sim = FedSim(variant=variant, comp=comp, substrate=substrate,
+                 hyper=hyper, uplink=uplink or LinkModel(),
+                 downlink=downlink or LinkModel(), compute_s=compute_s,
+                 seed=seed)
+    state = sim.init(x0, key, **(init_kw or {}))
+    return sim.run(state, rounds, metric_fn=metric_fn,
+                   log_events=log_events)

@@ -1,0 +1,339 @@
+"""Layer 1 of the federated transport subsystem: the wire codec.
+
+Every compressed message the plan layer can emit has a byte-exact
+serialization here (DESIGN.md §12).  Four formats, one fixed 16-byte
+header (`<BBHIII`: version, fmt, node, round, d, count):
+
+=============  ==============================================  ============
+fmt            body                                            used by
+=============  ==============================================  ============
+``DENSE``      d raw float32 values                            identity /
+                                                               qdither* /
+                                                               sync rounds
+``SPARSE_IDX`` count packed ``(uint32 idx, float32 val)``      independent
+               records                                         RandK /
+                                                               Bernoulli /
+                                                               TopK
+``SPARSE_SEED``count raw float32 values; the support is        shared_coords
+               rederived from the shared round seed            RandK /
+               (receiver holds the same plan)                  Bernoulli
+``PERMK``      8-byte slice header (`<II`: shift, period)      PermK
+               + blk raw float32 values; node i's indices      (shared and
+               are ``(i*blk + j - shift) mod period``          independent)
+=============  ==============================================  ============
+
+(*) QDither ships its d values as raw fp32 — this codec does not entropy-
+code, so QDither's wire bytes exceed its Definition-1.3 payload; the gap is
+reported, never hidden (DESIGN.md §12).
+
+Contracts (tested in tests/test_fed_wire.py):
+
+* ``decode(encode(msg)).dense()`` is bit-identical to the in-memory
+  message's dense view, for every compressor x mode x backend;
+* ``measured_bytes`` reconciles with the accounting layer:
+  value bytes = ``4 * payload``-style coords (Definition 1.3) and total
+  bytes = ``4 * wire_coords`` + fixed headers (DESIGN.md §6), which
+  :func:`repro.methods.accounting.expected_wire_coords` predicts in
+  expectation over sync coins.
+"""
+from __future__ import annotations
+
+import struct
+from typing import List, NamedTuple, Optional, Sequence
+
+import numpy as np
+
+from repro.compress.plan import Plan
+
+WIRE_VERSION = 1
+
+FMT_DENSE = 0
+FMT_SPARSE_IDX = 1
+FMT_SPARSE_SEED = 2
+FMT_PERMK = 3
+
+FMT_NAMES = {FMT_DENSE: "dense", FMT_SPARSE_IDX: "sparse_idx",
+             FMT_SPARSE_SEED: "sparse_seed", FMT_PERMK: "permk"}
+
+_HEADER = struct.Struct("<BBHIII")      # version, fmt, node, round, d, count
+_PERMK_EXT = struct.Struct("<II")       # shift, period (= n * blk)
+HEADER_BYTES = _HEADER.size             # 16
+PERMK_EXT_BYTES = _PERMK_EXT.size       # 8
+
+#: packed (uint32 idx, float32 val) record — the SPARSE_IDX body
+REC_DTYPE = np.dtype([("idx", "<u4"), ("val", "<f4")])
+
+
+class WireMessage(NamedTuple):
+    """One decoded message; ``dense()`` reconstructs the (d,) vector."""
+
+    fmt: int
+    node: int
+    round: int
+    d: int
+    values: np.ndarray                  # float32
+    indices: Optional[np.ndarray]      # int64, None for DENSE
+    shift: int = 0
+    period: int = 0
+
+    def dense(self) -> np.ndarray:
+        out = np.zeros((self.d,), np.float32)
+        if self.fmt == FMT_DENSE:
+            out[:] = self.values
+        elif self.fmt == FMT_SPARSE_SEED:
+            out[self.indices] = self.values
+        else:
+            # scatter-ADD mirrors SparseMessages.dense() / the server's
+            # aggregation semantics (0 + x, distinct support)
+            np.add.at(out, self.indices, self.values)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# encode
+# ---------------------------------------------------------------------------
+
+def _f32(x) -> np.ndarray:
+    return np.ascontiguousarray(np.asarray(x, np.float32))
+
+
+def encode_dense(node: int, t: int, values) -> bytes:
+    values = _f32(values)
+    head = _HEADER.pack(WIRE_VERSION, FMT_DENSE, node, t,
+                        values.size, values.size)
+    return head + values.tobytes()
+
+
+def encode_sparse_idx(node: int, t: int, d: int, indices, values) -> bytes:
+    """Independent sparse message: packed (uint32 idx, float32 val) records
+    — the receiver cannot rederive a private support, so it ships."""
+    idx = np.asarray(indices)
+    val = _f32(values)
+    assert idx.shape == val.shape, (idx.shape, val.shape)
+    rec = np.empty(idx.size, REC_DTYPE)
+    rec["idx"] = idx.astype(np.uint32)
+    rec["val"] = val
+    head = _HEADER.pack(WIRE_VERSION, FMT_SPARSE_IDX, node, t, d, idx.size)
+    return head + rec.tobytes()
+
+
+def encode_sparse_seed(node: int, t: int, d: int, values) -> bytes:
+    """Shared-support sparse message: values only — the index set follows
+    from the shared round seed, which the receiver also holds."""
+    val = _f32(values)
+    head = _HEADER.pack(WIRE_VERSION, FMT_SPARSE_SEED, node, t, d, val.size)
+    return head + val.tobytes()
+
+
+def encode_permk(node: int, t: int, d: int, shift: int, period: int,
+                 values) -> bytes:
+    """PermK slice: 8-byte permutation header + the node's block values.
+    ``values`` has blk = period / n slots; slots whose reconstructed index
+    falls at or beyond d are padding and decode to nothing."""
+    val = _f32(values)
+    head = _HEADER.pack(WIRE_VERSION, FMT_PERMK, node, t, d, val.size)
+    return head + _PERMK_EXT.pack(shift % max(period, 1), period) \
+        + val.tobytes()
+
+
+def permk_shift(idx_row: np.ndarray, node: int, n: int) -> int:
+    """Recover the cyclic shift of :func:`repro.compress.plan.perm_partition`
+    from one node row: ``idx[j] = (node*blk + j - shift) mod (n*blk)``.
+    Rows that are all padding (every index >= d, encoded as PAD) return 0 —
+    their message carries no coordinates, so any shift decodes the same."""
+    idx_row = np.asarray(idx_row)
+    blk = idx_row.size
+    period = n * blk
+    valid = np.nonzero(idx_row < period)[0]
+    if valid.size == 0:
+        return 0
+    j = int(valid[0])
+    return int((node * blk + j - int(idx_row[j])) % period)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def decode(buf: bytes, *, shared_indices=None) -> WireMessage:
+    """Decode one message.  ``shared_indices`` supplies the seed-derived
+    support for ``SPARSE_SEED`` (the receiver recomputes it from the round
+    plan); PERMK is self-describing (count + slice header)."""
+    ver, fmt, node, t, d, count = _HEADER.unpack_from(buf, 0)
+    if ver != WIRE_VERSION:
+        raise ValueError(f"wire version {ver} != {WIRE_VERSION}")
+    off = HEADER_BYTES
+    if fmt == FMT_DENSE:
+        values = np.frombuffer(buf, "<f4", count, off)
+        return WireMessage(fmt, node, t, d, values, None)
+    if fmt == FMT_SPARSE_IDX:
+        rec = np.frombuffer(buf, REC_DTYPE, count, off)
+        return WireMessage(fmt, node, t, d, rec["val"],
+                           rec["idx"].astype(np.int64))
+    if fmt == FMT_SPARSE_SEED:
+        values = np.frombuffer(buf, "<f4", count, off)
+        if shared_indices is None:
+            raise ValueError("SPARSE_SEED needs the shared round support "
+                             "(pass shared_indices, derived from the plan)")
+        idx = np.asarray(shared_indices)[:count]
+        return WireMessage(fmt, node, t, d, values, idx)
+    if fmt == FMT_PERMK:
+        shift, period = _PERMK_EXT.unpack_from(buf, off)
+        off += PERMK_EXT_BYTES
+        values = np.frombuffer(buf, "<f4", count, off)
+        j = np.arange(count, dtype=np.int64)
+        c = (node * count + j - shift) % max(period, 1)
+        keep = c < d
+        return WireMessage(fmt, node, t, d, values[keep], c[keep],
+                           shift=shift, period=period)
+    raise ValueError(f"unknown wire fmt {fmt}")
+
+
+def measured_bytes(buf: Optional[bytes]) -> int:
+    """Bytes on the wire for one encoded message (0 for an absent node)."""
+    return 0 if buf is None else len(buf)
+
+
+class RoundBytes(NamedTuple):
+    """Byte accounting for one round of encoded uploads.
+
+    ``value_bytes`` counts 4 bytes per shipped value scalar — the measured
+    Definition-1.3 payload; ``total_bytes`` adds shipped indices and the
+    fixed headers — the measured wire cost (DESIGN.md §6 split)."""
+
+    total_bytes: int
+    value_bytes: int
+    header_bytes: int
+    index_bytes: int
+    per_node: List[int]
+
+
+def round_bytes(bufs: Sequence[Optional[bytes]]) -> RoundBytes:
+    tot = val = head = idx = 0
+    per_node = []
+    for buf in bufs:
+        per_node.append(measured_bytes(buf))
+        if buf is None:
+            continue
+        ver, fmt, _, _, _, count = _HEADER.unpack_from(buf, 0)
+        h = HEADER_BYTES + (PERMK_EXT_BYTES if fmt == FMT_PERMK else 0)
+        v = 4 * count
+        tot += len(buf)
+        val += v
+        head += h
+        idx += len(buf) - h - v
+    return RoundBytes(tot, val, head, idx, per_node)
+
+
+# ---------------------------------------------------------------------------
+# plan-aware round encoding (the bridge from repro.compress messages)
+# ---------------------------------------------------------------------------
+
+def shared_support(plan: Plan) -> Optional[np.ndarray]:
+    """The seed-derived support a SPARSE_SEED receiver recomputes: the
+    shared index set (RandK) or the shared mask's coordinates (Bernoulli).
+    None when the plan has no shared support."""
+    if plan.indices is not None:
+        idx = np.asarray(plan.indices[0])
+        return idx[idx < np.iinfo(np.int32).max].astype(np.int64)
+    if plan.mask is not None:
+        return np.nonzero(np.asarray(plan.mask[0]))[0]
+    return None
+
+
+def encode_round(rc, plan: Optional[Plan], msgs, t: int, *,
+                 coin: bool = False, sync_values=None,
+                 present=None) -> List[Optional[bytes]]:
+    """Serialize one round of per-node uploads.
+
+    ``rc`` is the :class:`repro.compress.RoundCompressor` (spec + mode pick
+    the format), ``plan`` the round's randomness, ``msgs`` the backend
+    message container (``DenseMessages`` or ``SparseMessages``).  ``plan``
+    may be None when the support already travels in the message records
+    (independent sparse RandK) or the round is dense.  On a sync round
+    (``coin``) every node ships ``sync_values`` dense — Alg. 2 / MARINA's
+    synchronization upload.  ``present`` marks Appendix-D participants;
+    absent nodes return None (zero bytes).
+    """
+    n = rc.n
+    d = int(rc.spec.d)
+    mode = rc.mode
+    name = rc.spec.name
+    pres = None if present is None else np.asarray(present, bool)
+
+    if coin:
+        rows = np.asarray(sync_values, np.float32)
+        return [encode_dense(i, t, rows[i]) for i in range(n)]
+
+    out: List[Optional[bytes]] = []
+    vals = np.asarray(msgs.values, np.float32)
+    sparse = getattr(msgs, "indices", None) is not None
+    plan_idx = None if plan is None or plan.indices is None \
+        else np.asarray(plan.indices)
+    plan_mask = None if plan is None else plan.mask
+    shared = shared_support(plan) \
+        if plan is not None and mode == "shared_coords" else None
+    for i in range(n):
+        if pres is not None and not pres[i]:
+            out.append(None)
+            continue
+        if name == "permk" and plan_idx is not None:
+            idx_row = plan_idx[i]
+            blk = idx_row.size
+            period = n * blk
+            shift = permk_shift(idx_row, i, n)
+            if sparse:
+                row_vals = vals[i]
+            else:                        # dense backend: gather the block
+                safe = np.minimum(idx_row.astype(np.int64), d - 1)
+                row_vals = np.where(idx_row < d, vals[i][safe],
+                                    np.float32(0))
+            out.append(encode_permk(i, t, d, shift, period, row_vals))
+        elif mode == "shared_coords":
+            if sparse:
+                row_vals = vals[i]
+            else:
+                row_vals = vals[i][shared]
+            out.append(encode_sparse_seed(i, t, d, row_vals))
+        elif sparse:
+            out.append(encode_sparse_idx(i, t, d,
+                                         np.asarray(msgs.indices)[i],
+                                         vals[i]))
+        elif plan_idx is not None:       # dense backend, private support
+            idx_row = plan_idx[i].astype(np.int64)
+            out.append(encode_sparse_idx(i, t, d, idx_row,
+                                         vals[i][idx_row]))
+        elif plan_mask is not None:      # independent Bernoulli: the
+            idx_row = np.nonzero(np.asarray(plan_mask[i]))[0]  # support ships
+            out.append(encode_sparse_idx(i, t, d, idx_row,
+                                         vals[i][idx_row]))
+        else:                            # passthrough / dither
+            out.append(encode_dense(i, t, vals[i]))
+    return out
+
+
+def decode_round(bufs: Sequence[Optional[bytes]], d: int, *,
+                 plan: Optional[Plan] = None) -> np.ndarray:
+    """Decode one round back to the (n, d) dense message matrix (absent
+    nodes decode to zero rows) — the bit-identity side of the codec."""
+    shared = shared_support(plan) if plan is not None else None
+    rows = []
+    for buf in bufs:
+        if buf is None:
+            rows.append(np.zeros((d,), np.float32))
+        else:
+            rows.append(decode(buf, shared_indices=shared).dense())
+    return np.stack(rows)
+
+
+def topk_messages(rows, k: int):
+    """Content-defined Top-K selection of an (n, d) matrix, as the
+    (indices, values) pairs a ``SPARSE_IDX`` wire message ships.  TopK's
+    support depends on the data, so unlike RandK there is no seed to
+    rederive it from — the 8-byte records are the honest cost.  (TopK is a
+    biased compressor outside the paper's U(omega) class; it exists here to
+    exercise the codec, not the theory.)"""
+    rows = np.asarray(rows, np.float32)
+    idx = np.argsort(-np.abs(rows), axis=1)[:, :k]
+    vals = np.take_along_axis(rows, idx, axis=1)
+    return idx.astype(np.int64), vals

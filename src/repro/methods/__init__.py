@@ -13,9 +13,10 @@
 * :mod:`repro.methods.accounting` — unified payload accounting.
 """
 from repro.methods.accounting import (expected_payload_frac,  # noqa: F401
-                                      round_payload)
+                                      expected_wire_coords, round_payload)
 from repro.methods.driver import Driver, sweep  # noqa: F401
-from repro.methods.engine import Hyper, Method, MethodState  # noqa: F401
+from repro.methods.engine import (Hyper, Method,  # noqa: F401
+                                  MethodState, StepInfo)
 from repro.methods.rules import (VARIANTS, MvrFusion,  # noqa: F401
                                  VariantRule, get_rule, register_variant)
 from repro.methods.substrates import (BatchLossOracle,  # noqa: F401

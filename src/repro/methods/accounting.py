@@ -38,3 +38,17 @@ def expected_payload_frac(rule, hyper, payload_per_node: float,
     fraction directly (the trainer's static ``compression`` knob)."""
     extra = rule.extra_payload(hyper, payload_per_node, dense_coords)
     return float((payload_per_node + extra) / dense_coords)
+
+
+def expected_wire_coords(rule, hyper, wire_per_node: float,
+                         dense_coords: float) -> float:
+    """E[scalars the WIRE moves] per node per round of ``rule``.
+
+    Same sync-round expectation as :func:`expected_payload_frac` but on the
+    wire numbers (values PLUS shipped support, DESIGN.md §6): a sync round
+    replaces the compressed wire message with a dense ``dense_coords``
+    upload.  ``repro.fed.wire`` measures this to the byte
+    (``4 * expected_wire_coords`` bytes/node/round + fixed headers), which
+    is what ``tests/test_fed_accounting.py`` reconciles."""
+    extra = rule.extra_payload(hyper, wire_per_node, dense_coords)
+    return float(wire_per_node + extra)

@@ -19,13 +19,37 @@ engine.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.methods import accounting
 from repro.methods.rules import VariantRule, get_rule
+
+
+class StepInfo(NamedTuple):
+    """Per-round internals exposed by ``Method.step_full`` for observers
+    that need more than the new state — the federated transport simulator
+    (:mod:`repro.fed.sim`) encodes ``messages`` (or ``sync_dense`` on a
+    coin round) onto a byte-exact wire and bills real network time.
+
+    * ``messages``  — the per-node compressed messages m_i in the
+      substrate's backend format (``DenseMessages`` / ``SparseMessages``),
+      or None when the substrate does not expose them;
+    * ``coin``      — the sync-round coin (None for no-sync variants);
+    * ``sync_dense``— the dense per-node sync upload h_sync (None unless
+      the rule has a sync round; on a coin round THIS is what ships);
+    * ``present``   — (n,) participation coins of the Appendix-D wrapper
+      (None when p_participate == 1): absent nodes sent nothing;
+    * ``payload``   — the compressed branch's payload coords per node.
+    """
+
+    messages: Any = None
+    coin: Optional[jax.Array] = None
+    sync_dense: Any = None
+    present: Optional[jax.Array] = None
+    payload: Any = 0.0
 
 
 class MethodState(NamedTuple):
@@ -84,11 +108,14 @@ class Hyper:
 
 class Method(NamedTuple):
     """``init(x0, key, ...) -> MethodState``; ``step(state, data=None) ->
-    MethodState`` (jit-able); ``run(state, num_rounds, ...)`` scans."""
+    MethodState`` (jit-able); ``run(state, num_rounds, ...)`` scans;
+    ``step_full(state, data=None) -> (MethodState, StepInfo)`` is ``step``
+    plus the wire-observable round internals (same traced body)."""
 
     init: Callable[..., MethodState]
     step: Callable[..., MethodState]
     run: Callable[..., Any]
+    step_full: Optional[Callable[..., Any]] = None
 
     @classmethod
     def build(cls, variant, compressor, substrate, hyper: Hyper) -> "Method":
@@ -126,7 +153,11 @@ class Method(NamedTuple):
                                key=key, t=jnp.zeros((), jnp.int32),
                                bits_sent=jnp.asarray(bits0, jnp.float32))
 
-        def step(state: MethodState, data=None) -> MethodState:
+        def step_full(state: MethodState, data=None
+                      ) -> Tuple[MethodState, StepInfo]:
+            """One round, returning the wire-observable internals too
+            (:class:`StepInfo`).  ``step`` is this with the info dropped —
+            same traced body, so observers never fork the math."""
             key, k_h, k_c, k_coin = jax.random.split(state.key, 4)
             # line 4 (server) + broadcast
             x_new, opt_state = sub.server_update(state.x, state.g,
@@ -135,10 +166,16 @@ class Method(NamedTuple):
             h_new, aux = rule.h_update(sub, k_h, hp, x_new, state.x,
                                        state.h_local, data)
             # lines 9-10: m_i = C_i(drift); g_i <- g_i + m_i
-            agg, h_out, g_local, payload = sub.estimator_update(
-                k_c, h_new, state.h_local, state.g_local, a_eff, aux)
+            msgs = present = None
+            if hasattr(sub, "estimator_update_full"):
+                agg, h_out, g_local, payload, msgs, present = \
+                    sub.estimator_update_full(
+                        k_c, h_new, state.h_local, state.g_local, a_eff, aux)
+            else:
+                agg, h_out, g_local, payload = sub.estimator_update(
+                    k_c, h_new, state.h_local, state.g_local, a_eff, aux)
             g = sub.add_server(state.g, agg)                   # line 14
-            coin = None
+            coin = h_sync = None
             if rule.has_sync:
                 # Alg. 2 lines 9-11 / MARINA: with prob p ALL nodes upload
                 # a fresh dense megabatch gradient instead
@@ -147,12 +184,17 @@ class Method(NamedTuple):
                 h_out = sub.where(coin, h_sync, h_out)
                 g_local = sub.where(coin, h_sync, g_local)
                 g = sub.where(coin, sub.mean_nodes(h_sync), g)
-            payload = accounting.round_payload(
+            round_pay = accounting.round_payload(
                 payload, sub.dense_coords(h_out), coin)
-            return MethodState(x=x_new, g=g, g_local=g_local,
-                               h_local=h_out, opt_state=opt_state, key=key,
-                               t=state.t + 1,
-                               bits_sent=state.bits_sent + payload)
+            new = MethodState(x=x_new, g=g, g_local=g_local,
+                              h_local=h_out, opt_state=opt_state, key=key,
+                              t=state.t + 1,
+                              bits_sent=state.bits_sent + round_pay)
+            return new, StepInfo(messages=msgs, coin=coin, sync_dense=h_sync,
+                                 present=present, payload=payload)
+
+        def step(state: MethodState, data=None) -> MethodState:
+            return step_full(state, data)[0]
 
         def run(state: MethodState, num_rounds: int, *,
                 metric_every: int = 1, metric_fn=None, data=None,
@@ -182,4 +224,4 @@ class Method(NamedTuple):
                 checkpoint=checkpoint, checkpoint_every=checkpoint_every)
             return final, traces["metric"], traces["bits_sent"]
 
-        return cls(init=init, step=step, run=run)
+        return cls(init=init, step=step, run=run, step_full=step_full)

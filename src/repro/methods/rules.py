@@ -21,7 +21,15 @@ aggregation lines are shared — is made literal here.  A
   :meth:`repro.methods.engine.Hyper.from_theory`;
 * ``extra_payload`` — expected coords/round beyond the compressed message
   (the sync branch's dense uploads), consumed by
-  :func:`repro.methods.accounting.expected_payload_frac`.
+  :func:`repro.methods.accounting.expected_payload_frac`;
+* ``sync_requires_all`` — barrier metadata for the federated simulator
+  (:mod:`repro.fed.sim`): a True rule's sync round is a CLIENT
+  SYNCHRONIZATION barrier (every node must upload its dense message in the
+  same round, so the round completes only when the slowest of ALL n clients
+  lands), and the rule is incompatible with Appendix-D partial
+  participation.  DASHA / PAGE / MVR never synchronize clients — the
+  paper's "no client synchronization" claim, made measurable in
+  ``benchmarks/fed_bench.py``.
 
 MARINA (Gorbunov et al., 2021) fits the same skeleton: track
 h_i^t = G_i(x^t) by telescoping (h <- h + [G_i(x^{t+1}) - G_i(x^t)]), and
@@ -65,6 +73,7 @@ class VariantRule:
     init_h: Optional[Callable[..., Any]] = None
     theory_gamma: Optional[Callable[..., Tuple[float, Dict[str, Any]]]] = None
     extra_payload: Callable[..., float] = _no_extra_payload
+    sync_requires_all: bool = False
 
     @property
     def has_sync(self) -> bool:
@@ -194,9 +203,10 @@ register_variant(VariantRule(
 
 register_variant(VariantRule(
     name="sync_mvr", h_update=_h_sarah, sync_update=_sync_megabatch,
-    theory_gamma=_theory_sync_mvr, extra_payload=_sync_extra_payload))
+    theory_gamma=_theory_sync_mvr, extra_payload=_sync_extra_payload,
+    sync_requires_all=True))
 
 register_variant(VariantRule(
     name="marina", h_update=_h_marina, sync_update=_sync_megabatch,
     force_a=0.0, theory_gamma=_theory_marina,
-    extra_payload=_sync_extra_payload))
+    extra_payload=_sync_extra_payload, sync_requires_all=True))

@@ -148,8 +148,25 @@ class FlatSubstrate:
 
     # -- compression (Alg. 1 lines 9-10) -----------------------------------
     def estimator_update(self, key, h_new, h, g_local, a: float, aux=None):
+        return self.estimator_update_full(key, h_new, h, g_local, a,
+                                          aux)[:4]
+
+    def estimator_update_full(self, key, h_new, h, g_local, a: float,
+                              aux=None):
+        """``estimator_update`` plus the wire observables: the per-node
+        message container and the Appendix-D participation coins (None at
+        full participation).  Recomputing the plan from the same key is
+        free under jit (pure + CSE) and keeps the two entry points
+        bit-identical."""
         msgs, h_out, gl = self.rc.estimator_update(key, h_new, h, g_local, a)
-        return msgs.mean(), h_out, gl, self.rc.payload_per_node
+        present = None
+        if self.rc.spec.p_participate < 1.0:
+            # the participation wrapper folds coin/p' into the plan's
+            # per-node scale; a zero scale row IS an absent node
+            scale = self.rc.plan(key).scale
+            present = jnp.ravel(scale) != 0
+        return (msgs.mean(), h_out, gl, self.rc.payload_per_node, msgs,
+                present)
 
     # -- metrics -----------------------------------------------------------
     def default_metric(self):

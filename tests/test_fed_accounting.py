@@ -1,0 +1,116 @@
+"""Measured-vs-analytic reconciliation: the wire codec's bytes against the
+accounting layer's expectations (DESIGN.md §6 / §12), and the Appendix-D
+partial-participation theory plumbing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks.common import (N_NODES, glm_problem, lipschitz_glm,
+                               theory_hyper)
+from repro.compress import make_round_compressor
+from repro.compress.spec import momentum_a
+from repro.core import theory
+from repro.fed import wire
+from repro.fed.sim import FedSim
+from repro.methods import FlatSubstrate, Hyper
+from repro.methods.accounting import (expected_payload_frac,
+                                      expected_wire_coords)
+from repro.methods.rules import get_rule
+
+D, K, N = 40, 8, N_NODES
+T = 400
+
+
+def _sim(variant, rc, hp, sub, rounds=T, seed=7):
+    sim = FedSim(variant, rc, sub, hp, seed=seed)
+    st = sim.init(jnp.zeros(D), jax.random.PRNGKey(1))
+    return sim.run(st, rounds)
+
+
+def _hyper(variant, rc, L):
+    return theory_hyper(variant, rc.omega, L, d=D, k=K, n=N, m=32)
+
+
+@pytest.mark.parametrize("variant", ["dasha", "page", "mvr", "sync_mvr",
+                                     "marina"])
+def test_measured_bytes_reconcile_with_accounting(variant):
+    """For every variant: (a) measured value bytes are EXACTLY the
+    realized-coin payload (sync_mvr / MARINA megabatch rounds ship dense);
+    (b) their mean matches expected_payload_frac within the coin's
+    sampling error; (c) total wire bytes match expected_wire_coords plus
+    the fixed headers the same way."""
+    prob = glm_problem(d=D, m=32)
+    sub = FlatSubstrate(prob, N, D)
+    rc = make_round_compressor("randk", D, N, k=K, backend="sparse")
+    hp = _hyper(variant, rc, lipschitz_glm(prob))
+    rule = get_rule(variant)
+    res = _sim(variant, rc, hp, sub)
+    coins = res.traces["sync_round"]
+
+    # (a) exact per-round identity against the realized coins
+    exact_value = 4 * N * (K + coins * (D - K))
+    np.testing.assert_array_equal(res.traces["value_bytes"], exact_value)
+    wire_coords = rc.spec.wire_coords("independent")        # 2K: idx + val
+    exact_total = N * (wire.HEADER_BYTES
+                       + 4 * (wire_coords + coins * (D - wire_coords)))
+    np.testing.assert_array_equal(res.traces["bytes_up"], exact_total)
+
+    # (b, c) expectation within sampling error of the Bernoulli(p) coin
+    p = hp.p if rule.has_sync else 0.0
+    tol = 4.0 * np.sqrt(max(p * (1 - p), 1e-12) / T)        # 4 sigma
+    frac = res.traces["value_bytes"].mean() / (4 * N * D)
+    assert abs(frac - expected_payload_frac(rule, hp, float(K), float(D))) \
+        <= tol * (D - K) / D + 1e-12
+    wire_mean = res.traces["bytes_up"].mean() / N - wire.HEADER_BYTES
+    expect_wire = 4 * expected_wire_coords(rule, hp, wire_coords, float(D))
+    assert abs(wire_mean - expect_wire) \
+        <= 4 * tol * (D - wire_coords) + 1e-9
+
+    # the engine's own bits_sent trace integrates the same realized coins
+    np.testing.assert_allclose(np.diff(res.traces["bits_sent"]),
+                               res.traces["value_bytes"][1:] / (4 * N),
+                               rtol=1e-6)
+
+
+def test_partial_participation_payload_matches_appendix_d():
+    """Measured bytes under Appendix D: absent nodes bill nothing, and the
+    realized per-round value bytes are exactly 4K x participants (mean ->
+    p' K n within binomial sampling error)."""
+    p_part = 0.5
+    prob = glm_problem(d=D, m=32)
+    sub = FlatSubstrate(prob, N, D)
+    rc = make_round_compressor("randk", D, N, k=K, backend="sparse",
+                               p_participate=p_part)
+    hp = _hyper("dasha", rc, lipschitz_glm(prob))
+    res = _sim("dasha", rc, hp, sub)
+    parts = res.traces["participants"]
+    np.testing.assert_array_equal(res.traces["value_bytes"], 4 * K * parts)
+    tol = 4.0 * np.sqrt(p_part * (1 - p_part) / (T * N))
+    assert abs(parts.mean() / N - p_part) <= tol
+    # expected_payload_frac sees the wrapped payload p' K per node
+    assert rc.payload_per_node == pytest.approx(p_part * K)
+    assert expected_payload_frac(get_rule("dasha"), hp,
+                                 rc.payload_per_node, float(D)) \
+        == pytest.approx(p_part * K / D)
+
+
+def test_from_theory_receives_inflated_omega():
+    """Theorem D.1: the wrapper C_{p'} is in U((omega+1)/p' - 1), and that
+    inflated omega is what Hyper.from_theory actually consumes — both the
+    momentum a and the stepsize gamma."""
+    p_part = 0.25
+    base = make_round_compressor("randk", D, N, k=K)
+    rc = make_round_compressor("randk", D, N, k=K, p_participate=p_part)
+    omega_base = base.omega
+    omega_inflated = (omega_base + 1.0) / p_part - 1.0
+    assert rc.omega == pytest.approx(omega_inflated)
+
+    L = 3.7
+    hp = Hyper.from_theory("dasha", rc.omega, N, L=L, gamma_mult=2.0)
+    assert hp.a == pytest.approx(momentum_a(omega_inflated))
+    assert hp.a < momentum_a(omega_base)          # inflation slows momentum
+    assert hp.gamma == pytest.approx(
+        2.0 * theory.gamma_dasha(L, L, omega_inflated, N))
+    # and the un-wrapped spec would have allowed a larger stepsize
+    assert hp.gamma < 2.0 * theory.gamma_dasha(L, L, omega_base, N)

@@ -1,0 +1,165 @@
+"""Wire codec: byte-exact round-trips and measured-byte accounting
+(DESIGN.md §12; the transport side of §6's payload/wire split)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.compress import make_round_compressor
+from repro.fed import wire
+
+D, N, K = 40, 5, 6
+
+#: compressor x mode x backend matrix the codec must cover
+CASES = [
+    ("randk", "independent", "sparse", dict(k=K)),
+    ("randk", "shared_coords", "sparse", dict(k=K)),
+    ("randk", "independent", "dense", dict(k=K)),
+    ("randk", "shared_coords", "dense", dict(k=K)),
+    ("permk", "permk", "sparse", {}),
+    ("permk", "independent", "sparse", {}),
+    ("permk", "permk", "dense", {}),
+    ("bernoulli", "independent", "dense", dict(p=0.25)),
+    ("bernoulli", "shared_coords", "dense", dict(p=0.25)),
+    ("identity", "independent", "dense", {}),
+    ("qdither", "independent", "dense", dict(s=7)),
+]
+
+
+def _round(name, mode, backend, kw, key=0):
+    rc = make_round_compressor(name, D, N, mode=mode, backend=backend, **kw)
+    k = jax.random.PRNGKey(key)
+    deltas = jax.random.normal(jax.random.fold_in(k, 1), (N, D))
+    plan = rc.plan(k)
+    msgs = rc.compress(k, deltas)
+    return rc, plan, msgs
+
+
+@pytest.mark.parametrize("name,mode,backend,kw", CASES)
+def test_roundtrip_matches_dense_view(name, mode, backend, kw):
+    """decode(encode(round)) reproduces the in-memory messages exactly."""
+    rc, plan, msgs = _round(name, mode, backend, kw)
+    bufs = wire.encode_round(rc, plan, msgs, t=3)
+    dec = wire.decode_round(bufs, D, plan=plan)
+    ref = np.asarray(msgs.dense())
+    assert np.array_equal(dec, ref)
+
+
+@pytest.mark.parametrize("name,mode,backend,kw",
+                         [c for c in CASES if c[2] == "sparse"]
+                         + [("identity", "independent", "dense", {}),
+                            ("qdither", "independent", "dense", dict(s=7))])
+def test_roundtrip_bit_identity(name, mode, backend, kw):
+    """Wire-native formats round-trip BIT-identically (raw fp32 bits).
+
+    (Dense-backend masked messages are only value-equal: mask-multiply
+    leaves -0.0 at dropped coordinates, which are never on the wire and
+    reconstruct as +0.0 — same contract as SparseMessages.dense().)"""
+    rc, plan, msgs = _round(name, mode, backend, kw)
+    bufs = wire.encode_round(rc, plan, msgs, t=0)
+    dec = wire.decode_round(bufs, D, plan=plan)
+    assert dec.tobytes() == np.asarray(msgs.dense()).tobytes()
+
+
+def test_message_values_survive_bitwise():
+    """The shipped records themselves are bit-exact, including awkward
+    floats (denormals, -0.0, inf)."""
+    vals = np.array([1e-42, -0.0, np.inf, -1.5, 3.0], np.float32)
+    idx = np.array([0, 3, 7, 11, 39])
+    buf = wire.encode_sparse_idx(2, 9, D, idx, vals)
+    m = wire.decode(buf)
+    assert m.node == 2 and m.round == 9 and m.d == D
+    assert m.values.tobytes() == vals.tobytes()
+    assert np.array_equal(m.indices, idx)
+
+
+def test_sync_round_is_dense():
+    """A sync-coin round ships the dense megabatch gradient for every node
+    (Alg. 2 / MARINA), regardless of the compressor's own format."""
+    rc, plan, msgs = _round("randk", "independent", "sparse", dict(k=K))
+    sync = np.arange(N * D, dtype=np.float32).reshape(N, D)
+    bufs = wire.encode_round(rc, plan, msgs, t=0, coin=True,
+                             sync_values=sync)
+    rb = wire.round_bytes(bufs)
+    assert rb.value_bytes == 4 * N * D and rb.index_bytes == 0
+    assert np.array_equal(wire.decode_round(bufs, D, plan=plan), sync)
+
+
+def test_absent_nodes_encode_to_nothing():
+    rc, plan, msgs = _round("randk", "independent", "sparse", dict(k=K))
+    present = np.array([True, False, True, False, True])
+    bufs = wire.encode_round(rc, plan, msgs, t=0, present=present)
+    assert [b is None for b in bufs] == [False, True, False, True, False]
+    assert wire.round_bytes(bufs).per_node[1] == 0
+    dec = wire.decode_round(bufs, D, plan=plan)
+    assert not dec[1].any() and not dec[3].any()
+    assert np.array_equal(dec[0], np.asarray(msgs.dense())[0])
+
+
+def test_measured_bytes_match_wire_accounting():
+    """Total bytes = 4 * spec.wire_coords + fixed headers, per format."""
+    # independent RandK: private support ships as (idx, val) records
+    rc, plan, msgs = _round("randk", "independent", "sparse", dict(k=K))
+    rb = wire.round_bytes(wire.encode_round(rc, plan, msgs, 0))
+    assert rb.total_bytes == N * wire.HEADER_BYTES \
+        + 4 * N * rc.spec.wire_coords("independent")
+    assert rb.value_bytes == 4 * N * K and rb.index_bytes == 4 * N * K
+    # shared RandK: seed-derived support, values only
+    rc, plan, msgs = _round("randk", "shared_coords", "sparse", dict(k=K))
+    rb = wire.round_bytes(wire.encode_round(rc, plan, msgs, 0))
+    assert rb.total_bytes == N * wire.HEADER_BYTES \
+        + 4 * N * rc.spec.wire_coords("shared_coords")
+    assert rb.index_bytes == 0
+    # PermK: an 8-byte slice header + ceil(d/n) values per node
+    rc, plan, msgs = _round("permk", "permk", "sparse", {})
+    rb = wire.round_bytes(wire.encode_round(rc, plan, msgs, 0))
+    blk = -(-D // N)
+    assert rb.value_bytes == 4 * N * blk and rb.index_bytes == 0
+    assert rb.header_bytes == N * (wire.HEADER_BYTES + wire.PERMK_EXT_BYTES)
+
+
+def test_permk_slice_header_reconstructs_partition():
+    """The (shift, period) header + node id regenerate exactly the
+    perm_partition block, including the ragged d % n != 0 padding."""
+    d_odd = 37
+    rc = make_round_compressor("permk", d_odd, N, mode="permk",
+                               backend="sparse")
+    key = jax.random.PRNGKey(5)
+    deltas = jax.random.normal(key, (N, d_odd))
+    plan = rc.plan(key)
+    msgs = rc.compress(key, deltas)
+    bufs = wire.encode_round(rc, plan, msgs, 0)
+    dec = wire.decode_round(bufs, d_odd, plan=plan)
+    assert dec.tobytes() == np.asarray(msgs.dense()).tobytes()
+    # supports partition [0, d): disjoint and complete
+    supports = [wire.decode(b).indices for b in bufs]
+    allidx = np.concatenate(supports)
+    assert len(allidx) == d_odd and len(np.unique(allidx)) == d_odd
+
+
+def test_topk_content_defined_support():
+    """TopK has no seed to rederive its support from: it ships packed
+    (uint32 idx, float32 val) records and round-trips bit-identically."""
+    rows = np.asarray(jax.random.normal(jax.random.PRNGKey(2), (N, D)))
+    idx, vals = wire.topk_messages(rows, K)
+    bufs = [wire.encode_sparse_idx(i, 0, D, idx[i], vals[i])
+            for i in range(N)]
+    for i, buf in enumerate(bufs):
+        assert len(buf) == wire.HEADER_BYTES + 8 * K
+        m = wire.decode(buf)
+        dense = m.dense()
+        ref = np.zeros(D, np.float32)
+        ref[idx[i]] = vals[i]
+        assert dense.tobytes() == ref.tobytes()
+        # it kept the K largest magnitudes
+        assert set(idx[i]) == set(
+            np.argsort(-np.abs(rows[i]))[:K].tolist())
+
+
+def test_decode_rejects_unknown_version_and_missing_seed():
+    rc, plan, msgs = _round("randk", "shared_coords", "sparse", dict(k=K))
+    bufs = wire.encode_round(rc, plan, msgs, 0)
+    with pytest.raises(ValueError, match="shared round support"):
+        wire.decode(bufs[0])
+    bad = bytes([99]) + bufs[0][1:]
+    with pytest.raises(ValueError, match="wire version"):
+        wire.decode(bad)
