@@ -1,19 +1,28 @@
-"""Federated-learning flavour: DASHA with PARTIAL PARTICIPATION (Appendix D),
-run through the event-driven transport simulator (DESIGN.md §12).
+"""Federated-learning flavour: DASHA in the cross-device regime — a
+SAMPLED C-of-n client cohort per round (DESIGN.md §13), measured through
+the vectorized transport simulator (§12).
 
     PYTHONPATH=src python examples/federated_partial_participation.py
 
-Each round a node joins with probability p'; absent nodes send NOTHING —
-zero bytes on the simulated wire, and nobody waits for them.  Theorem D.1:
-C_{p'} in U((omega+1)/p' - 1), so the same DASHA theory applies with the
-inflated omega (``Hyper.from_theory`` absorbs it via ``comp.omega``), and
+Each round the server draws a uniform cohort of C clients; everyone else
+is OFFLINE — they compute nothing, send nothing (zero bytes on the
+simulated wire), and nobody waits for them.  Per-round compute runs on
+the gathered (C, d) slice of the persistent (n, d) client state, so the
+round costs O(C*d) instead of O(n*d).  Theorem D.1 with p' = C/n prices
+the variance: the same DASHA theory applies with omega inflated to
+(omega+1)/p' - 1 (``SampledFlatSubstrate.effective_omega``), and
 crucially the server never synchronizes clients — MARINA would
-periodically need every node to upload a DENSE vector in the same round.
+periodically need every one of the n clients to upload a DENSE vector in
+the same round (``Method.build`` refuses to sample it).
 
-The run below is therefore measured, not asserted: every message crosses
-the byte-exact wire codec (RandK ships packed (uint32 idx, float32 val)
-records) through a straggler-prone uplink, and the printed bytes/walltime
-come from the event log.
+The numbers below are measured, not asserted: the vectorized simulator
+bills every upload with byte-exact analytic wire costs (spot-checked
+against the codec in tests/test_fed_scale.py) through a straggler-prone
+uplink, under common random numbers — every cohort size faces the SAME
+network, so the wall-clock differences are the cohort's.  The classic
+Appendix-D Bernoulli wrapper (``p_participate``) remains available on the
+full-participation substrate, shown last for comparison through the
+byte-exact heap oracle.
 
 ``REPRO_EXAMPLE_ROUNDS`` shrinks the run for CI smoke jobs.
 """
@@ -25,10 +34,10 @@ import jax.numpy as jnp
 from repro.compress import make_round_compressor
 from repro.core.oracles import FiniteSumProblem
 from repro.data.pipeline import synthetic_classification
-from repro.fed import FedSim, LinkModel, Lognormal
-from repro.methods import FlatSubstrate, Hyper
+from repro.fed import FedSim, LinkModel, Lognormal, VecFedSim
+from repro.methods import FlatSubstrate, Hyper, SampledFlatSubstrate
 
-N_NODES, M, D, K = 8, 32, 40, 8
+N_NODES, M, D, K = 256, 8, 40, 8
 ROUNDS = int(os.environ.get("REPRO_EXAMPLE_ROUNDS", "800"))
 
 feats, labels = synthetic_classification(jax.random.PRNGKey(0), N_NODES, M, D)
@@ -37,22 +46,41 @@ problem = FiniteSumProblem(
     features=feats, labels=labels)
 
 L = float(jnp.mean(jnp.sum(feats ** 2, -1)) * 2)
-substrate = FlatSubstrate(problem, N_NODES, D)
 uplink = LinkModel(latency_s=0.02, bandwidth_Bps=1e5,
                    straggler=Lognormal(1.0))
+comp = make_round_compressor("randk", D, N_NODES, k=K, backend="sparse")
 
-for p_participate in (1.0, 0.5, 0.25):
-    comp = make_round_compressor("randk", D, N_NODES, k=K, backend="sparse",
-                                 p_participate=p_participate)
-    hyper = Hyper.from_theory("dasha", comp.omega, N_NODES, L=L,
-                              gamma_mult=16)
-    sim = FedSim("dasha", comp, substrate, hyper, uplink=uplink, seed=0)
+print(f"-- sampled cohorts, n={N_NODES} clients "
+      f"(vectorized sim, O(C*d) rounds) --")
+for c in (N_NODES, 64, 16):
+    sub = SampledFlatSubstrate(problem, N_NODES, D, c=c)
+    omega = sub.with_compressor(comp).effective_omega()
+    hyper = Hyper.from_theory("dasha", omega, N_NODES, L=L, gamma_mult=16)
+    sim = VecFedSim("dasha", comp, sub, hyper, uplink=uplink, seed=0)
     st = sim.init(jnp.zeros(D), jax.random.PRNGKey(1))
     res = sim.run(st, ROUNDS)
     s = res.summary
-    print(f"p'={p_participate:4.2f}  omega={comp.omega:6.1f}  "
+    print(f"C={c:4d}  omega={omega:6.1f}  gamma={hyper.gamma:.4f}  "
+          f"final ||grad||^2={res.traces['metric'][-1]:.3e}  "
+          f"wire KB up={s['bytes_up'] / 1e3:8.1f}  "
+          f"sim wall={s['wall_clock_s']:7.2f}s  "
+          f"clients/round={s['mean_participants']:.0f}")
+
+print("-- Appendix-D Bernoulli coins (heap oracle, every client computes; "
+      "transmission is coin-gated) --")
+for p_participate in (0.25,):
+    pp = make_round_compressor("randk", D, N_NODES, k=K, backend="sparse",
+                               p_participate=p_participate)
+    hyper = Hyper.from_theory("dasha", pp.omega, N_NODES, L=L,
+                              gamma_mult=16)
+    sim = FedSim("dasha", pp, FlatSubstrate(problem, N_NODES, D), hyper,
+                 uplink=uplink, seed=0)
+    st = sim.init(jnp.zeros(D), jax.random.PRNGKey(1))
+    res = sim.run(st, ROUNDS)
+    s = res.summary
+    print(f"p'={p_participate:4.2f}  omega={pp.omega:6.1f}  "
           f"gamma={hyper.gamma:.4f}  "
           f"final ||grad||^2={res.traces['metric'][-1]:.3e}  "
           f"wire KB up={s['bytes_up'] / 1e3:8.1f}  "
-          f"sim wall={s['wall_clock_s']:6.2f}s  "
+          f"sim wall={s['wall_clock_s']:7.2f}s  "
           f"avg clients/round={s['mean_participants']:.2f}")

@@ -26,7 +26,8 @@ from repro.compress.plan import (PAD, Plan, draw_mask,  # noqa: F401
                                  perm_partition, permk_owner, randk_indices)
 from repro.compress.spec import (MODES, REGISTRY, CompressorDef,  # noqa: F401
                                  CompressorSpec, make_plan, make_spec,
-                                 momentum_a, omega_bernoulli, omega_permk,
+                                 momentum_a, omega_bernoulli,
+                                 omega_participation, omega_permk,
                                  register)
 from repro.compress.treelevel import (bernoulli_compress,  # noqa: F401
                                       fused_tree_update, leaf_keys,

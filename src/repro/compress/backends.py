@@ -237,12 +237,26 @@ class RoundCompressor:
 
         Returns (messages, h_out, g_local_new); ``h_out`` is ``h_new``
         passed through (the fused kernel writes it in the same pass)."""
-        if self.backend == "fused":
-            return fused_estimator_update(self.plan(key), h_new, h,
-                                          g_local, a)
-        delta = h_new - h - a * (g_local - h)
-        msgs = self.compress(key, delta)
-        return msgs, h_new, msgs.add_to(g_local)
+        return estimator_update_with_plan(self.backend, self.plan(key),
+                                          h_new, h, g_local, a)
+
+
+def estimator_update_with_plan(backend: str, plan: Plan, h_new: jax.Array,
+                               h: jax.Array, g_local: jax.Array, a: float
+                               ) -> Tuple[Messages, jax.Array, jax.Array]:
+    """:meth:`RoundCompressor.estimator_update` with an externally supplied
+    (possibly transformed) plan — the hook the sampled-client substrate uses
+    to fold the cohort inflation n/C into the plan's scale before execution
+    (mirroring how Appendix-D coins fold into it in ``_wrap_participation``).
+    """
+    if backend == "fused":
+        return fused_estimator_update(plan, h_new, h, g_local, a)
+    delta = h_new - h - a * (g_local - h)
+    if backend == "sparse":
+        msgs = apply_sparse(plan, delta)
+    else:
+        msgs = apply_dense(plan, delta)
+    return msgs, h_new, msgs.add_to(g_local)
 
 
 def make_round_compressor(name: str, d: int, n: int, *,

@@ -46,7 +46,7 @@ class CompressorSpec:
         participation per Theorem D.1: (omega+1)/p' - 1."""
         base = REGISTRY[self.name].omega(self)
         if self.p_participate < 1.0:
-            return (base + 1.0) / self.p_participate - 1.0
+            return omega_participation(base, self.p_participate)
         return base
 
     @property
@@ -271,3 +271,11 @@ def omega_permk(n: int) -> float:
 def momentum_a(omega: float) -> float:
     """The compressor momentum a = 1/(2 omega + 1) (Theorem 6.1)."""
     return 1.0 / (2.0 * omega + 1.0)
+
+
+def omega_participation(omega: float, p: float) -> float:
+    """Theorem D.1: wrapping a U(omega) compressor in a probability-p
+    participation (or uniform C-of-n cohort sampling, p = C/n) layer yields
+    a U((omega+1)/p - 1) compressor — the same DASHA theory applies with
+    the inflated omega."""
+    return (omega + 1.0) / p - 1.0

@@ -5,15 +5,23 @@ payload accounting only asserts, this layer measures.
   message the plan layer can emit (dense / RandK / TopK / PermK / shared-
   seed formats), with measured-vs-analytic byte reconciliation;
 * :mod:`repro.fed.net`  — pluggable latency / bandwidth / straggler link
-  models (constant, lognormal, heavy-tail Pareto);
-* :mod:`repro.fed.sim`  — the event-driven client/server simulator: engine
-  math, real bytes, real clocks; DASHA applies each client's message as it
-  lands while MARINA / SYNC-MVR block on their synchronization barrier.
+  models (constant, lognormal, heavy-tail Pareto), with campaign-level
+  common-random-number multiplier matrices shared by both simulators;
+* :mod:`repro.fed.sim`  — the event-driven client/server simulator (the
+  small-n byte-exact ORACLE): engine math, codec bytes, an explicit
+  arrival heap; DASHA applies each client's message as it lands while
+  MARINA / SYNC-MVR block on their synchronization barrier;
+* :mod:`repro.fed.vecsim` — the vectorized engine: the same campaign
+  (math + analytic bytes + masked-max barriers) as chunked compiled
+  scans, for n = 10^4-10^5 clients.
 """
 from repro.fed.net import (Constant, LinkModel, Lognormal,  # noqa: F401
-                           Pareto, Straggler, severity_grid)
+                           Pareto, Straggler, campaign_streams,
+                           round_multipliers, severity_grid)
 from repro.fed.sim import FedEvent, FedSim, SimResult, simulate  # noqa: F401
+from repro.fed.vecsim import VecFedSim  # noqa: F401
 from repro.fed.wire import (FMT_DENSE, FMT_PERMK,  # noqa: F401
                             FMT_SPARSE_IDX, FMT_SPARSE_SEED, RoundBytes,
-                            WireMessage, decode, decode_round, encode_round,
-                            measured_bytes, round_bytes, topk_messages)
+                            WireMessage, WireSchema, decode, decode_round,
+                            encode_round, measured_bytes, round_bytes,
+                            topk_messages, wire_schema)

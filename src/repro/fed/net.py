@@ -21,10 +21,13 @@ import numpy as np
 
 
 class Straggler:
-    """Slowdown-multiplier distribution (>= 1);
-    ``draw(rng, size) -> (size,)``."""
+    """Slowdown-multiplier distribution (>= 1); ``draw(rng, size)`` where
+    ``size`` is an int or a shape tuple (campaign matrices draw
+    ``(rounds, n)`` in one call — for a PCG64 generator that consumes the
+    stream exactly like ``rounds`` sequential ``(n,)`` draws, which is the
+    heap-vs-vectorized CRN contract)."""
 
-    def draw(self, rng: np.random.Generator, size: int) -> np.ndarray:
+    def draw(self, rng: np.random.Generator, size) -> np.ndarray:
         raise NotImplementedError
 
 
@@ -77,7 +80,34 @@ class LinkModel:
         """Per-client transfer times for one round; ``nbytes`` is (n,)."""
         nbytes = np.asarray(nbytes, np.float64)
         mult = self.straggler.draw(rng, nbytes.size)
-        return self.latency_s + nbytes / self.bandwidth_Bps * mult
+        return self.transfer_s(nbytes, mult)
+
+    def transfer_s(self, nbytes, mult) -> np.ndarray:
+        """Transfer time from pre-drawn multipliers (any matching shape):
+        latency + bytes / bandwidth * slowdown."""
+        return self.latency_s + np.asarray(nbytes, np.float64) \
+            / self.bandwidth_Bps * mult
+
+
+def campaign_streams(rng: np.random.Generator, rounds: int):
+    """One spawned child generator per round: the campaign's
+    common-random-number plan, O(rounds) PCG states instead of an
+    O(rounds * n) float64 matrix, and — because every round owns its own
+    stream — identical draws no matter how a simulator chunks the
+    campaign."""
+    return rng.spawn(rounds)
+
+
+def round_multipliers(stream: np.random.Generator, downlink: LinkModel,
+                      uplink: LinkModel, n: int):
+    """One round's straggler multipliers from its campaign stream — the
+    DOWNLINK vector first, then the UPLINK vector (the fixed order both
+    simulators share, so the heap oracle and the vectorized engine face
+    bit-identical networks under one seed).  Every round draws for every
+    client whether or not it participates — the CRN contract that makes
+    two methods' wall-clock difference the methods', not the noise's."""
+    return (downlink.straggler.draw(stream, n),
+            uplink.straggler.draw(stream, n))
 
 
 def severity_grid(kind: str = "lognormal", levels=(0.0, 0.5, 1.0, 1.5, 2.0)):

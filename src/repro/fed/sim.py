@@ -1,5 +1,5 @@
 """Layer 3 of the federated transport subsystem: the event-driven
-client/server simulator (DESIGN.md §12).
+client/server simulator (DESIGN.md §12) — the small-n ORACLE.
 
 The method MATH is exactly the engine's: every round executes
 ``Method.step_full`` (the same traced body as ``Method.step``), so the
@@ -21,15 +21,26 @@ lockstep driver.  What the simulator adds is TIME and BYTES:
   the slowest straggler gates the round.
 
 Partial participation is an arrival process whose per-round realization is
-the engine's own Appendix-D coins (``StepInfo.present``, recovered from the
-plan) — the bytes the simulator bills and the math the engine runs always
-agree about who was absent.
+the engine's own randomness — Appendix-D coins recovered from the plan, or
+the sampled substrate's C-of-n cohort (DESIGN.md §13) — so the bytes the
+simulator bills and the math the engine runs always agree about who was
+absent.
 
-Straggler draws are common random numbers: every round draws exactly one
-downlink and one uplink multiplier per client whether or not the client
-participates, so two methods simulated with the same ``seed`` face the
-same network and their wall-clock difference is the methods', not the
-noise's.
+Straggler draws are common random numbers, pre-drawn per campaign through
+:func:`repro.fed.net.campaign_multipliers` (downlink matrix first, then
+uplink): every round holds one multiplier per client per link whether or
+not the client participates, so two methods simulated with the same
+``seed`` face the same network — and the vectorized engine
+(:mod:`repro.fed.vecsim`) consumes the SAME matrices, which is what makes
+the two simulators comparable draw for draw.
+
+Execution is chunked (DESIGN.md §10 conventions): the engine math runs as
+jitted ``lax.scan`` segments whose per-round observables (messages, coins,
+participation, metric) stream to the host once per chunk — no per-round
+dispatch, no per-round device->host sync — and the byte-exact encoding +
+arrival heap replay from the stacked arrays.  This simulator remains the
+REFERENCE: per-client codec bytes and an explicit event heap; use
+:class:`repro.fed.vecsim.VecFedSim` for large n.
 """
 from __future__ import annotations
 
@@ -41,11 +52,14 @@ import jax
 import numpy as np
 
 from repro.fed import wire
-from repro.fed.net import LinkModel
+from repro.fed.net import (LinkModel, campaign_streams,
+                           round_multipliers)
 from repro.methods.engine import Hyper, Method
 from repro.methods.rules import get_rule
 
 X_BYTES_PER_COORD = 4                  # the server broadcast is dense fp32
+
+DEFAULT_CHUNK = 128                    # scan-segment length (memory knob)
 
 
 class FedEvent(NamedTuple):
@@ -65,6 +79,14 @@ class SimResult(NamedTuple):
     summary: Dict[str, float]
 
 
+def _expand_cohort(arr: np.ndarray, sel: np.ndarray, n: int) -> np.ndarray:
+    """Scatter a (C, ...) cohort array onto (n, ...) rows (absent rows 0 —
+    they are never encoded)."""
+    out = np.zeros((n,) + arr.shape[1:], arr.dtype)
+    out[sel] = arr
+    return out
+
+
 @dataclasses.dataclass
 class FedSim:
     """Event-driven federated run of one variant x compressor x substrate.
@@ -77,12 +99,13 @@ class FedSim:
 
     variant: str
     comp: Any                          # RoundCompressor
-    substrate: Any                     # FlatSubstrate
+    substrate: Any                     # FlatSubstrate / SampledFlatSubstrate
     hyper: Hyper
     uplink: LinkModel = LinkModel()
     downlink: LinkModel = LinkModel()
     compute_s: float = 0.01
     seed: int = 0
+    chunk: int = DEFAULT_CHUNK
 
     def __post_init__(self):
         self.rule = get_rule(self.variant)
@@ -96,34 +119,107 @@ class FedSim:
                 "FedSim needs a substrate exposing estimator_update_full "
                 "(per-node wire messages) — currently FlatSubstrate only; "
                 f"got {type(self.substrate).__name__}")
+        self.sampled = bool(getattr(self.substrate, "samples_clients",
+                                    False))
+        self.n = int(getattr(self.substrate, "n", self.comp.n))
+        if self.sampled and self.comp.spec.name == "permk":
+            raise NotImplementedError(
+                "heap-sim PERMK encoding under client sampling: the PERMK "
+                "wire format reconstructs indices from the node field, but "
+                "a cohort slice is keyed by slot — use VecFedSim (analytic "
+                "bytes are exact: blk values per sampled client)")
         self.method: Method = Method.build(self.variant, self.comp,
                                            self.substrate, self.hyper)
-        self._step = jax.jit(lambda s: self.method.step_full(s, None))
         # the engine's round keys: key, k_h, k_c, k_coin = split(key, 4);
         # the plan (and with it the wire support) is drawn from k_c.
         # (Eager, not jitted: Plan.kind is a static string.)  The codec
         # only reads the plan when the support is not already in the
         # message records (PermK slice headers, shared seeds, dense-backend
         # masks) — skip the per-round host recompute otherwise.
-        self._plan = lambda key: self.comp.plan(jax.random.split(key, 4)[2])
+        if self.sampled:
+            self._enc_rc = self.substrate.with_compressor(
+                self.comp).cohort_rc
+        else:
+            self._enc_rc = self.comp
+        self._plan = lambda key: self._enc_rc.plan(
+            jax.random.split(key, 4)[2])
         spec = self.comp.spec
         self._need_plan = not (spec.name == "randk"
                                and self.comp.mode == "independent"
                                and self.comp.backend == "sparse")
+        self._compiled: Dict[Any, Callable] = {}
+        self._default_metric = None
 
     def init(self, x0, key, **kw):
         return self.method.init(x0, key, **kw)
+
+    def _metric_fn(self, metric_fn):
+        """Resolve the metric ONCE per sim: a fresh default lambda per run
+        would miss the compile cache and re-trace every chunk."""
+        if metric_fn is not None:
+            return metric_fn
+        if self._default_metric is None:
+            self._default_metric = self.substrate.default_metric()
+        return self._default_metric
+
+    def _chunk_fn(self, length: int, metric_fn) -> Callable:
+        """Jitted scan over ``length`` engine rounds, streaming the round
+        observables (key, coin, present/cohort, messages, sync upload,
+        metric, bits) to the host ONCE per chunk."""
+        fn = self._compiled.get((length, metric_fn))
+        if fn is not None:
+            return fn
+        sub, rule = self.substrate, self.rule
+
+        def body(st, _):
+            ys = {"key": st.key}
+            if self.sampled:
+                ys["sel"] = sub.round_cohort(st.key)
+            new, info = self.method.step_full(st, None)
+            ys["metric"] = metric_fn(new)
+            ys["bits"] = new.bits_sent
+            ys["values"] = info.messages.values
+            if getattr(info.messages, "indices", None) is not None:
+                ys["indices"] = info.messages.indices
+            if info.coin is not None:
+                ys["coin"] = info.coin
+            if info.present is not None:
+                ys["present"] = info.present
+            if rule.has_sync:
+                ys["sync"] = info.sync_dense
+            return new, ys
+
+        fn = jax.jit(lambda st: jax.lax.scan(body, st, None, length=length))
+        self._compiled[(length, metric_fn)] = fn
+        return fn
+
+    def _expand_plan(self, plan, sel: np.ndarray, n: int):
+        """Re-key a cohort plan's per-row support by CLIENT id so
+        :func:`repro.fed.wire.encode_round` (which walks client rows) reads
+        the right support: shared supports broadcast (every row is the
+        same), private supports scatter through the cohort."""
+        rep = {}
+        for field in ("indices", "mask"):
+            arr = getattr(plan, field)
+            if arr is None:
+                continue
+            arr = np.asarray(arr)
+            if self.comp.mode == "shared_coords":
+                rep[field] = np.broadcast_to(arr[0], (n,) + arr.shape[1:])
+            else:
+                rep[field] = _expand_cohort(arr, sel, n)
+        return plan._replace(**rep) if rep else plan
 
     def run(self, state, rounds: int, *,
             metric_fn: Optional[Callable] = None,
             log_events: bool = False, max_events: int = 100_000
             ) -> SimResult:
-        if metric_fn is None:
-            metric_fn = self.substrate.default_metric()
+        metric_fn = self._metric_fn(metric_fn)
         rng = np.random.default_rng(self.seed)
-        n = self.comp.n
+        n = self.n
         d = int(self.comp.spec.d)
         x_bytes = X_BYTES_PER_COORD * d
+        streams = campaign_streams(rng, rounds)
 
         names = ("metric", "bits_sent", "bytes_up", "value_bytes",
                  "bytes_down", "sim_wall_clock", "sync_round",
@@ -135,60 +231,84 @@ class FedSim:
         bytes_down_total = 0
         sync_rounds = 0
 
-        for t in range(rounds):
-            plan = self._plan(state.key) if self._need_plan else None
-            state, info = self._step(state)
-            coin = bool(info.coin) if info.coin is not None else False
-            present = np.ones(n, bool) if info.present is None \
-                else np.asarray(info.present)
-            if coin and self.rule.sync_requires_all:
-                # the barrier: ALL clients answer the sync round
-                active = np.ones(n, bool)
-            else:
-                active = present
-            bufs = wire.encode_round(
-                self.comp, plan, info.messages, t, coin=coin,
-                sync_values=info.sync_dense, present=active)
-            rb = wire.round_bytes(bufs)
-            up_bytes = np.asarray(rb.per_node, np.float64)
-            down_bytes = np.where(active, x_bytes, 0).astype(np.float64)
+        done = 0
+        while done < rounds:
+            length = min(self.chunk, rounds - done)
+            state, ys = self._chunk_fn(length, metric_fn)(state)
+            ys = jax.device_get(ys)                # ONE transfer per chunk
+            for j in range(length):
+                t = done + j
+                coin = bool(ys["coin"][j]) if "coin" in ys else False
+                if "present" in ys:
+                    present = np.asarray(ys["present"][j], bool)
+                else:
+                    present = np.ones(n, bool)
+                if coin and self.rule.sync_requires_all:
+                    # the barrier: ALL clients answer the sync round
+                    active = np.ones(n, bool)
+                else:
+                    active = present
+                vals = ys["values"][j]
+                idxs = ys.get("indices")
+                idxs = None if idxs is None else idxs[j]
+                if self.sampled:
+                    sel = np.asarray(ys["sel"][j])
+                    vals = _expand_cohort(vals, sel, n)
+                    if idxs is not None:
+                        idxs = _expand_cohort(idxs, sel, n)
+                msgs = _HostMessages(vals, idxs)
+                plan = self._plan(ys["key"][j]) if self._need_plan else None
+                if self.sampled and plan is not None:
+                    plan = self._expand_plan(plan, sel, n)
+                bufs = wire.encode_round(
+                    self.comp, plan, msgs, t, coin=coin,
+                    sync_values=ys.get("sync", [None] * length)[j],
+                    present=active)
+                rb = wire.round_bytes(bufs)
+                up_bytes = np.asarray(rb.per_node, np.float64)
+                down_bytes = np.where(active, x_bytes, 0) \
+                    .astype(np.float64)
 
-            # common-random-numbers: both links draw all n multipliers
-            # every round, participant or not
-            t_down = self.downlink.delays(rng, down_bytes)
-            t_up = self.uplink.delays(rng, up_bytes)
-            heap = []
-            for i in range(n):
-                if not active[i]:
-                    continue
-                arrive = now + t_down[i] + self.compute_s + t_up[i]
-                heapq.heappush(heap, (arrive, i))
-            # drain arrivals in time order: the server applies m_i the
-            # moment it lands (sum-structured g makes order irrelevant to
-            # the math; the LAST required arrival completes the round)
-            completion = now + self.downlink.latency_s
-            while heap:
-                at, i = heapq.heappop(heap)
-                completion = at
+                # common random numbers: every client holds a draw on both
+                # links this round, participant or not
+                m_down, m_up = round_multipliers(
+                    streams[t], self.downlink, self.uplink, n)
+                t_down = self.downlink.transfer_s(down_bytes, m_down)
+                t_up = self.uplink.transfer_s(up_bytes, m_up)
+                delay = t_down + self.compute_s + t_up
+                heap = []
+                for i in range(n):
+                    if not active[i]:
+                        continue
+                    heapq.heappush(heap, (now + delay[i], i))
+                # drain arrivals in time order: the server applies m_i the
+                # moment it lands (sum-structured g makes order irrelevant
+                # to the math; the LAST required arrival completes the
+                # round)
+                completion = now + self.downlink.latency_s
+                while heap:
+                    at, i = heapq.heappop(heap)
+                    completion = at
+                    if log_events and len(events) < max_events:
+                        events.append(FedEvent(at, "apply", i, t,
+                                               rb.per_node[i]))
                 if log_events and len(events) < max_events:
-                    events.append(FedEvent(at, "apply", i, t,
-                                           rb.per_node[i]))
-            if log_events and len(events) < max_events:
-                events.append(FedEvent(completion, "round", -1, t,
-                                       rb.total_bytes))
-            now = completion
+                    events.append(FedEvent(completion, "round", -1, t,
+                                           rb.total_bytes))
+                now = completion
 
-            bytes_up_total += rb.total_bytes
-            bytes_down_total += int(down_bytes.sum())
-            sync_rounds += int(coin)
-            tr["metric"][t] = float(metric_fn(state))
-            tr["bits_sent"][t] = float(state.bits_sent)
-            tr["bytes_up"][t] = rb.total_bytes
-            tr["value_bytes"][t] = rb.value_bytes
-            tr["bytes_down"][t] = down_bytes.sum()
-            tr["sim_wall_clock"][t] = now
-            tr["sync_round"][t] = float(coin)
-            tr["participants"][t] = float(active.sum())
+                bytes_up_total += rb.total_bytes
+                bytes_down_total += int(down_bytes.sum())
+                sync_rounds += int(coin)
+                tr["metric"][t] = float(ys["metric"][j])
+                tr["bits_sent"][t] = float(ys["bits"][j])
+                tr["bytes_up"][t] = rb.total_bytes
+                tr["value_bytes"][t] = rb.value_bytes
+                tr["bytes_down"][t] = down_bytes.sum()
+                tr["sim_wall_clock"][t] = now
+                tr["sync_round"][t] = float(coin)
+                tr["participants"][t] = float(active.sum())
+            done += length
 
         summary = {
             "rounds": float(rounds),
@@ -204,16 +324,36 @@ class FedSim:
                          summary=summary)
 
 
+class _HostMessages(NamedTuple):
+    """Host-side stand-in for the backend message containers: the codec
+    only reads ``.values`` / ``.indices``."""
+
+    values: np.ndarray
+    indices: Optional[np.ndarray]
+
+
 def simulate(variant: str, comp, substrate, hyper: Hyper, x0, key, *,
              rounds: int, uplink: Optional[LinkModel] = None,
              downlink: Optional[LinkModel] = None, compute_s: float = 0.01,
              seed: int = 0, init_kw: Optional[dict] = None,
-             metric_fn=None, log_events: bool = False) -> SimResult:
-    """One-shot convenience: build the sim, init the method, run it."""
-    sim = FedSim(variant=variant, comp=comp, substrate=substrate,
-                 hyper=hyper, uplink=uplink or LinkModel(),
-                 downlink=downlink or LinkModel(), compute_s=compute_s,
-                 seed=seed)
+             metric_fn=None, log_events: bool = False,
+             engine: str = "heap") -> SimResult:
+    """One-shot convenience: build the sim, init the method, run it.
+
+    ``engine="heap"`` (default) is this module's event-driven reference;
+    ``engine="vec"`` runs :class:`repro.fed.vecsim.VecFedSim` — same
+    bytes, same network draws, one compiled program (DESIGN.md §12)."""
+    if engine == "vec":
+        from repro.fed.vecsim import VecFedSim
+        cls = VecFedSim
+    elif engine == "heap":
+        cls = FedSim
+    else:
+        raise ValueError(f"unknown sim engine {engine!r}")
+    sim = cls(variant=variant, comp=comp, substrate=substrate,
+              hyper=hyper, uplink=uplink or LinkModel(),
+              downlink=downlink or LinkModel(), compute_s=compute_s,
+              seed=seed)
     state = sim.init(x0, key, **(init_kw or {}))
-    return sim.run(state, rounds, metric_fn=metric_fn,
-                   log_events=log_events)
+    kw = {} if engine == "vec" else {"log_events": log_events}
+    return sim.run(state, rounds, metric_fn=metric_fn, **kw)

@@ -1,0 +1,221 @@
+"""The vectorized federated simulator (DESIGN.md §12): an entire campaign
+— engine math, wire bytes, network time — as chunked compiled scans.
+
+Where :class:`repro.fed.sim.FedSim` (the retained small-n ORACLE) encodes
+every client's upload through the byte codec and replays arrivals on an
+explicit heap, this engine computes the same quantities in array math:
+
+* **Bytes** are analytic.  :func:`repro.fed.wire.wire_schema` classifies
+  the compressor's wire format statically (header bytes, bytes per shipped
+  value, static count); data-dependent counts (Bernoulli masks) come from
+  the substrate's ``round_wire_counts`` — the same plan the engine draws,
+  recomputed in-scan (free under jit: pure + CSE).  Per-round totals are
+  then exact integers, spot-checked byte-for-byte against the codec in
+  tests/test_fed_scale.py.
+* **Time** is a masked max.  Straggler multipliers are the SAME
+  common-random-number campaign matrices the heap sim consumes
+  (:func:`repro.fed.net.campaign_multipliers`, downlink first then
+  uplink), streamed into the scan as per-chunk xs; each client's arrival
+  is ``latency_down + bytes_down/bw + compute + latency_up + bytes_up/bw
+  * mult`` and a round completes at the max over the REQUIRED clients
+  (all n on a ``sync_requires_all`` coin round, the participants
+  otherwise; an empty round costs the downlink latency).  Arrival ORDER
+  never enters the math — the server state is a sum — which is exactly
+  why the event heap can collapse to a max.
+* **Everything scans.**  One jitted ``lax.scan`` per chunk carries the
+  MethodState and emits per-round scalars only (metric, bits, coin,
+  participants, value counts, round time): no per-round dispatch, no
+  per-round host sync, O(rounds/chunk) transfers per campaign.
+
+Equivalence contract (tests/test_fed_scale.py): against the heap oracle
+under the same seed, byte and participation traces are BIT-exact (they are
+integer functions of the same engine randomness), and wall-clock agrees to
+float32 resolution (the scan computes delays in f32; the oracle in f64).
+Throughput: >= 10x the heap reference at n >= 1024
+(benchmarks/fed_scale_bench.py -> BENCH_fed_scale.json).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fed import wire
+from repro.fed.net import LinkModel, campaign_streams, round_multipliers
+from repro.fed.sim import DEFAULT_CHUNK, X_BYTES_PER_COORD, SimResult
+from repro.methods.engine import Hyper, Method
+from repro.methods.rules import get_rule
+
+
+@dataclasses.dataclass
+class VecFedSim:
+    """Vectorized federated run of one variant x compressor x substrate.
+
+    Drop-in for :class:`repro.fed.sim.FedSim` (same constructor, same
+    trace/summary schema, no event log): built for n = 10^4-10^5 clients x
+    10^3 rounds, including the sampled-client substrate whose rounds cost
+    O(C*d) inside the same scan."""
+
+    variant: str
+    comp: Any                          # RoundCompressor
+    substrate: Any                     # FlatSubstrate / SampledFlatSubstrate
+    hyper: Hyper
+    uplink: LinkModel = LinkModel()
+    downlink: LinkModel = LinkModel()
+    compute_s: float = 0.01
+    seed: int = 0
+    chunk: int = DEFAULT_CHUNK
+
+    def __post_init__(self):
+        self.rule = get_rule(self.variant)
+        if self.rule.sync_requires_all and self.comp.spec.p_participate < 1:
+            raise ValueError(
+                f"{self.rule.name!r} has a client-synchronization barrier "
+                "(sync_requires_all): Appendix-D partial participation "
+                "does not apply — every client must answer sync rounds")
+        if not hasattr(self.substrate, "estimator_update_full"):
+            raise ValueError(
+                "VecFedSim needs a substrate exposing estimator_update_full"
+                f" — got {type(self.substrate).__name__}")
+        self.sampled = bool(getattr(self.substrate, "samples_clients",
+                                    False))
+        self.n = int(getattr(self.substrate, "n", self.comp.n))
+        self._bound = self.substrate.with_compressor(self.comp)
+        self.schema = wire.wire_schema(
+            self._bound.cohort_rc if self.sampled else self.comp)
+        self.method: Method = Method.build(self.variant, self.comp,
+                                           self.substrate, self.hyper)
+        self._compiled: Dict[Any, Callable] = {}
+        self._default_metric = None
+
+    def init(self, x0, key, **kw):
+        return self.method.init(x0, key, **kw)
+
+    def _metric_fn(self, metric_fn):
+        """Resolve the metric ONCE per sim: a fresh default lambda per run
+        would miss the compile cache and re-trace every chunk."""
+        if metric_fn is not None:
+            return metric_fn
+        if self._default_metric is None:
+            self._default_metric = self.substrate.default_metric()
+        return self._default_metric
+
+    def _chunk_fn(self, length: int, metric_fn) -> Callable:
+        fn = self._compiled.get((length, metric_fn))
+        if fn is not None:
+            return fn
+        n, d = self.n, int(self.comp.spec.d)
+        rule, schema = self.rule, self.schema
+        x_bytes = X_BYTES_PER_COORD * d
+        dense_up = float(wire.HEADER_BYTES + 4 * d)
+        lat_d = float(self.downlink.latency_s)
+
+        def body(st, xs):
+            m_down, m_up = xs                              # (n,) f32 each
+            key = st.key                                   # pre-step key
+            new, info = self.method.step_full(st, None)
+            coin = info.coin if info.coin is not None \
+                else jnp.zeros((), bool)
+            present = info.present if info.present is not None \
+                else jnp.ones((n,), bool)
+            if rule.sync_requires_all and info.coin is not None:
+                active = jnp.logical_or(present, coin)     # the barrier
+            else:
+                active = present
+            if schema.static_count is None:
+                counts = self._bound.round_wire_counts(key)
+            else:
+                counts = jnp.full((n,), schema.static_count, jnp.int32)
+            counts = counts * active                       # absent: 0
+
+            # per-client wire bytes (f32 is exact below 2^24 per client)
+            comp_b = schema.header_bytes \
+                + schema.bytes_per_value * counts.astype(jnp.float32)
+            up_b = jnp.where(coin, dense_up, comp_b) \
+                * active.astype(jnp.float32)
+            down_b = x_bytes * active.astype(jnp.float32)
+            delay = self.downlink.latency_s \
+                + down_b / self.downlink.bandwidth_Bps * m_down \
+                + self.compute_s \
+                + self.uplink.latency_s \
+                + up_b / self.uplink.bandwidth_Bps * m_up
+            masked = jnp.where(active, delay, -jnp.inf)
+            n_active = jnp.sum(active.astype(jnp.int32))
+            round_t = jnp.where(n_active > 0, jnp.max(masked), lat_d)
+            ys = {"metric": metric_fn(new), "bits": new.bits_sent,
+                  "coin": coin, "participants": n_active,
+                  "counts_sum": jnp.sum(counts), "round_t": round_t}
+            return new, ys
+
+        def scan_chunk(st, m_down, m_up):
+            return jax.lax.scan(body, st, (m_down, m_up))
+
+        fn = jax.jit(scan_chunk)
+        self._compiled[(length, metric_fn)] = fn
+        return fn
+
+    def run(self, state, rounds: int, *,
+            metric_fn: Optional[Callable] = None) -> SimResult:
+        metric_fn = self._metric_fn(metric_fn)
+        n, d = self.n, int(self.comp.spec.d)
+        rng = np.random.default_rng(self.seed)
+        streams = campaign_streams(rng, rounds)
+        if rounds <= 0:
+            return SimResult(state=state,
+                             traces={}, events=None,
+                             summary={"rounds": 0.0, "wall_clock_s": 0.0})
+
+        parts = []
+        done = 0
+        while done < rounds:
+            length = min(self.chunk, rounds - done)
+            # materialize only this chunk's (length, n) multiplier slices
+            # (each round's spawned stream draws downlink then uplink —
+            # the same order the heap oracle consumes)
+            md = np.empty((length, n), np.float32)
+            mu = np.empty((length, n), np.float32)
+            for j in range(length):
+                md[j], mu[j] = round_multipliers(
+                    streams[done + j], self.downlink, self.uplink, n)
+            state, ys = self._chunk_fn(length, metric_fn)(
+                state, jnp.asarray(md), jnp.asarray(mu))
+            parts.append(jax.device_get(ys))       # ONE transfer per chunk
+            done += length
+        ys = {k: np.concatenate([p[k] for p in parts]) for k in parts[0]}
+
+        # exact byte traces from the per-round integers (int64 on host —
+        # immune to the in-scan int32/f32 ranges)
+        coin = ys["coin"].astype(bool)
+        part = ys["participants"].astype(np.int64)
+        csum = ys["counts_sum"].astype(np.int64)
+        head, bpv = self.schema.header_bytes, self.schema.bytes_per_value
+        dense_total = n * (wire.HEADER_BYTES + 4 * d)
+        bytes_up = np.where(coin, dense_total, head * part + bpv * csum)
+        value_bytes = np.where(coin, n * 4 * d, 4 * csum)
+        bytes_down = X_BYTES_PER_COORD * d * part
+        wall = np.cumsum(ys["round_t"].astype(np.float64))
+
+        traces = {
+            "metric": ys["metric"].astype(np.float64),
+            "bits_sent": ys["bits"].astype(np.float64),
+            "bytes_up": bytes_up.astype(np.float64),
+            "value_bytes": value_bytes.astype(np.float64),
+            "bytes_down": bytes_down.astype(np.float64),
+            "sim_wall_clock": wall,
+            "sync_round": coin.astype(np.float64),
+            "participants": part.astype(np.float64),
+        }
+        summary = {
+            "rounds": float(rounds),
+            "wall_clock_s": float(wall[-1]) if rounds else 0.0,
+            "bytes_up": float(bytes_up.sum()),
+            "bytes_down": float(bytes_down.sum()),
+            "sync_rounds": float(coin.sum()),
+            "mean_participants": float(part.mean()),
+            "mean_bytes_up_per_round": float(bytes_up.sum()) / rounds,
+        }
+        return SimResult(state=state, traces=traces, events=None,
+                         summary=summary)

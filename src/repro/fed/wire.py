@@ -63,6 +63,52 @@ PERMK_EXT_BYTES = _PERMK_EXT.size       # 8
 #: packed (uint32 idx, float32 val) record — the SPARSE_IDX body
 REC_DTYPE = np.dtype([("idx", "<u4"), ("val", "<f4")])
 
+#: the 16-byte header as a packed numpy dtype (== _HEADER's layout), used by
+#: the vectorized round encoder and asserted equal in tests/test_fed_wire.py
+HDR_DTYPE = np.dtype([("ver", "u1"), ("fmt", "u1"), ("node", "<u2"),
+                      ("round", "<u4"), ("d", "<u4"), ("count", "<u4")])
+EXT_DTYPE = np.dtype([("shift", "<u4"), ("period", "<u4")])
+
+
+class WireSchema(NamedTuple):
+    """Static byte layout of one compressor x mode x backend on this wire —
+    everything the vectorized simulator needs to bill a round analytically
+    (spot-checked byte-exact against :func:`encode_round` in
+    tests/test_fed_scale.py):
+
+    * ``header_bytes``    — fixed per-message overhead (16, +8 for PERMK);
+    * ``bytes_per_value`` — 4 (values only) or 8 (a private support ships
+      its packed uint32 index next to every float32 value);
+    * ``static_count``    — shipped value scalars per message when the
+      count is data-independent; None for Bernoulli masks, whose realized
+      counts come from the round plan
+      (:meth:`repro.methods.substrates.FlatSubstrate.round_wire_counts`).
+    """
+
+    fmt: int
+    header_bytes: int
+    bytes_per_value: int
+    static_count: Optional[int]
+
+
+def wire_schema(rc) -> WireSchema:
+    """Classify a :class:`repro.compress.RoundCompressor`'s non-sync wire
+    format (sync/coin rounds are always DENSE: ``HEADER_BYTES + 4 d``)."""
+    spec, mode = rc.spec, rc.mode
+    d = int(spec.d)
+    if spec.name == "permk":
+        blk = -(-d // spec.n)
+        return WireSchema(FMT_PERMK, HEADER_BYTES + PERMK_EXT_BYTES, 4, blk)
+    if spec.name == "randk":
+        if mode == "shared_coords":
+            return WireSchema(FMT_SPARSE_SEED, HEADER_BYTES, 4, int(spec.k))
+        return WireSchema(FMT_SPARSE_IDX, HEADER_BYTES, 8, int(spec.k))
+    if spec.name == "bernoulli":
+        if mode == "shared_coords":
+            return WireSchema(FMT_SPARSE_SEED, HEADER_BYTES, 4, None)
+        return WireSchema(FMT_SPARSE_IDX, HEADER_BYTES, 8, None)
+    return WireSchema(FMT_DENSE, HEADER_BYTES, 4, d)   # identity / qdither
+
 
 class WireMessage(NamedTuple):
     """One decoded message; ``dense()`` reconstructs the (d,) vector."""
@@ -241,6 +287,36 @@ def shared_support(plan: Plan) -> Optional[np.ndarray]:
     return None
 
 
+def _headers_u8(fmt: int, nodes: np.ndarray, t: int, d: int,
+                counts) -> np.ndarray:
+    """(rows, 16) uint8 header block for ``nodes`` — one vectorized fill of
+    :data:`HDR_DTYPE` instead of per-node ``struct.pack`` calls."""
+    if nodes.size and int(nodes.max()) > np.iinfo(np.uint16).max:
+        # preserve struct.pack('<BBHIII')'s loud overflow instead of
+        # silently wrapping client ids in the u16 node field
+        raise ValueError(
+            f"node id {int(nodes.max())} exceeds the wire header's uint16 "
+            "node field (65535)")
+    h = np.empty(nodes.size, HDR_DTYPE)
+    h["ver"] = WIRE_VERSION
+    h["fmt"] = fmt
+    h["node"] = nodes.astype(np.uint16)
+    h["round"] = t
+    h["d"] = d
+    h["count"] = counts
+    return h.view(np.uint8).reshape(nodes.size, HEADER_BYTES)
+
+
+def _emit_rows(n: int, nodes: np.ndarray,
+               packed: np.ndarray) -> List[Optional[bytes]]:
+    """Scatter the (rows, L) uint8 matrix into the per-node buffer list
+    (absent nodes stay None — zero bytes on the wire)."""
+    out: List[Optional[bytes]] = [None] * n
+    for pos, i in enumerate(nodes):
+        out[int(i)] = packed[pos].tobytes()
+    return out
+
+
 def encode_round(rc, plan: Optional[Plan], msgs, t: int, *,
                  coin: bool = False, sync_values=None,
                  present=None) -> List[Optional[bytes]]:
@@ -254,62 +330,92 @@ def encode_round(rc, plan: Optional[Plan], msgs, t: int, *,
     (``coin``) every node ships ``sync_values`` dense — Alg. 2 / MARINA's
     synchronization upload.  ``present`` marks Appendix-D participants;
     absent nodes return None (zero bytes).
+
+    Record packing is vectorized numpy (structured header/record arrays +
+    one contiguous byte matrix, sliced per node) — byte-identical to the
+    seed's per-record ``struct`` loop, which tests/test_fed_wire.py pins
+    with a scalar-encoder replay and golden hashes.
     """
     n = rc.n
     d = int(rc.spec.d)
     mode = rc.mode
     name = rc.spec.name
-    pres = None if present is None else np.asarray(present, bool)
 
     if coin:
-        rows = np.asarray(sync_values, np.float32)
-        return [encode_dense(i, t, rows[i]) for i in range(n)]
+        rows = np.ascontiguousarray(np.asarray(sync_values, np.float32))
+        hdr = _headers_u8(FMT_DENSE, np.arange(n), t, d, d)
+        return _emit_rows(n, np.arange(n),
+                          np.hstack([hdr, rows.view(np.uint8)]))
 
-    out: List[Optional[bytes]] = []
-    vals = np.asarray(msgs.values, np.float32)
+    pres = None if present is None else np.asarray(present, bool)
+    nodes = np.arange(n) if pres is None else np.nonzero(pres)[0]
+    vals = np.ascontiguousarray(
+        np.asarray(msgs.values, np.float32))[nodes]
     sparse = getattr(msgs, "indices", None) is not None
     plan_idx = None if plan is None or plan.indices is None \
         else np.asarray(plan.indices)
-    plan_mask = None if plan is None else plan.mask
-    shared = shared_support(plan) \
-        if plan is not None and mode == "shared_coords" else None
-    for i in range(n):
-        if pres is not None and not pres[i]:
-            out.append(None)
-            continue
-        if name == "permk" and plan_idx is not None:
-            idx_row = plan_idx[i]
-            blk = idx_row.size
-            period = n * blk
-            shift = permk_shift(idx_row, i, n)
-            if sparse:
-                row_vals = vals[i]
-            else:                        # dense backend: gather the block
-                safe = np.minimum(idx_row.astype(np.int64), d - 1)
-                row_vals = np.where(idx_row < d, vals[i][safe],
-                                    np.float32(0))
-            out.append(encode_permk(i, t, d, shift, period, row_vals))
-        elif mode == "shared_coords":
-            if sparse:
-                row_vals = vals[i]
-            else:
-                row_vals = vals[i][shared]
-            out.append(encode_sparse_seed(i, t, d, row_vals))
-        elif sparse:
-            out.append(encode_sparse_idx(i, t, d,
-                                         np.asarray(msgs.indices)[i],
-                                         vals[i]))
-        elif plan_idx is not None:       # dense backend, private support
-            idx_row = plan_idx[i].astype(np.int64)
-            out.append(encode_sparse_idx(i, t, d, idx_row,
-                                         vals[i][idx_row]))
-        elif plan_mask is not None:      # independent Bernoulli: the
-            idx_row = np.nonzero(np.asarray(plan_mask[i]))[0]  # support ships
-            out.append(encode_sparse_idx(i, t, d, idx_row,
-                                         vals[i][idx_row]))
-        else:                            # passthrough / dither
-            out.append(encode_dense(i, t, vals[i]))
-    return out
+    plan_mask = None if plan is None or plan.mask is None \
+        else np.asarray(plan.mask)
+
+    if name == "permk" and plan_idx is not None:
+        idx = plan_idx[nodes]
+        blk = idx.shape[1]
+        period = n * blk
+        valid = idx < period
+        j = np.argmax(valid, 1)
+        taken = idx[np.arange(nodes.size), j]
+        shifts = np.where(valid.any(1),
+                          (nodes * blk + j - taken) % period, 0)
+        if not sparse:                   # dense backend: gather the block
+            safe = np.minimum(idx.astype(np.int64), d - 1)
+            vals = np.where(idx < d, np.take_along_axis(vals, safe, 1),
+                            np.float32(0))
+        hdr = _headers_u8(FMT_PERMK, nodes, t, d, blk)
+        ext = np.empty(nodes.size, EXT_DTYPE)
+        ext["shift"] = shifts
+        ext["period"] = period
+        return _emit_rows(n, nodes, np.hstack([
+            hdr, ext.view(np.uint8).reshape(nodes.size, PERMK_EXT_BYTES),
+            np.ascontiguousarray(vals).view(np.uint8)]))
+
+    if mode == "shared_coords":
+        if not sparse:
+            vals = vals[:, shared_support(plan)]
+        hdr = _headers_u8(FMT_SPARSE_SEED, nodes, t, d, vals.shape[1])
+        return _emit_rows(n, nodes, np.hstack([
+            hdr, np.ascontiguousarray(vals).view(np.uint8)]))
+
+    if sparse or plan_idx is not None:   # private static-K support ships
+        idx = np.asarray(msgs.indices)[nodes] if sparse \
+            else plan_idx[nodes].astype(np.int64)
+        if not sparse:                   # dense backend: gather the support
+            vals = np.take_along_axis(vals, idx, 1)
+        rec = np.empty(idx.shape, REC_DTYPE)
+        rec["idx"] = idx.astype(np.uint32)
+        rec["val"] = vals
+        hdr = _headers_u8(FMT_SPARSE_IDX, nodes, t, d, idx.shape[1])
+        return _emit_rows(n, nodes, np.hstack([hdr, rec.view(np.uint8)]))
+
+    if plan_mask is not None:            # independent Bernoulli: ragged
+        keep = plan_mask[nodes] != 0     # realized per-node supports
+        counts = keep.sum(1)
+        cc = np.nonzero(keep)[1]         # row-major: ascending cols per row
+        rec = np.empty(cc.size, REC_DTYPE)
+        rec["idx"] = cc.astype(np.uint32)
+        rec["val"] = vals[keep]
+        offs = np.zeros(nodes.size + 1, np.int64)
+        np.cumsum(counts, out=offs[1:])
+        hdr = _headers_u8(FMT_SPARSE_IDX, nodes, t, d, counts)
+        out: List[Optional[bytes]] = [None] * n
+        for pos, i in enumerate(nodes):
+            out[int(i)] = hdr[pos].tobytes() \
+                + rec[offs[pos]:offs[pos + 1]].tobytes()
+        return out
+
+    # passthrough / dither: dense fp32 rows
+    hdr = _headers_u8(FMT_DENSE, nodes, t, d, d)
+    return _emit_rows(n, nodes, np.hstack([
+        hdr, np.ascontiguousarray(vals).view(np.uint8)]))
 
 
 def decode_round(bufs: Sequence[Optional[bytes]], d: int, *,

@@ -13,7 +13,8 @@
 * :mod:`repro.methods.accounting` — unified payload accounting.
 """
 from repro.methods.accounting import (expected_payload_frac,  # noqa: F401
-                                      expected_wire_coords, round_payload)
+                                      expected_wire_coords, round_payload,
+                                      sampled_per_node)
 from repro.methods.driver import Driver, sweep  # noqa: F401
 from repro.methods.engine import (Hyper, Method,  # noqa: F401
                                   MethodState, StepInfo)
@@ -21,5 +22,6 @@ from repro.methods.rules import (VARIANTS, MvrFusion,  # noqa: F401
                                  VariantRule, get_rule, register_variant)
 from repro.methods.substrates import (BatchLossOracle,  # noqa: F401
                                       FlatSubstrate, LeafProblemOracle,
-                                      LeafSpecCompressor, TreeCompression,
-                                      TreeSubstrate)
+                                      LeafSpecCompressor,
+                                      SampledFlatSubstrate, TreeCompression,
+                                      TreeSubstrate, cohort_indices)

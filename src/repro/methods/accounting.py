@@ -40,6 +40,19 @@ def expected_payload_frac(rule, hyper, payload_per_node: float,
     return float((payload_per_node + extra) / dense_coords)
 
 
+def sampled_per_node(cohort_coords: float, n: int, c: int) -> float:
+    """Per-node-per-round average coords under C-of-n client sampling.
+
+    Exactly c of the n clients send ``cohort_coords`` each round (the
+    cohort count is deterministic, unlike Appendix-D coins), so the
+    per-node average is the realized ``(c/n) * cohort_coords`` — feed the
+    result to :func:`expected_payload_frac` / :func:`expected_wire_coords`
+    in place of the full-participation per-node number.  Sampling composes
+    with no sync branch (barrier rules are rejected at build time), so no
+    coin expectation applies."""
+    return float(c) / float(n) * cohort_coords
+
+
 def expected_wire_coords(rule, hyper, wire_per_node: float,
                          dense_coords: float) -> float:
     """E[scalars the WIRE moves] per node per round of ``rule``.

@@ -35,12 +35,21 @@ from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 PyTree = Any
 MetricFn = Callable[[Any, Any], jax.Array]       # (state, data) -> scalar
 
 #: default scan-segment length; a pure compile-time/memory knob
 DEFAULT_CHUNK = 128
+
+
+def default_host_traces() -> bool:
+    """Whether chunk traces should leave the device as they stream: on CPU
+    a device_get is a free memcpy and moves trace assembly off the XLA
+    dispatch path; on accelerators keeping traces device-side preserves
+    the asynchronous chunk chain.  ONE policy for Driver and sweep."""
+    return jax.default_backend() == "cpu"
 
 
 def _resolve_step(method) -> Callable:
@@ -126,7 +135,8 @@ class Driver:
     def __init__(self, method, *, data_fn=None, data=None,
                  metrics: Optional[Dict[str, MetricFn]] = None,
                  metric_every: int = 1, chunk: Optional[int] = None,
-                 donate: Optional[bool] = None):
+                 donate: Optional[bool] = None,
+                 host_traces: Optional[bool] = None):
         if data_fn is not None and data is not None:
             raise ValueError("pass data_fn (in-jit) OR data (static), "
                              "not both")
@@ -140,6 +150,9 @@ class Driver:
             # donation is unimplemented on CPU (jax warns and ignores it)
             donate = jax.default_backend() != "cpu"
         self.donate = bool(donate)
+        if host_traces is None:
+            host_traces = default_host_traces()
+        self.host_traces = bool(host_traces)
         self._compiled: Dict[int, Callable] = {}
 
     def _chunk_fn(self, length: int) -> Callable:
@@ -185,12 +198,15 @@ class Driver:
             carry, tr = self._chunk_fn(length)(carry, data_key)
             done += length
             n_chunk += 1
-            parts.append(tr)
+            # one transfer per chunk (CPU default): the traces leave the
+            # device as they stream, so finishing a run never dispatches a
+            # many-operand XLA concatenate over live chunk buffers
+            parts.append(jax.device_get(tr) if self.host_traces else tr)
             if checkpoint is not None and \
                     (done >= rounds or n_chunk % checkpoint_every == 0):
                 checkpoint(carry[0], done, tr)
-        traces = {k: jnp.concatenate([p[k] for p in parts])
-                  for k in parts[0]}
+        cat = np.concatenate if self.host_traces else jnp.concatenate
+        traces = {k: cat([p[k] for p in parts]) for k in parts[0]}
         return carry[0], traces
 
 
@@ -212,7 +228,8 @@ def run(method, state, rounds: int, *, data_fn=None, data=None,
 def sweep(method_fn, values, state, rounds: int, *, data_fn=None, data=None,
           data_key=None, metrics: Optional[Dict[str, MetricFn]] = None,
           metric_every: int = 1, chunk: Optional[int] = None,
-          donate: Optional[bool] = None):
+          donate: Optional[bool] = None,
+          host_traces: Optional[bool] = None):
     """Vmap the chunked driver over a hyperparameter axis.
 
     ``method_fn(value) -> Method`` is traced ONCE with a batched tracer for
@@ -260,12 +277,14 @@ def sweep(method_fn, values, state, rounds: int, *, data_fn=None, data=None,
         lambda l: jnp.tile(l, (G,) + (1,) * jnp.ndim(l)), state)
     carry = (stacked, jnp.zeros((G,), jnp.int32),
              _metric_zeros(metrics, state, template, batch_shape=(G,)))
+    host = default_host_traces() if host_traces is None else host_traces
     done, parts = 0, []
     while done < rounds:
         length = min(chunk, rounds - done)
         carry, tr = chunk_fn(length)(values, carry, data_key)
         done += length
-        parts.append(tr)
-    traces = {k: jnp.concatenate([p[k] for p in parts], axis=1)
+        parts.append(jax.device_get(tr) if host else tr)
+    cat = np.concatenate if host else jnp.concatenate
+    traces = {k: cat([p[k] for p in parts], axis=1)
               for k in parts[0]} if parts else {}
     return carry[0], traces

@@ -124,6 +124,15 @@ class Method(NamedTuple):
         sub = substrate.with_compressor(compressor)
         hp = hyper
         a_eff = rule.force_a if rule.force_a is not None else hp.a
+        # the sampled-client substrate (DESIGN.md §13) exposes a per-round
+        # window; a C-of-n cohort can never answer an all-client dense
+        # synchronization round, so barrier rules are rejected up front
+        samples = bool(getattr(sub, "samples_clients", False))
+        if samples and not rule.supports_client_sampling:
+            raise ValueError(
+                f"variant {rule.name!r} has a client-synchronization "
+                "barrier (sync_requires_all): it cannot run on a sampled-"
+                "client substrate — every client must answer sync rounds")
 
         def init(x0, key, *, init_mode: str = "exact", batch_init: int = 1,
                  grads0=None, data=None) -> MethodState:
@@ -162,18 +171,33 @@ class Method(NamedTuple):
             # line 4 (server) + broadcast
             x_new, opt_state = sub.server_update(state.x, state.g,
                                                  state.opt_state, hp)
+            # sampled-client substrates window the round onto a gathered
+            # (C, d) cohort slice: the h-update and estimator run at
+            # O(C*d), then scatter back; the full path takes the unsliced
+            # branch (round_view returns the substrate itself at C == n),
+            # keeping its trace — and its RNG stream — untouched
+            rsub = sub.round_view(k_c) if samples else sub
+            if rsub is sub:
+                h_prev, g_prev = state.h_local, state.g_local
+            else:
+                h_prev = rsub.gather_nodes(state.h_local)
+                g_prev = rsub.gather_nodes(state.g_local)
             # line 8: THE variant-specific line
-            h_new, aux = rule.h_update(sub, k_h, hp, x_new, state.x,
-                                       state.h_local, data)
+            h_new, aux = rule.h_update(rsub, k_h, hp, x_new, state.x,
+                                       h_prev, data)
             # lines 9-10: m_i = C_i(drift); g_i <- g_i + m_i
             msgs = present = None
-            if hasattr(sub, "estimator_update_full"):
+            if hasattr(rsub, "estimator_update_full"):
                 agg, h_out, g_local, payload, msgs, present = \
-                    sub.estimator_update_full(
-                        k_c, h_new, state.h_local, state.g_local, a_eff, aux)
+                    rsub.estimator_update_full(
+                        k_c, h_new, h_prev, g_prev, a_eff, aux)
             else:
-                agg, h_out, g_local, payload = sub.estimator_update(
-                    k_c, h_new, state.h_local, state.g_local, a_eff, aux)
+                agg, h_out, g_local, payload = rsub.estimator_update(
+                    k_c, h_new, h_prev, g_prev, a_eff, aux)
+            if rsub is not sub:
+                # unsampled rows FREEZE: offline clients compute nothing
+                h_out = rsub.scatter_nodes(state.h_local, h_out)
+                g_local = rsub.scatter_nodes(state.g_local, g_local)
             g = sub.add_server(state.g, agg)                   # line 14
             coin = h_sync = None
             if rule.has_sync:

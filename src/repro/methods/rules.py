@@ -79,6 +79,15 @@ class VariantRule:
     def has_sync(self) -> bool:
         return self.sync_update is not None
 
+    @property
+    def supports_client_sampling(self) -> bool:
+        """Whether the rule can run on a sampled-client substrate (DESIGN.md
+        §13): any rule whose rounds need only the participating cohort.  A
+        ``sync_requires_all`` barrier is the one disqualifier — a C-of-n
+        cohort can never deliver an all-client dense round, which is
+        precisely the paper's no-client-synchronization advantage."""
+        return not self.sync_requires_all
+
 
 VARIANTS: Dict[str, VariantRule] = {}
 

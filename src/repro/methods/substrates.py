@@ -168,6 +168,20 @@ class FlatSubstrate:
         return (msgs.mean(), h_out, gl, self.rc.payload_per_node, msgs,
                 present)
 
+    def round_wire_counts(self, state_key):
+        """Per-node shipped value-scalar counts for the round whose
+        MethodState key is ``state_key`` (the engine derives
+        ``k_c = split(key, 4)[2]``).  Only mask (Bernoulli) plans have
+        data-dependent counts — every other format's count is static and
+        classified by :func:`repro.fed.wire.wire_schema`."""
+        k_c = jax.random.split(state_key, 4)[2]
+        plan = self.rc.plan(k_c)
+        if plan.mask is None:
+            raise ValueError("round_wire_counts is only defined for mask "
+                             "(Bernoulli) plans; static-count formats come "
+                             "from repro.fed.wire.wire_schema")
+        return jnp.sum(plan.mask != 0, axis=1).astype(jnp.int32)
+
     # -- metrics -----------------------------------------------------------
     def default_metric(self):
         p = self.problem
@@ -176,6 +190,228 @@ class FlatSubstrate:
         if getattr(p, "true_grad", None) is not None:
             return lambda s: jnp.sum(p.true_grad(s.x) ** 2)
         return lambda s: jnp.float32(0)
+
+
+# ---------------------------------------------------------------------------
+# SampledFlatSubstrate — the cross-device O(C*d) round (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+#: fold_in tag deriving the cohort-draw key from the round's k_c without
+#: consuming from the engine's key stream (full-path RNG stays untouched)
+COHORT_TAG = 0x5A3D
+
+
+def cohort_indices(k_round: jax.Array, n: int, c: int) -> jax.Array:
+    """The round's uniform C-of-n cohort (without replacement), derived from
+    the engine round key ``k_c`` via :data:`COHORT_TAG` — recomputable by
+    observers (the federated simulator) from ``state.key`` alone."""
+    k_sel = jax.random.fold_in(k_round, COHORT_TAG)
+    return jax.random.permutation(k_sel, n)[:c]
+
+
+def _rows_stoch_grad(problem, key, x, batch, rows):
+    """Row-restricted ``StochasticProblem.stoch_grad``: per-client keys stay
+    CLIENT-ID keyed (``split(key, n)[rows]``), so the cohort draws the same
+    noise its clients would draw under full participation."""
+    gfun = jax.grad(problem.loss)
+    keys = jax.random.split(key, problem.n)[rows]
+
+    def node(i, k):
+        xi = problem.sample(k, i, batch)
+        return jnp.mean(jax.vmap(lambda s: gfun(x, s, i))(xi), 0)
+
+    return jax.vmap(node)(rows, keys)
+
+
+def _rows_stoch_grad_pair(problem, key, x_new, x_old, batch, rows):
+    gfun = jax.grad(problem.loss)
+    keys = jax.random.split(key, problem.n)[rows]
+
+    def node(i, k):
+        xi = problem.sample(k, i, batch)
+        gn = jnp.mean(jax.vmap(lambda s: gfun(x_new, s, i))(xi), 0)
+        go = jnp.mean(jax.vmap(lambda s: gfun(x_old, s, i))(xi), 0)
+        return gn, go
+
+    return jax.vmap(node)(rows, keys)
+
+
+class _CohortView:
+    """One round's (C, d) window onto a :class:`SampledFlatSubstrate`.
+
+    Built inside the traced step (``sel`` is a traced (C,) index vector), it
+    exposes the same ops the variant rules consume — but every oracle call
+    and the estimator update run on the gathered cohort slice only, so the
+    round costs O(C*d) FLOPs/activations while the (n, d) client state stays
+    persistent.  ``scatter_nodes`` writes the cohort rows back; unsampled
+    rows FREEZE (an offline cross-device client computes nothing — unlike
+    the Appendix-D wrapper, where every client refreshes h locally and only
+    the transmission is coin-gated)."""
+
+    def __init__(self, base: "SampledFlatSubstrate", sel: jax.Array):
+        self.base = base
+        self.sel = sel
+
+    # -- node-axis windowing ----------------------------------------------
+    def gather_nodes(self, per_node):
+        return per_node[self.sel]
+
+    def scatter_nodes(self, full, rows):
+        return full.at[self.sel].set(rows)
+
+    def _rows_problem(self):
+        """The finite-sum problem restricted to the cohort's data rows."""
+        p = self.base.problem
+        return dataclasses.replace(p, features=p.features[self.sel],
+                                   labels=p.labels[self.sel])
+
+    # -- oracle ops (cohort rows only) ------------------------------------
+    def grad(self, key, x, data=None, size: int = 1):
+        p = self.base.problem
+        if hasattr(p, "full_grad"):
+            return self._rows_problem().full_grad(x)
+        return _rows_stoch_grad(p, key, x, size, self.sel)
+
+    def grad_pair(self, key, x_new, x_old, size: int, data=None):
+        p = self.base.problem
+        if hasattr(p, "stoch_grad_pair"):
+            return _rows_stoch_grad_pair(p, key, x_new, x_old, size,
+                                         self.sel)
+        rp = self._rows_problem()
+        return (rp.minibatch_grad(key, x_new, size),
+                rp.minibatch_grad(key, x_old, size))
+
+    def grad_diff(self, key, x_new, x_old, size: int, data=None):
+        p = self.base.problem
+        if hasattr(p, "minibatch_diff"):
+            rp = self._rows_problem()
+            if size == 0:
+                return rp.full_grad(x_new) - rp.full_grad(x_old)
+            return rp.minibatch_diff(key, x_new, x_old, size)
+        gn, go = self.grad_pair(key, x_new, x_old, size, data)
+        return gn - go
+
+    def megabatch(self, key, x, size: int, data=None):
+        p = self.base.problem
+        if hasattr(p, "full_grad"):
+            return self._rows_problem().full_grad(x)
+        return _rows_stoch_grad(p, key, x, size, self.sel)
+
+    def grad_minibatch(self, key, x, size: int, data=None):
+        p = self.base.problem
+        if hasattr(p, "stoch_grad"):
+            return _rows_stoch_grad(p, key, x, size, self.sel)
+        return self._rows_problem().minibatch_grad(key, x, size)
+
+    # -- arithmetic (shape-agnostic, same as FlatSubstrate) ----------------
+    def lin(self, fn: Callable, *arrays):
+        return fn(*arrays)
+
+    def where(self, coin, a, b):
+        return jnp.where(coin, a, b)
+
+    # -- compression (cohort slice; inflation folded into the plan) --------
+    def estimator_update_full(self, key, h_new, h, g_local, a: float,
+                              aux=None):
+        from repro.compress.backends import estimator_update_with_plan
+        base = self.base
+        rc = base.cohort_rc
+        plan = rc.plan(key)
+        # the unbiasedness inflation n/C (Theorem D.1 with p' = C/n) folds
+        # into the plan scale, exactly like Appendix-D coins do — messages
+        # carry it, so g_i += m_i keeps g = mean_i(g_i) invariant
+        plan = plan._replace(scale=plan.scale * (base.n / float(base.c)))
+        msgs, h_out, gl = estimator_update_with_plan(
+            rc.backend, plan, h_new, h, g_local, a)
+        # server aggregate (1/n) sum_{i in S} m_i = (C/n) * mean_S(m_i)
+        agg = msgs.mean() * (float(base.c) / base.n)
+        present = jnp.zeros((base.n,), bool).at[self.sel].set(True)
+        payload = rc.payload_per_node * (float(base.c) / base.n)
+        return agg, h_out, gl, payload, msgs, present
+
+
+@dataclasses.dataclass(frozen=True)
+class SampledFlatSubstrate(FlatSubstrate):
+    """Cross-device FlatSubstrate: each round a uniform cohort of ``c`` of
+    the ``n`` clients is gathered, stepped, and scattered back.
+
+    Per-round gradient compute, compression and estimator updates touch only
+    the (c, d) cohort slice — O(c*d) FLOPs and activations against the
+    persistent (n, d) state — while unsampled clients freeze (they compute
+    and send NOTHING; zero bytes on the simulated wire, and the variance
+    cost is the Theorem-D.1 omega inflation with p' = c/n, see
+    :func:`repro.compress.spec.omega_participation`).  With ``c == n`` the
+    substrate IS FlatSubstrate (``round_view`` returns ``self`` and the
+    engine takes the unsliced path), which is the bit-identical parity
+    anchor tested in tests/test_fed_scale.py.  Rules with a client
+    synchronization barrier (``sync_requires_all``: MARINA, SYNC-MVR) are
+    rejected at ``Method.build`` time — a sampled cohort can never answer
+    an all-client dense round."""
+
+    c: int = 0
+
+    def __post_init__(self):
+        if not 0 < self.c <= self.n:
+            raise ValueError(f"cohort size c={self.c} must be in [1, "
+                             f"n={self.n}]")
+        if self.rc is not None and self.rc.spec.p_participate < 1.0:
+            raise ValueError(
+                "SampledFlatSubstrate IS the participation model — combine "
+                "it with a p_participate < 1 compressor and clients would "
+                "be sampled twice; use one or the other")
+
+    @property
+    def samples_clients(self) -> bool:
+        return self.c < self.n
+
+    @property
+    def participation_frac(self) -> float:
+        return self.c / float(self.n)
+
+    @property
+    def cohort_rc(self) -> RoundCompressor:
+        """The round's compressor over the cohort: same spec/mode/backend,
+        re-dimensioned to c nodes (PermK partitions [d] over the ACTIVE
+        cohort, so its collection omega becomes c - 1)."""
+        rc = self.rc
+        spec = rc.spec
+        if spec.name == "permk":
+            spec = dataclasses.replace(spec, n=self.c)
+        return RoundCompressor(spec, self.c, rc.mode, rc.backend)
+
+    def effective_omega(self) -> float:
+        """Theorem-D.1 inflated omega for ``Hyper.from_theory``:
+        (omega_cohort + 1) / (c/n) - 1."""
+        from repro.compress.spec import omega_participation
+        return omega_participation(self.cohort_rc.omega,
+                                   self.participation_frac)
+
+    def round_view(self, k_round: jax.Array):
+        """The engine's per-round window: identity (self) at c == n — the
+        bit-identical full path — else a :class:`_CohortView` over the
+        cohort drawn from ``fold_in(k_round, COHORT_TAG)``."""
+        if self.c >= self.n:
+            return self
+        return _CohortView(self, cohort_indices(k_round, self.n, self.c))
+
+    def round_cohort(self, state_key: jax.Array) -> jax.Array:
+        """Recover the round's cohort from a MethodState key (the engine
+        derives k_c = split(key, 4)[2]) — observer-side, for the federated
+        simulators."""
+        k_c = jax.random.split(state_key, 4)[2]
+        return cohort_indices(k_c, self.n, self.c)
+
+    def round_wire_counts(self, state_key):
+        if not self.samples_clients:
+            return FlatSubstrate.round_wire_counts(self, state_key)
+        k_c = jax.random.split(state_key, 4)[2]
+        sel = cohort_indices(k_c, self.n, self.c)
+        plan = self.cohort_rc.plan(k_c)
+        if plan.mask is None:
+            raise ValueError("round_wire_counts is only defined for mask "
+                             "(Bernoulli) plans")
+        cnt = jnp.sum(plan.mask != 0, axis=1).astype(jnp.int32)
+        return jnp.zeros((self.n,), jnp.int32).at[sel].set(cnt)
 
 
 # ---------------------------------------------------------------------------

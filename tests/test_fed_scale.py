@@ -1,0 +1,363 @@
+"""Scale-out federated engine (DESIGN.md §13): sampled-client parity and
+the vectorized-vs-heap simulator equivalence suite.
+
+Contracts pinned here:
+
+* the sampled substrate at c == n IS FlatSubstrate (bit-identical engine
+  states — the parity anchor);
+* at c < n a round touches exactly the cohort (unsampled rows freeze, the
+  DASHA invariant g = mean_i g_i survives, payload accounting bills
+  (c/n) * k coords per node per round), and one step replayed by hand with
+  dense compress-layer math matches the engine;
+* the sampled step's compiled program is O(c*d), not O(n*d): no
+  intermediate (n, d) activations beyond the two state scatters, XLA temp
+  memory far below one (n, d) buffer, and flops that do not scale with n;
+* VecFedSim == FedSim: integer traces (bytes, participants, sync coins)
+  BIT-exact — they are integer functions of the same engine randomness —
+  and wall-clock equal to float32 resolution (the scan computes delays in
+  f32, the heap oracle in f64), across all five variants, straggler
+  severities, every wire format, and the sampled substrate.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks.common import glm_problem, lipschitz_glm, theory_hyper
+from repro.compress import make_plan, make_round_compressor
+from repro.core.oracles import FiniteSumProblem
+from repro.data.pipeline import synthetic_classification
+from repro.fed.net import LinkModel, Lognormal
+from repro.fed.sim import FedSim
+from repro.fed.vecsim import VecFedSim
+from repro.methods import (FlatSubstrate, Hyper, Method,
+                           SampledFlatSubstrate)
+
+D, K = 40, 6
+
+
+def _problem(n, m=16, d=D):
+    feats, labels = synthetic_classification(jax.random.PRNGKey(0), n, m, d)
+
+    def loss(x, a, y):
+        return (1.0 - 1.0 / (1.0 + jnp.exp(y * jnp.dot(a, x)))) ** 2
+
+    return FiniteSumProblem(loss=loss, features=feats, labels=labels)
+
+
+def _links(sigma=1.0):
+    up = LinkModel(latency_s=0.01, bandwidth_Bps=1e5,
+                   straggler=Lognormal(sigma) if sigma else
+                   LinkModel().straggler)
+    down = LinkModel(latency_s=0.005, bandwidth_Bps=1e7)
+    return up, down
+
+
+# ---------------------------------------------------------------------------
+# sampled-client execution path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("variant", ["dasha", "page", "mvr"])
+def test_sampled_c_equals_n_is_bit_identical(variant):
+    """The parity anchor: SampledFlatSubstrate(c=n) takes the engine's
+    unsliced branch, so its states bit-match FlatSubstrate's."""
+    n = 8
+    prob = _problem(n)
+    rc = make_round_compressor("randk", D, n, k=K, backend="sparse")
+    hp = theory_hyper(variant, rc.omega, lipschitz_glm(prob), d=D, k=K,
+                      n=n, m=16)
+    m_full = Method.build(variant, rc, FlatSubstrate(prob, n, D), hp)
+    m_samp = Method.build(variant, rc,
+                          SampledFlatSubstrate(prob, n, D, c=n), hp)
+    s1 = m_full.init(jnp.zeros(D), jax.random.PRNGKey(1))
+    s2 = m_samp.init(jnp.zeros(D), jax.random.PRNGKey(1))
+    step1, step2 = jax.jit(m_full.step), jax.jit(m_samp.step)
+    for _ in range(6):
+        s1, s2 = step1(s1), step2(s2)
+    for a, b in zip(jax.tree_util.tree_leaves(s1),
+                    jax.tree_util.tree_leaves(s2)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_sampled_round_touches_exactly_the_cohort():
+    """Unsampled rows freeze (offline clients compute nothing), present is
+    the cohort, the g = mean_i g_i invariant survives, and bits_sent bills
+    (c/n) * k coords per node per round."""
+    n, c = 8, 3
+    prob = _problem(n)
+    rc = make_round_compressor("randk", D, n, k=K, backend="sparse")
+    sub = SampledFlatSubstrate(prob, n, D, c=c)
+    hp = Hyper(gamma=0.05, a=0.3, variant="dasha")
+    m = Method.build("dasha", rc, sub, hp)
+    st = m.init(jnp.zeros(D), jax.random.PRNGKey(1))
+    step_full = jax.jit(lambda s: m.step_full(s, None))
+    for _ in range(8):
+        sel = np.sort(np.asarray(sub.round_cohort(st.key)))
+        h0, g0 = np.asarray(st.h_local), np.asarray(st.g_local)
+        new, info = step_full(st)
+        present = np.asarray(info.present)
+        assert np.array_equal(np.nonzero(present)[0], sel)
+        frozen = np.setdiff1d(np.arange(n), sel)
+        assert np.array_equal(np.asarray(new.h_local)[frozen], h0[frozen])
+        assert np.array_equal(np.asarray(new.g_local)[frozen], g0[frozen])
+        assert not np.array_equal(np.asarray(new.h_local)[sel], h0[sel])
+        np.testing.assert_allclose(
+            np.asarray(new.g), np.asarray(new.g_local).mean(0),
+            rtol=1e-5, atol=1e-7)
+        np.testing.assert_allclose(
+            float(new.bits_sent - st.bits_sent), c / n * K, rtol=1e-6)
+        st = new
+
+
+def test_sampled_step_matches_dense_replay():
+    """One sampled DASHA round replayed by hand: gather the cohort, take
+    the exact per-client gradients, compress through the SAME plan with the
+    n/c inflation folded into its scale, scatter back."""
+    n, c = 10, 4
+    prob = _problem(n)
+    rc = make_round_compressor("randk", D, n, k=K, backend="dense")
+    sub = SampledFlatSubstrate(prob, n, D, c=c)
+    hp = Hyper(gamma=0.05, a=0.3, variant="dasha")
+    m = Method.build("dasha", rc, sub, hp)
+    st = m.init(jnp.zeros(D), jax.random.PRNGKey(1))
+    new, info = jax.jit(lambda s: m.step_full(s, None))(st)
+
+    key, k_h, k_c, _ = jax.random.split(st.key, 4)
+    sel = np.asarray(sub.round_cohort(st.key))
+    x_new = np.asarray(st.x) - hp.gamma * np.asarray(st.g)
+    grads = np.asarray(prob.full_grad(jnp.asarray(x_new)))[sel]
+    h_rows = np.asarray(st.h_local)[sel]
+    g_rows = np.asarray(st.g_local)[sel]
+    plan = make_plan(rc.spec, k_c, c)          # the cohort's own plan
+    mask = np.zeros((c, D), np.float32)
+    idx = np.asarray(plan.indices)
+    for i in range(c):
+        mask[i, idx[i]] = 1.0
+    delta = grads - h_rows - hp.a * (g_rows - h_rows)
+    msgs = delta * mask * float(plan.scale) * (n / c)
+    np.testing.assert_allclose(np.asarray(new.x), x_new, rtol=1e-6,
+                               atol=1e-7)
+    np.testing.assert_allclose(np.asarray(new.h_local)[sel], grads,
+                               rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(new.g_local)[sel], g_rows + msgs,
+                               rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(
+        np.asarray(new.g), np.asarray(st.g) + msgs.mean(0) * (c / n),
+        rtol=1e-5, atol=1e-7)
+
+
+def test_sampled_run_learns():
+    """An 8-of-64 cohort run drives the exact gradient down under the
+    Theorem-D.1 stepsize for the inflated omega (least squares, so the
+    landscape is clean)."""
+    n, c, m_ = 64, 8, 8
+    feats, labels = synthetic_classification(jax.random.PRNGKey(0), n, m_,
+                                             D)
+    prob = FiniteSumProblem(
+        loss=lambda x, a, y: 0.5 * (jnp.dot(a, x) - y) ** 2,
+        features=feats, labels=labels)
+    L = float(jnp.mean(jnp.sum(feats ** 2, -1)))
+    rc = make_round_compressor("randk", D, n, k=K, backend="sparse")
+    sub = SampledFlatSubstrate(prob, n, D, c=c)
+    hp = Hyper.from_theory(
+        "dasha", sub.with_compressor(rc).effective_omega(), n, L=L,
+        gamma_mult=8)
+    m = Method.build("dasha", rc, sub, hp)
+    st = m.init(jnp.zeros(D), jax.random.PRNGKey(1))
+    g0 = float(jnp.sum(prob.grad_f(st.x) ** 2))
+    st, trace, _ = m.run(st, 600)
+    assert float(trace[-1]) < 0.5 * g0
+
+
+def test_sampled_rejections():
+    n, c = 8, 3
+    prob = _problem(n)
+    sub = SampledFlatSubstrate(prob, n, D, c=c)
+    rc = make_round_compressor("randk", D, n, k=K, backend="sparse")
+    hp = Hyper(gamma=0.01, a=0.1, variant="marina", p=0.2, batch=0)
+    for variant in ("marina", "sync_mvr"):
+        with pytest.raises(ValueError, match="synchronization"):
+            Method.build(variant, rc, sub,
+                         dataclasses.replace(hp, variant=variant))
+    rc_pp = make_round_compressor("randk", D, n, k=K, backend="sparse",
+                                  p_participate=0.5)
+    with pytest.raises(ValueError, match="participation"):
+        sub.with_compressor(rc_pp)
+    with pytest.raises(ValueError, match="cohort"):
+        SampledFlatSubstrate(prob, n, D, c=0)
+
+
+def test_sampled_step_is_o_of_c_not_n():
+    """The CI memory guard (n=4096): the compiled sampled step materializes
+    no (n, d) activations beyond the two state scatters, its XLA temp
+    buffer stays far below one (n, d) array, and its flops do not scale
+    with n (per-round compute is O(c*d) + an O(n) cohort draw)."""
+    def build(n, c, d=64):
+        prob = _problem(n, m=2, d=d)
+        rc = make_round_compressor("randk", d, c, k=8, backend="sparse")
+        sub = FlatSubstrate(prob, n, d) if c == n \
+            else SampledFlatSubstrate(prob, n, d, c=c)
+        m = Method.build("dasha", rc, sub,
+                         Hyper(gamma=0.01, a=0.1, variant="dasha"))
+        return m, m.init(jnp.zeros(d), jax.random.PRNGKey(1)), n, d
+
+    m, st, n, d = build(4096, 64)
+    jaxpr = jax.make_jaxpr(m.step)(st)
+    big = [v.aval for eqn in jaxpr.eqns for v in eqn.outvars
+           if getattr(v.aval, "shape", ())[:1] == (n,)
+           and len(v.aval.shape) > 1 and v.aval.shape[1] >= d]
+    assert len(big) <= 3, \
+        f"sampled step materializes {len(big)} (n, d) intermediates: " \
+        f"{[a.shape for a in big]}"
+    compiled = jax.jit(m.step).lower(st).compile()
+    mem = compiled.memory_analysis()
+    if mem is not None:                      # backend-dependent
+        assert mem.temp_size_in_bytes < n * d * 4 / 4, \
+            f"XLA temps {mem.temp_size_in_bytes}B ~ O(n*d)"
+    ca = compiled.cost_analysis()
+    ca = ca[0] if isinstance(ca, list) else ca
+    if ca and ca.get("flops"):
+        m_full, st_full, _, _ = build(4096, 4096)
+        ca_f = jax.jit(m_full.step).lower(st_full).compile() \
+            .cost_analysis()
+        ca_f = ca_f[0] if isinstance(ca_f, list) else ca_f
+        # the 64-of-4096 cohort round must cost a small fraction of the
+        # full-participation round's flops (what remains is the O(c*d)
+        # slice plus the O(n log n) cohort draw — no O(n*d) compute)
+        assert ca["flops"] < 0.2 * ca_f["flops"], \
+            (ca["flops"], ca_f["flops"])
+
+
+# ---------------------------------------------------------------------------
+# vectorized simulator == heap oracle
+# ---------------------------------------------------------------------------
+
+def _run_pair(variant, rc, sub, hp, sigma, rounds, *, seed=3,
+              compute_s=0.002, key=1):
+    up, down = _links(sigma)
+    kw = dict(uplink=up, downlink=down, seed=seed, compute_s=compute_s)
+    h = FedSim(variant, rc, sub, hp, **kw)
+    v = VecFedSim(variant, rc, sub, hp, **kw)
+    d = int(rc.spec.d)
+    sh = h.init(jnp.zeros(d), jax.random.PRNGKey(key))
+    sv = v.init(jnp.zeros(d), jax.random.PRNGKey(key))
+    return h.run(sh, rounds), v.run(sv, rounds)
+
+
+def _assert_equivalent(rh, rv):
+    for k in ("bytes_up", "value_bytes", "bytes_down", "sync_round",
+              "participants"):
+        np.testing.assert_array_equal(rh.traces[k], rv.traces[k],
+                                      err_msg=k)
+    np.testing.assert_allclose(rv.traces["sim_wall_clock"],
+                               rh.traces["sim_wall_clock"], rtol=2e-6)
+    np.testing.assert_allclose(rv.traces["bits_sent"],
+                               rh.traces["bits_sent"], rtol=1e-6)
+    np.testing.assert_allclose(rv.traces["metric"], rh.traces["metric"],
+                               rtol=1e-4, atol=1e-9)
+    np.testing.assert_allclose(
+        np.asarray(rv.state.x), np.asarray(rh.state.x),
+        rtol=1e-5, atol=1e-7)
+    for k in ("bytes_up", "bytes_down", "sync_rounds",
+              "mean_participants"):
+        assert rh.summary[k] == rv.summary[k], k
+    np.testing.assert_allclose(rv.summary["wall_clock_s"],
+                               rh.summary["wall_clock_s"], rtol=2e-6)
+
+
+@pytest.mark.parametrize("variant", ["dasha", "page", "mvr", "sync_mvr",
+                                     "marina"])
+@pytest.mark.parametrize("sigma", [0.0, 1.0])
+def test_vec_matches_heap_all_variants(variant, sigma):
+    """Across all five variants x straggler severities: bytes/participants
+    bit-exact, wall-clock to f32 resolution, math to cross-body-shape
+    tolerance (DESIGN.md §10) — including the sync barriers' all-client
+    dense rounds."""
+    n = 5
+    prob = glm_problem(d=D, m=16)
+    sub = FlatSubstrate(prob, n, D)
+    rc = make_round_compressor("randk", D, n, k=K, backend="sparse")
+    hp = theory_hyper(variant, rc.omega, lipschitz_glm(prob), d=D, k=K,
+                      n=n, m=16)
+    if variant in ("sync_mvr", "marina"):
+        hp = dataclasses.replace(hp, p=0.3)    # make coin rounds frequent
+    rh, rv = _run_pair(variant, rc, sub, hp, sigma, 40)
+    _assert_equivalent(rh, rv)
+    if variant in ("sync_mvr", "marina"):
+        sync = rh.traces["sync_round"].astype(bool)
+        assert sync.any() and not sync.all()
+
+
+@pytest.mark.parametrize("spec_kw", [
+    dict(name="randk", k=K, mode="shared_coords", backend="sparse"),
+    dict(name="randk", k=K, backend="dense"),
+    dict(name="permk", mode="permk", backend="sparse"),
+    dict(name="bernoulli", p=0.25, backend="dense"),
+    dict(name="bernoulli", p=0.25, mode="shared_coords", backend="dense"),
+    dict(name="qdither", s=7, backend="dense"),
+    dict(name="randk", k=K, backend="sparse", p_participate=0.5),
+], ids=lambda kw: "-".join(str(v) for v in kw.values()))
+def test_vec_matches_heap_formats(spec_kw):
+    """Every wire format's analytic bytes equal the codec's measured bytes
+    — including Bernoulli's realized per-client mask counts and Appendix-D
+    zero-byte absentees."""
+    n = 5
+    kw = dict(spec_kw)
+    name = kw.pop("name")
+    mode = kw.pop("mode", "independent")
+    backend = kw.pop("backend")
+    prob = glm_problem(d=D, m=16)
+    sub = FlatSubstrate(prob, n, D)
+    rc = make_round_compressor(name, D, n, mode=mode, backend=backend, **kw)
+    hp = Hyper(gamma=0.05, a=0.3, variant="dasha")
+    rh, rv = _run_pair("dasha", rc, sub, hp, 1.0, 15)
+    _assert_equivalent(rh, rv)
+    if kw.get("p_participate", 1.0) < 1.0:
+        assert (rh.traces["participants"] < n).any()
+
+
+@pytest.mark.parametrize("spec_kw", [
+    dict(name="randk", k=K, backend="sparse"),
+    dict(name="randk", k=K, backend="dense"),
+    dict(name="randk", k=K, mode="shared_coords", backend="sparse"),
+    dict(name="bernoulli", p=0.25, backend="dense"),
+], ids=lambda kw: "-".join(str(v) for v in kw.values()))
+def test_vec_matches_heap_sampled(spec_kw):
+    """The sampled substrate through both simulators: exactly c clients
+    bill bytes each round, and the two engines agree byte for byte."""
+    n, c = 16, 5
+    kw = dict(spec_kw)
+    name = kw.pop("name")
+    mode = kw.pop("mode", "independent")
+    backend = kw.pop("backend")
+    prob = _problem(n, m=8)
+    sub = SampledFlatSubstrate(prob, n, D, c=c)
+    rc = make_round_compressor(name, D, n, mode=mode, backend=backend, **kw)
+    hp = Hyper(gamma=0.05, a=0.3, variant="dasha")
+    rh, rv = _run_pair("dasha", rc, sub, hp, 1.0, 15)
+    _assert_equivalent(rh, rv)
+    assert (rh.traces["participants"] == c).all()
+    if name == "randk" and backend == "sparse" and mode == "independent":
+        from repro.fed.wire import HEADER_BYTES
+        assert (rh.traces["bytes_up"] == c * (HEADER_BYTES + 8 * K)).all()
+
+
+def test_heap_rejects_sampled_permk():
+    n, c = 16, 5
+    prob = _problem(n, m=8)
+    sub = SampledFlatSubstrate(prob, n, D, c=c)
+    rc = make_round_compressor("permk", D, n, mode="permk",
+                               backend="sparse")
+    hp = Hyper(gamma=0.05, a=0.3, variant="dasha")
+    with pytest.raises(NotImplementedError, match="PERMK"):
+        FedSim("dasha", rc, sub, hp)
+    # the vectorized engine bills PERMK cohorts analytically instead
+    v = VecFedSim("dasha", rc, sub, hp, seed=0)
+    sv = v.init(jnp.zeros(D), jax.random.PRNGKey(1))
+    res = v.run(sv, 6)
+    blk = -(-D // c)
+    from repro.fed.wire import HEADER_BYTES, PERMK_EXT_BYTES
+    assert (res.traces["bytes_up"]
+            == c * (HEADER_BYTES + PERMK_EXT_BYTES + 4 * blk)).all()

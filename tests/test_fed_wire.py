@@ -163,3 +163,149 @@ def test_decode_rejects_unknown_version_and_missing_seed():
     bad = bytes([99]) + bufs[0][1:]
     with pytest.raises(ValueError, match="wire version"):
         wire.decode(bad)
+
+
+# ---------------------------------------------------------------------------
+# vectorized round packing (PR 5): byte-identity vs the scalar encoders
+# ---------------------------------------------------------------------------
+
+def _scalar_reference_round(rc, plan, msgs, t, *, coin=False,
+                            sync_values=None, present=None):
+    """The seed-era per-node encoding loop, re-derived from the scalar
+    encoders: the vectorized ``encode_round`` must reproduce it byte for
+    byte."""
+    n, d, mode, name = rc.n, int(rc.spec.d), rc.mode, rc.spec.name
+    pres = None if present is None else np.asarray(present, bool)
+    if coin:
+        rows = np.asarray(sync_values, np.float32)
+        return [wire.encode_dense(i, t, rows[i]) for i in range(n)]
+    out = []
+    vals = np.asarray(msgs.values, np.float32)
+    sparse = getattr(msgs, "indices", None) is not None
+    plan_idx = None if plan is None or plan.indices is None \
+        else np.asarray(plan.indices)
+    plan_mask = None if plan is None or plan.mask is None \
+        else np.asarray(plan.mask)
+    shared = wire.shared_support(plan) \
+        if plan is not None and mode == "shared_coords" else None
+    for i in range(n):
+        if pres is not None and not pres[i]:
+            out.append(None)
+        elif name == "permk" and plan_idx is not None:
+            idx_row = plan_idx[i]
+            blk = idx_row.size
+            shift = wire.permk_shift(idx_row, i, n)
+            if sparse:
+                row_vals = vals[i]
+            else:
+                safe = np.minimum(idx_row.astype(np.int64), d - 1)
+                row_vals = np.where(idx_row < d, vals[i][safe],
+                                    np.float32(0))
+            out.append(wire.encode_permk(i, t, d, shift, n * blk, row_vals))
+        elif mode == "shared_coords":
+            row_vals = vals[i] if sparse else vals[i][shared]
+            out.append(wire.encode_sparse_seed(i, t, d, row_vals))
+        elif sparse:
+            out.append(wire.encode_sparse_idx(
+                i, t, d, np.asarray(msgs.indices)[i], vals[i]))
+        elif plan_idx is not None:
+            idx_row = plan_idx[i].astype(np.int64)
+            out.append(wire.encode_sparse_idx(i, t, d, idx_row,
+                                              vals[i][idx_row]))
+        elif plan_mask is not None:
+            idx_row = np.nonzero(plan_mask[i])[0]
+            out.append(wire.encode_sparse_idx(i, t, d, idx_row,
+                                              vals[i][idx_row]))
+        else:
+            out.append(wire.encode_dense(i, t, vals[i]))
+    return out
+
+
+@pytest.mark.parametrize("name,mode,backend,kw", CASES)
+def test_vectorized_encode_matches_scalar_loop(name, mode, backend, kw):
+    rc, plan, msgs = _round(name, mode, backend, kw)
+    for present in (None, np.array([1, 0, 1, 1, 0], bool)):
+        got = wire.encode_round(rc, plan, msgs, t=7, present=present)
+        ref = _scalar_reference_round(rc, plan, msgs, 7, present=present)
+        assert got == ref
+    sync = np.arange(N * D, dtype=np.float32).reshape(N, D)
+    got = wire.encode_round(rc, plan, msgs, t=9, coin=True,
+                            sync_values=sync)
+    assert got == _scalar_reference_round(rc, plan, msgs, 9, coin=True,
+                                          sync_values=sync)
+
+
+def test_header_dtype_matches_struct_layout():
+    """HDR_DTYPE (the vectorized header fill) is byte-for-byte the packed
+    ``<BBHIII`` struct the scalar encoders write."""
+    h = np.zeros(1, wire.HDR_DTYPE)
+    h["ver"], h["fmt"], h["node"] = 1, 3, 517
+    h["round"], h["d"], h["count"] = 123456, 40, 6
+    assert h.tobytes() == wire._HEADER.pack(1, 3, 517, 123456, 40, 6)
+
+
+def test_golden_round_bytes():
+    """Frozen digests over numpy-deterministic rounds: any packing change
+    that alters a single wire byte fails here."""
+    import hashlib
+
+    class Msgs:
+        def __init__(self, values, indices=None):
+            self.values = values
+            self.indices = indices
+
+    from repro.compress.plan import Plan
+    n, d, k = 4, 12, 3
+    vals = (np.arange(n * k, dtype=np.float32).reshape(n, k) + 0.5)
+    idx = (np.arange(n * k).reshape(n, k) * 3 % d).astype(np.int32)
+    dense_vals = np.linspace(-1, 1, n * d, dtype=np.float32).reshape(n, d)
+
+    def digest(bufs):
+        return hashlib.sha256(
+            b"".join(b if b is not None else b"\xff" for b in bufs)
+        ).hexdigest()[:16]
+
+    rc_sparse = make_round_compressor("randk", d, n, k=k, backend="sparse")
+    rc_seed = make_round_compressor("randk", d, n, k=k,
+                                    mode="shared_coords", backend="sparse")
+    rc_dense = make_round_compressor("identity", d, n)
+    rc_bern = make_round_compressor("bernoulli", d, n, p=0.5)
+    rc_permk = make_round_compressor("permk", d, n, mode="permk",
+                                     backend="sparse")
+    seed_plan = Plan(kind="sparsify", scale=1.0,
+                     indices=np.broadcast_to(idx[0], (n, k)))
+    mask = (np.arange(n * d).reshape(n, d) % 3 == 0)
+    blk = d // n
+    permk_idx = ((np.arange(n * blk).reshape(n, blk) + 5) % d) \
+        .astype(np.int32)
+    permk_plan = Plan(kind="sparsify", scale=float(n), indices=permk_idx)
+    got = {
+        "sparse_idx": digest(wire.encode_round(
+            rc_sparse, None, Msgs(vals, idx), 3)),
+        "sparse_idx_absent": digest(wire.encode_round(
+            rc_sparse, None, Msgs(vals, idx), 3,
+            present=np.array([1, 0, 0, 1], bool))),
+        "seed": digest(wire.encode_round(
+            rc_seed, seed_plan,
+            Msgs(vals, np.broadcast_to(idx[0], (n, k))), 4)),
+        "dense": digest(wire.encode_round(
+            rc_dense, None, Msgs(dense_vals), 5)),
+        "bernoulli": digest(wire.encode_round(
+            rc_bern, Plan(kind="sparsify", scale=2.0, mask=mask), 
+            Msgs(dense_vals), 6)),
+        "permk": digest(wire.encode_round(
+            rc_permk, permk_plan, Msgs(vals[:, :blk], permk_idx), 7)),
+        "coin": digest(wire.encode_round(
+            rc_sparse, None, Msgs(vals, idx), 8, coin=True,
+            sync_values=dense_vals)),
+    }
+    expected = {
+        "sparse_idx": "149a388e83da2e4c",
+        "sparse_idx_absent": "5508199f6702acf0",
+        "seed": "68e5204a62180698",
+        "dense": "7727e21c73665e2c",
+        "bernoulli": "ad82688a8ef65e87",
+        "permk": "69fd8500bb742e6a",
+        "coin": "9994ec026541d158",
+    }
+    assert got == expected, got
