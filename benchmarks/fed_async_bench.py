@@ -1,0 +1,306 @@
+"""Asynchronous pipelining bench: what retiring the round barrier is
+WORTH in wall-clock (DESIGN.md §14).
+
+Three experiments, emitted to ``BENCH_async.json``:
+
+1. **Wall-clock-to-target vs straggler severity.** DASHA and MARINA run
+   barrier (``tau=None``) and asynchronously pipelined (``tau=2``)
+   through the vectorized simulator on one GLM problem, same compressor,
+   SAME network draws (common random numbers — the per-round spawned
+   streams stay valid even when rounds overlap in flight).  The clock
+   stops when the gradient-norm metric first crosses a fixed target, so
+   a method only banks the pipelining if the staleness deficit does not
+   cost it rounds.  Gates: async DASHA strictly beats its barrier run at
+   every high severity, the advantage WIDENS as the tail grows, and
+   MARINA's async/barrier ratio stays above DASHA's — its prob-p sync
+   coins flush the pipeline (``pipeline_coin_flush``), capping the gain.
+
+2. **Payload reconciliation.** Pipelining reschedules rounds, it must
+   not reprice them: the async runs' per-round ``bytes_up`` equal the
+   barrier runs' BIT-exactly (same engine coins, same wire schema), and
+   the mean bytes/node sits on the accounting expectation.
+
+3. **Implementation equivalence.** At small n the event-driven heap
+   oracle and the compiled in-scan ring buffer agree: integer traces
+   bit-exact, clocks to f32-carry tolerance; and ``tau=0`` reproduces
+   the barrier simulators bit-for-bit (the parity anchor).
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.run --only fed_async
+    PYTHONPATH=src python -m benchmarks.fed_async_bench [--smoke]
+
+Env: ``REPRO_BENCH_QUICK=1`` (or ``--smoke``) shrinks sizes for CI and
+ASSERTS the gates (the CI fed-async job runs this mode).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import sys
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import glm_problem, lipschitz_glm, theory_hyper
+from repro.compress import make_round_compressor
+from repro.core.oracles import FiniteSumProblem
+from repro.data.pipeline import synthetic_classification
+from repro.fed.net import Constant, LinkModel, Lognormal
+from repro.fed.sim import FedSim
+from repro.fed.vecsim import VecFedSim
+from repro.methods import FlatSubstrate
+from repro.methods.accounting import expected_wire_coords
+from repro.methods.rules import get_rule
+
+QUICK = bool(os.environ.get("REPRO_BENCH_QUICK"))
+
+D = 512 if QUICK else 2048
+N = 20
+K = max(D // 64, 8)
+M = 8                       # samples per node (compute is not the point)
+ROUNDS = 120 if QUICK else 300
+TAU = 2
+SIGMAS = (0.0, 1.0, 2.0) if QUICK else (0.0, 0.5, 1.0, 1.5, 2.0)
+HIGH_SIGMA = 1.0            # "high severity" = sigmas >= this
+MARINA_P = 0.15             # frequent enough coins to see the flush
+SEED = 7
+
+#: WAN-ish links; the uplink carries the straggler tail
+UP_BW, DOWN_BW, LATENCY = 1e6, 1e8, 1e-3
+
+
+def _problem(n=N, d=D, m=M):
+    feats, labels = synthetic_classification(jax.random.PRNGKey(0), n, m, d)
+
+    def loss(x, a, y):
+        return (1.0 - 1.0 / (1.0 + jnp.exp(y * jnp.dot(a, x)))) ** 2
+
+    prob = FiniteSumProblem(loss=loss, features=feats, labels=labels)
+    return prob, FlatSubstrate(prob, n, d), lipschitz_glm(prob)
+
+
+def _links(sigma: float):
+    strag = Lognormal(sigma) if sigma > 0 else Constant()
+    return (LinkModel(latency_s=LATENCY, bandwidth_Bps=UP_BW,
+                      straggler=strag),
+            LinkModel(latency_s=LATENCY, bandwidth_Bps=DOWN_BW))
+
+
+def _hyper(variant, rc, L):
+    hp = theory_hyper(variant, rc.omega, L, d=D, k=K, n=N, m=M)
+    if variant == "marina":
+        hp = dataclasses.replace(hp, p=max(hp.p, MARINA_P))
+    return hp
+
+
+def _run(variant, rc, sub, hp, sigma, tau, rounds=ROUNDS, cls=VecFedSim):
+    up, down = _links(sigma)
+    sim = cls(variant, rc, sub, hp, uplink=up, downlink=down,
+              compute_s=0.0, seed=SEED, tau=tau)
+    st = sim.init(jnp.zeros(D), jax.random.PRNGKey(1))
+    return sim.run(st, rounds)
+
+
+def _wall_to_target(res, target: float) -> float:
+    """Seconds until the metric first crosses ``target`` — the round's
+    LANDING time (the server cannot report progress it has not seen)."""
+    hit = np.nonzero(res.traces["metric"] <= target)[0]
+    if hit.size == 0:
+        return float("inf")
+    return float(res.traces["sim_wall_clock"][hit[0]])
+
+
+def severity_sweep() -> Dict:
+    """Experiment 1 + 2: wall-clock-to-target curves and byte identity."""
+    prob, sub, L = _problem()
+    rc = make_round_compressor("randk", D, N, k=K, backend="sparse")
+    variants = {v: _hyper(v, rc, L) for v in ("dasha", "marina")}
+
+    runs = {v: {"barrier": [], "async": []} for v in variants}
+    bytes_identical = True
+    for sigma in SIGMAS:
+        for v, hp in variants.items():
+            rb = _run(v, rc, sub, hp, sigma, None)
+            ra = _run(v, rc, sub, hp, sigma, TAU)
+            runs[v]["barrier"].append(rb)
+            runs[v]["async"].append(ra)
+            # pipelining reschedules rounds, it must not reprice them
+            if not np.array_equal(rb.traces["bytes_up"],
+                                  ra.traces["bytes_up"]):
+                bytes_identical = False
+
+    # one fixed target every run reaches: the worst final metric seen
+    target = max(float(r.traces["metric"][-1])
+                 for v in runs for m in runs[v] for r in runs[v][m])
+    wall = {v: {m: [_wall_to_target(r, target) for r in runs[v][m]]
+                for m in runs[v]} for v in runs}
+    ratio = {v: [a / b for a, b in zip(wall[v]["async"],
+                                       wall[v]["barrier"])]
+             for v in wall}
+    gap = {v: [b - a for a, b in zip(wall[v]["async"],
+                                     wall[v]["barrier"])]
+           for v in wall}
+
+    hi = [i for i, s in enumerate(SIGMAS) if s >= HIGH_SIGMA]
+    dasha_strict = all(wall["dasha"]["async"][i]
+                       < wall["dasha"]["barrier"][i] for i in hi)
+    # the advantage widens with the tail (CRN makes this clean)
+    widening = all(gap["dasha"][i + 1] >= gap["dasha"][i] * 0.95
+                   for i in range(len(SIGMAS) - 1)) \
+        and gap["dasha"][-1] > gap["dasha"][0]
+    # MARINA's coin flushes cap its gain relative to DASHA's
+    marina_capped = all(ratio["marina"][i] > ratio["dasha"][i]
+                        for i in hi)
+
+    # accounting: mean measured bytes/node vs the wire expectation
+    wire_coords = rc.spec.wire_coords("independent")
+    recon = {}
+    for v, hp in variants.items():
+        ra = runs[v]["async"][-1]
+        measured = float(ra.traces["bytes_up"].mean() / N) \
+            - 16.0  # HEADER_BYTES
+        rule = get_rule(v)
+        p = hp.p if rule.has_sync else 0.0
+        expected = 4 * expected_wire_coords(rule, hp, wire_coords,
+                                            float(D))
+        tol = 4 * 4.0 * np.sqrt(max(p * (1 - p), 1e-12) / ROUNDS) \
+            * (D - wire_coords)
+        recon[v] = {"measured_wire_bytes_per_node": measured,
+                    "expected_wire_bytes_per_node": expected,
+                    "ok": bool(abs(measured - expected) <= tol + 1e-9)}
+
+    sync_rounds = {v: float(runs[v]["async"][-1]
+                            .traces["sync_round"].sum())
+                   for v in runs}
+    return {
+        "sigmas": list(SIGMAS), "tau": TAU, "rounds": ROUNDS,
+        "target_metric": target,
+        "wall_to_target_s": wall,
+        "async_over_barrier_ratio": ratio,
+        "advantage_gap_s": gap,
+        "sync_rounds_async": sync_rounds,
+        "dasha_async_strictly_faster": bool(dasha_strict),
+        "advantage_widens_with_severity": bool(widening),
+        "marina_capped_by_coin_flush": bool(marina_capped),
+        "bytes_up_bit_identical_async_vs_barrier": bool(bytes_identical),
+        "payload_reconciliation": recon,
+        "payload_reconciles": bool(
+            bytes_identical and all(r["ok"] for r in recon.values())),
+    }
+
+
+def tau_sweep() -> Dict:
+    """Pipeline-depth curve: wall clock vs tau at high severity (the
+    depth saturates once the gate stops binding)."""
+    prob, sub, L = _problem()
+    rc = make_round_compressor("randk", D, N, k=K, backend="sparse")
+    hp = _hyper("dasha", rc, L)
+    taus = [0, 1, 2, 4]
+    walls = [float(_run("dasha", rc, sub, hp, 2.0, t,
+                        rounds=min(ROUNDS, 150)).summary["wall_clock_s"])
+             for t in taus]
+    return {"taus": taus, "wall_clock_s": walls,
+            "monotone_nonincreasing": bool(
+                all(b <= a * (1 + 1e-9)
+                    for a, b in zip(walls, walls[1:])))}
+
+
+def equivalence_check() -> Dict:
+    """Experiment 3: heap == vec at small n; tau=0 == barrier bit-exact."""
+    n, d, k, rounds = 5, 64, 8, 40
+    prob = glm_problem(d=d, m=8)
+    sub = FlatSubstrate(prob, n, d)
+    rc = make_round_compressor("randk", d, n, k=k, backend="sparse")
+    L = lipschitz_glm(prob)
+    hp = theory_hyper("dasha", rc.omega, L, d=d, k=k, n=n, m=8)
+    up, down = _links(1.5)
+    kw = dict(uplink=up, downlink=down, seed=3, compute_s=0.002)
+
+    def run(cls, tau):
+        sim = cls("dasha", rc, sub, hp, tau=tau, **kw)
+        st = sim.init(jnp.zeros(d), jax.random.PRNGKey(1))
+        return sim.run(st, rounds)
+
+    rh, rv = run(FedSim, TAU), run(VecFedSim, TAU)
+    bytes_ok = all(np.array_equal(rh.traces[k_], rv.traces[k_])
+                   for k_ in ("bytes_up", "value_bytes", "bytes_down",
+                              "sync_round", "participants"))
+    wall_ok = bool(np.allclose(rv.traces["sim_wall_clock"],
+                               rh.traces["sim_wall_clock"], rtol=2e-5))
+
+    tau0_ok = True
+    for cls in (FedSim, VecFedSim):
+        rb, r0 = run(cls, None), run(cls, 0)
+        for k_ in rb.traces:
+            tau0_ok &= bool(np.array_equal(rb.traces[k_], r0.traces[k_]))
+        tau0_ok &= bool(np.array_equal(np.asarray(rb.state.x),
+                                       np.asarray(r0.state.x)))
+    return {"n": n, "d": d, "rounds": rounds, "tau": TAU,
+            "heap_vec_integer_traces_bit_exact": bool(bytes_ok),
+            "heap_vec_wall_clock_close": wall_ok,
+            "tau0_reproduces_barrier_bit_exact": bool(tau0_ok),
+            "ok": bool(bytes_ok and wall_ok and tau0_ok)}
+
+
+def run() -> List[Dict]:
+    jax.config.update("jax_platforms", "cpu")
+    sev = severity_sweep()
+    depth = tau_sweep()
+    equiv = equivalence_check()
+    advantage_ok = bool(sev["dasha_async_strictly_faster"]
+                        and sev["advantage_widens_with_severity"]
+                        and sev["marina_capped_by_coin_flush"]
+                        and equiv["ok"])
+    report = {
+        "config": {"d": D, "k": K, "n": N, "rounds": ROUNDS, "tau": TAU,
+                   "marina_p": MARINA_P, "uplink_Bps": UP_BW,
+                   "downlink_Bps": DOWN_BW, "latency_s": LATENCY,
+                   "quick": QUICK},
+        "severity": sev, "tau_sweep": depth, "equivalence": equiv,
+        "async_advantage_ok": advantage_ok,
+        "payload_reconciles": sev["payload_reconciles"],
+    }
+    with open("BENCH_async.json", "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"[fed_async] async_advantage_ok={advantage_ok} "
+          f"payload_reconciles={sev['payload_reconciles']} "
+          f"(wrote BENCH_async.json)")
+    if QUICK:
+        # the CI gate: quick mode must PROVE the claim, not just plot it
+        assert advantage_ok, "async advantage gate failed"
+        assert sev["payload_reconciles"], "payload reconciliation failed"
+
+    cols = ["bench", "sigma", "tau", "wall_dasha_barrier_s",
+            "wall_dasha_async_s", "wall_marina_barrier_s",
+            "wall_marina_async_s", "wall_s", "ok"]
+    blank = {c: "" for c in cols}
+    rows = []
+    for i, sigma in enumerate(SIGMAS):
+        rows.append(dict(
+            blank, bench="fed_async_severity", sigma=sigma,
+            wall_dasha_barrier_s=round(
+                sev["wall_to_target_s"]["dasha"]["barrier"][i], 4),
+            wall_dasha_async_s=round(
+                sev["wall_to_target_s"]["dasha"]["async"][i], 4),
+            wall_marina_barrier_s=round(
+                sev["wall_to_target_s"]["marina"]["barrier"][i], 4),
+            wall_marina_async_s=round(
+                sev["wall_to_target_s"]["marina"]["async"][i], 4)))
+    for t, w in zip(depth["taus"], depth["wall_clock_s"]):
+        rows.append(dict(blank, bench="fed_async_tau", tau=t,
+                         wall_s=round(w, 4)))
+    rows.append(dict(blank, bench="fed_async_equiv", ok=equiv["ok"]))
+    return rows
+
+
+if __name__ == "__main__":
+    if "--smoke" in sys.argv:
+        os.environ["REPRO_BENCH_QUICK"] = "1"
+        print("[fed_async] --smoke: rerun under REPRO_BENCH_QUICK")
+        os.execv(sys.executable, [sys.executable, "-m",
+                                  "benchmarks.fed_async_bench"])
+    from benchmarks.common import emit
+    emit(run())

@@ -110,6 +110,25 @@ def round_multipliers(stream: np.random.Generator, downlink: LinkModel,
             uplink.straggler.draw(stream, n))
 
 
+def campaign_multipliers(rng: np.random.Generator, rounds: int,
+                         downlink: LinkModel, uplink: LinkModel, n: int):
+    """All of a campaign's straggler draws up front: (rounds, n) downlink
+    and uplink matrices assembled from the per-round spawned streams.
+
+    Because the draws are keyed by (round, client) — never by arrival
+    order — they are valid common random numbers even when rounds OVERLAP
+    in time: the asynchronous pipelined simulators (``tau`` set on
+    :class:`repro.fed.sim.FedSim` / :class:`repro.fed.vecsim.VecFedSim`)
+    keep messages from several rounds in flight at once, yet a barrier run
+    and an async run under one seed face the exact same per-round network,
+    so their wall-clock difference is the pipelining's alone."""
+    md = np.empty((rounds, n), np.float64)
+    mu = np.empty((rounds, n), np.float64)
+    for t, stream in enumerate(campaign_streams(rng, rounds)):
+        md[t], mu[t] = round_multipliers(stream, downlink, uplink, n)
+    return md, mu
+
+
 def severity_grid(kind: str = "lognormal", levels=(0.0, 0.5, 1.0, 1.5, 2.0)):
     """The bench's straggler-severity axis: a list of (label, Straggler)."""
     if kind == "lognormal":

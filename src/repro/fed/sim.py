@@ -18,7 +18,13 @@ lockstep driver.  What the simulator adds is TIME and BYTES:
   clients send nothing and nobody waits for them); for rules with
   ``sync_requires_all`` (SYNC-MVR, MARINA) a sync-coin round is a
   synchronization BARRIER — all n clients must land their DENSE upload, so
-  the slowest straggler gates the round.
+  the slowest straggler gates the round;
+* with ``tau`` set, rounds PIPELINE (DESIGN.md §14): per-client
+  next-free-time clocks replace the single round barrier, the server
+  broadcasts x^{t+1} as soon as every round <= t-1-tau has landed, and
+  messages still in flight are carried as a deficit on the server
+  estimator through ``Method.step_full(..., deficit=...)``; tau=0
+  reproduces the barrier bit-exactly (the parity anchor).
 
 Partial participation is an arrival process whose per-round realization is
 the engine's own randomness — Appendix-D coins recovered from the plan, or
@@ -44,6 +50,7 @@ REFERENCE: per-client codec bytes and an explicit event heap; use
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import heapq
 from typing import Any, Callable, Dict, List, NamedTuple, Optional
@@ -52,8 +59,8 @@ import jax
 import numpy as np
 
 from repro.fed import wire
-from repro.fed.net import (LinkModel, campaign_streams,
-                           round_multipliers)
+from repro.fed.net import LinkModel, campaign_multipliers
+from repro.methods.accounting import downlink_receivers
 from repro.methods.engine import Hyper, Method
 from repro.methods.rules import get_rule
 
@@ -66,7 +73,7 @@ class FedEvent(NamedTuple):
     """One server-side event: ``m_i`` applied the moment it lands."""
 
     time: float
-    kind: str                          # "apply" | "round"
+    kind: str                          # "bcast" | "apply" | "round"
     client: int
     round: int
     nbytes: int
@@ -106,6 +113,16 @@ class FedSim:
     compute_s: float = 0.01
     seed: int = 0
     chunk: int = DEFAULT_CHUNK
+    #: staleness bound for ASYNCHRONOUS PIPELINED rounds (DESIGN.md §14).
+    #: None (default) keeps the classic barrier: broadcast t+1 waits for
+    #: every required round-t upload.  An int tau >= 0 retires the
+    #: barrier: the server broadcasts x^{t+1} as soon as every message
+    #: from rounds <= t-1-tau has landed, carrying the still-in-flight
+    #: rounds as a deficit on the server estimator
+    #: (``Method.step_full(..., deficit=...)``).  tau=0 reproduces the
+    #: barrier BIT-exactly (the gate is round t's own completion and the
+    #: deficit is provably empty) — the parity anchor tests pin.
+    tau: Optional[int] = None
 
     def __post_init__(self):
         self.rule = get_rule(self.variant)
@@ -119,15 +136,11 @@ class FedSim:
                 "FedSim needs a substrate exposing estimator_update_full "
                 "(per-node wire messages) — currently FlatSubstrate only; "
                 f"got {type(self.substrate).__name__}")
+        if self.tau is not None and int(self.tau) < 0:
+            raise ValueError(f"staleness bound tau={self.tau} must be >= 0")
         self.sampled = bool(getattr(self.substrate, "samples_clients",
                                     False))
         self.n = int(getattr(self.substrate, "n", self.comp.n))
-        if self.sampled and self.comp.spec.name == "permk":
-            raise NotImplementedError(
-                "heap-sim PERMK encoding under client sampling: the PERMK "
-                "wire format reconstructs indices from the node field, but "
-                "a cohort slice is keyed by slot — use VecFedSim (analytic "
-                "bytes are exact: blk values per sampled client)")
         self.method: Method = Method.build(self.variant, self.comp,
                                            self.substrate, self.hyper)
         # the engine's round keys: key, k_h, k_c, k_coin = split(key, 4);
@@ -199,36 +212,103 @@ class FedSim:
         the right support: shared supports broadcast (every row is the
         same), private supports scatter through the cohort."""
         rep = {}
+        shared = (self.comp.mode == "shared_coords"
+                  and self.comp.spec.name != "permk")
         for field in ("indices", "mask"):
             arr = getattr(plan, field)
             if arr is None:
                 continue
             arr = np.asarray(arr)
-            if self.comp.mode == "shared_coords":
+            if shared:
                 rep[field] = np.broadcast_to(arr[0], (n,) + arr.shape[1:])
             else:
+                # PermK rows are per-SLOT even under a shared permutation
+                # seed — each cohort slot owns a different block
                 rep[field] = _expand_cohort(arr, sel, n)
         return plan._replace(**rep) if rep else plan
+
+    def _round_wire(self, ys, j: int, t: int):
+        """Decode round ``t``'s engine observables (chunk slot ``j``) into
+        its wire realization: (coin, active, RoundBytes, dense (n, d)
+        message rows).  Shared by the barrier and async paths, so both
+        bill the byte-exact codec identically."""
+        n = self.n
+        coin = bool(ys["coin"][j]) if "coin" in ys else False
+        if "present" in ys:
+            present = np.asarray(ys["present"][j], bool)
+        else:
+            present = np.ones(n, bool)
+        if coin and self.rule.sync_requires_all:
+            # the barrier: ALL clients answer the sync round
+            active = np.ones(n, bool)
+        else:
+            active = present
+        vals = ys["values"][j]
+        idxs = ys.get("indices")
+        idxs = None if idxs is None else idxs[j]
+        slots = None
+        if self.sampled:
+            sel = np.asarray(ys["sel"][j])
+            vals = _expand_cohort(vals, sel, n)
+            if idxs is not None:
+                idxs = _expand_cohort(idxs, sel, n)
+            if self.comp.spec.name == "permk":
+                # slot-keyed PERMK_SLOT records: the cohort permutation
+                # partitions d over slots, so each record carries the
+                # client's slot in THIS round's cohort
+                slots = np.full(n, -1, np.int64)
+                slots[sel] = np.arange(sel.size)
+        msgs = _HostMessages(vals, idxs)
+        plan = self._plan(ys["key"][j]) if self._need_plan else None
+        if self.sampled and plan is not None:
+            plan = self._expand_plan(plan, sel, n)
+        bufs = wire.encode_round(
+            self.comp, plan, msgs, t, coin=coin,
+            sync_values=ys["sync"][j] if "sync" in ys else None,
+            present=active, slots=slots)
+        return coin, active, wire.round_bytes(bufs), (vals, idxs)
+
+    def _dense_rows(self, vals, idxs) -> np.ndarray:
+        """The (n, d) dense view of one round's messages (the async in-
+        flight ledger): scatter-ADD for sparse backends, mirroring
+        ``SparseMessages.dense()``; PAD indices (>= d) drop."""
+        d = int(self.comp.spec.d)
+        if idxs is None:
+            return np.asarray(vals, np.float32)
+        out = np.zeros((self.n, d), np.float32)
+        keep = idxs < d
+        rows = np.broadcast_to(np.arange(self.n)[:, None], idxs.shape)
+        np.add.at(out, (rows[keep], idxs[keep].astype(np.int64)),
+                  np.asarray(vals, np.float32)[keep])
+        return out
 
     def run(self, state, rounds: int, *,
             metric_fn: Optional[Callable] = None,
             log_events: bool = False, max_events: int = 100_000
             ) -> SimResult:
         metric_fn = self._metric_fn(metric_fn)
+        if self.tau is not None:
+            return self._run_async(state, rounds, metric_fn, log_events,
+                                   max_events)
         rng = np.random.default_rng(self.seed)
         n = self.n
         d = int(self.comp.spec.d)
         x_bytes = X_BYTES_PER_COORD * d
-        streams = campaign_streams(rng, rounds)
+        md_all, mu_all = campaign_multipliers(
+            rng, rounds, self.downlink, self.uplink, n)
+        # the dense broadcast reaches every client that computes this
+        # round: the sampled cohort only (unsampled rows freeze), all n
+        # otherwise — Appendix-D absentees still refresh h_i locally
+        recv = downlink_receivers(n, self.substrate.c if self.sampled
+                                  else None)
 
         names = ("metric", "bits_sent", "bytes_up", "value_bytes",
-                 "bytes_down", "sim_wall_clock", "sync_round",
-                 "participants")
+                 "bytes_down", "sim_wall_clock", "bcast_clock",
+                 "sync_round", "participants")
         tr = {k: np.zeros(rounds) for k in names}
         events: List[FedEvent] = []
         now = 0.0
         bytes_up_total = 0
-        bytes_down_total = 0
         sync_rounds = 0
 
         done = 0
@@ -238,44 +318,18 @@ class FedSim:
             ys = jax.device_get(ys)                # ONE transfer per chunk
             for j in range(length):
                 t = done + j
-                coin = bool(ys["coin"][j]) if "coin" in ys else False
-                if "present" in ys:
-                    present = np.asarray(ys["present"][j], bool)
-                else:
-                    present = np.ones(n, bool)
-                if coin and self.rule.sync_requires_all:
-                    # the barrier: ALL clients answer the sync round
-                    active = np.ones(n, bool)
-                else:
-                    active = present
-                vals = ys["values"][j]
-                idxs = ys.get("indices")
-                idxs = None if idxs is None else idxs[j]
-                if self.sampled:
-                    sel = np.asarray(ys["sel"][j])
-                    vals = _expand_cohort(vals, sel, n)
-                    if idxs is not None:
-                        idxs = _expand_cohort(idxs, sel, n)
-                msgs = _HostMessages(vals, idxs)
-                plan = self._plan(ys["key"][j]) if self._need_plan else None
-                if self.sampled and plan is not None:
-                    plan = self._expand_plan(plan, sel, n)
-                bufs = wire.encode_round(
-                    self.comp, plan, msgs, t, coin=coin,
-                    sync_values=ys.get("sync", [None] * length)[j],
-                    present=active)
-                rb = wire.round_bytes(bufs)
+                coin, active, rb, _ = self._round_wire(ys, j, t)
                 up_bytes = np.asarray(rb.per_node, np.float64)
                 down_bytes = np.where(active, x_bytes, 0) \
                     .astype(np.float64)
 
                 # common random numbers: every client holds a draw on both
                 # links this round, participant or not
-                m_down, m_up = round_multipliers(
-                    streams[t], self.downlink, self.uplink, n)
+                m_down, m_up = md_all[t], mu_all[t]
                 t_down = self.downlink.transfer_s(down_bytes, m_down)
                 t_up = self.uplink.transfer_s(up_bytes, m_up)
                 delay = t_down + self.compute_s + t_up
+                tr["bcast_clock"][t] = now
                 heap = []
                 for i in range(n):
                     if not active[i]:
@@ -298,13 +352,12 @@ class FedSim:
                 now = completion
 
                 bytes_up_total += rb.total_bytes
-                bytes_down_total += int(down_bytes.sum())
                 sync_rounds += int(coin)
                 tr["metric"][t] = float(ys["metric"][j])
                 tr["bits_sent"][t] = float(ys["bits"][j])
                 tr["bytes_up"][t] = rb.total_bytes
                 tr["value_bytes"][t] = rb.value_bytes
-                tr["bytes_down"][t] = down_bytes.sum()
+                tr["bytes_down"][t] = recv * x_bytes
                 tr["sim_wall_clock"][t] = now
                 tr["sync_round"][t] = float(coin)
                 tr["participants"][t] = float(active.sum())
@@ -314,10 +367,209 @@ class FedSim:
             "rounds": float(rounds),
             "wall_clock_s": now,
             "bytes_up": float(bytes_up_total),
-            "bytes_down": float(bytes_down_total),
+            "bytes_down": float(tr["bytes_down"].sum()),
             "sync_rounds": float(sync_rounds),
             "mean_participants": float(tr["participants"].mean()),
             "mean_bytes_up_per_round": float(bytes_up_total) / rounds,
+        }
+        return SimResult(state=state, traces=tr,
+                         events=events if log_events else None,
+                         summary=summary)
+
+    def _round_fn(self, metric_fn) -> Callable:
+        """Per-round jitted engine step WITH the deficit input — the async
+        tau >= 1 dispatch.  The deficit feeds back into the next round's
+        math, so rounds cannot fuse into one scan; one dispatch per round
+        is the oracle's price (use :class:`repro.fed.vecsim.VecFedSim`
+        for scale — its ring buffer lives inside the scan carry)."""
+        fn = self._compiled.get(("round", metric_fn))
+        if fn is not None:
+            return fn
+        sub, rule = self.substrate, self.rule
+
+        def one(st, deficit):
+            ys = {"key": st.key}
+            if self.sampled:
+                ys["sel"] = sub.round_cohort(st.key)
+            new, info = self.method.step_full(st, None, deficit=deficit)
+            ys["metric"] = metric_fn(new)
+            ys["bits"] = new.bits_sent
+            ys["values"] = info.messages.values
+            if getattr(info.messages, "indices", None) is not None:
+                ys["indices"] = info.messages.indices
+            if info.coin is not None:
+                ys["coin"] = info.coin
+            if info.present is not None:
+                ys["present"] = info.present
+            if rule.has_sync:
+                ys["sync"] = info.sync_dense
+            return new, ys
+
+        fn = jax.jit(one)
+        self._compiled[("round", metric_fn)] = fn
+        return fn
+
+    def _run_async(self, state, rounds: int, metric_fn,
+                   log_events: bool, max_events: int) -> SimResult:
+        """Asynchronous pipelined replay (DESIGN.md §14): per-client
+        next-free-time clocks, cross-round in-flight messages, and a
+        staleness-bounded broadcast gate.
+
+        Per round t: the server broadcasts x^{t+1} at ``T = max(T,
+        completion(t-1-tau), flush)`` — it waits only for rounds older
+        than the staleness bound (and for a sync flush) — computing
+        x^{t+1} from ``g - deficit`` where the deficit is the (1/n)-scaled
+        sum of messages still in flight at T.  Clients stay lockstep:
+        client i starts round t's compute at ``max(T + downlink_i,
+        free_i)`` and its upload lands at ``start + compute + uplink_i``,
+        updating ``free_i``.  Arrivals APPLY on landing (g is a sum;
+        landings commute), so a slow client's round-t message can land
+        after round t+k was already broadcast.
+
+        At tau = 0 the gate is exactly round t-1's completion, the deficit
+        is provably empty (nothing can still be in flight), and the
+        busy-client branch never binds — so the engine pass reuses the
+        barrier's own chunked scans (bit-identical states) and the clock
+        arithmetic reproduces the barrier's f64 chains term for term: the
+        parity anchor tests/test_fed_async.py pins bit-exactly.
+
+        ``sync_requires_all`` coin rounds flush the pipeline
+        (:attr:`repro.methods.rules.VariantRule.pipeline_coin_flush`):
+        pre-coin in-flight messages are discarded (the sync reset
+        overwrites g) and the next broadcast waits for all n dense
+        uploads — MARINA / SYNC-MVR keep paying their barrier."""
+        tau = int(self.tau)
+        rng = np.random.default_rng(self.seed)
+        n = self.n
+        d = int(self.comp.spec.d)
+        x_bytes = X_BYTES_PER_COORD * d
+        md_all, mu_all = campaign_multipliers(
+            rng, rounds, self.downlink, self.uplink, n)
+        recv = downlink_receivers(n, self.substrate.c if self.sampled
+                                  else None)
+        flush_rule = self.rule.pipeline_coin_flush
+        lat_d = self.downlink.latency_s
+
+        names = ("metric", "bits_sent", "bytes_up", "value_bytes",
+                 "bytes_down", "sim_wall_clock", "bcast_clock",
+                 "sync_round", "participants")
+        tr = {k: np.zeros(rounds) for k in names}
+        events: List[FedEvent] = []
+
+        T = 0.0                         # latest broadcast time
+        free = np.zeros(n)              # per-client next-free-time clocks
+        flush_T = -np.inf               # pending sync-flush gate
+        # staleness ring over the last tau+1 dispatched rounds: slot 0 =
+        # round t-1-tau (its completion gates broadcast t), slots 1..tau =
+        # rounds allowed to still be in flight (their arrivals/messages
+        # feed the deficit)
+        ring = collections.deque(
+            [{"floor": -np.inf, "arr": None, "msgs": None}
+             for _ in range(tau + 1)], maxlen=tau + 1)
+
+        step1 = self._round_fn(metric_fn) if tau >= 1 else None
+        buf = None
+        buf_off = buf_len = 0
+        bytes_up_total = 0
+        sync_rounds = 0
+
+        for t in range(rounds):
+            gate = max(ring[0]["floor"], flush_T)
+            T_new = max(T, gate)
+
+            if tau == 0:
+                # deficit provably empty: the engine pass IS the barrier's
+                # chunked scan — bit-identical jaxpr, bit-identical states
+                if buf_off == buf_len:
+                    buf_len = min(self.chunk, rounds - t)
+                    state, buf = self._chunk_fn(buf_len, metric_fn)(state)
+                    buf = jax.device_get(buf)
+                    buf_off = 0
+                ys, j = buf, buf_off
+                buf_off += 1
+            else:
+                deficit = np.zeros(d, np.float32)
+                for e in list(ring)[1:]:
+                    if e["arr"] is None:
+                        continue
+                    in_flight = e["arr"] > T_new
+                    if in_flight.any():
+                        deficit += e["msgs"][in_flight].sum(0)
+                state, ys1 = step1(state, deficit / np.float32(n))
+                ys1 = jax.device_get(ys1)
+                ys = {k: np.asarray(v)[None] for k, v in ys1.items()}
+                j = 0
+
+            coin, active, rb, (vals, idxs) = self._round_wire(ys, j, t)
+            up_bytes = np.asarray(rb.per_node, np.float64)
+            down_bytes = np.where(active, x_bytes, 0).astype(np.float64)
+            m_down, m_up = md_all[t], mu_all[t]
+            t_down = self.downlink.transfer_s(down_bytes, m_down)
+            t_up = self.uplink.transfer_s(up_bytes, m_up)
+            # a client starts round t's compute once the broadcast reaches
+            # it AND its previous upload is done; the not-busy branch
+            # repeats the barrier's exact f64 add chain (tau=0 parity)
+            busy = free > T_new + t_down
+            arr = np.where(busy, (free + self.compute_s) + t_up,
+                           T_new + (t_down + self.compute_s + t_up))
+            arr_m = np.where(active, arr, -np.inf)
+            floor_t = float(arr_m.max()) if active.any() \
+                else T_new + lat_d
+            free = np.where(active, arr, free)
+
+            if log_events:
+                if len(events) < max_events:
+                    events.append(FedEvent(T_new, "bcast", -1, t,
+                                           recv * x_bytes))
+                act_idx = np.nonzero(active)[0]
+                for i in act_idx[np.argsort(arr[act_idx], kind="stable")]:
+                    if len(events) >= max_events:
+                        break
+                    events.append(FedEvent(float(arr[i]), "apply", int(i),
+                                           t, rb.per_node[i]))
+                if len(events) < max_events:
+                    events.append(FedEvent(floor_t, "round", -1, t,
+                                           rb.total_bytes))
+
+            ring.popleft()
+            if coin and flush_rule:
+                # sync reset: g <- mean(h_sync) discards every pre-coin
+                # in-flight message, and the NEXT broadcast waits for all
+                # n dense sync uploads — the capped-pipelining mechanism
+                flush_T = max(flush_T, floor_t)
+                for e in ring:
+                    e["floor"], e["arr"], e["msgs"] = -np.inf, None, None
+                ring.append({"floor": -np.inf, "arr": None, "msgs": None})
+            else:
+                ring.append({
+                    "floor": floor_t, "arr": arr_m,
+                    "msgs": self._dense_rows(vals, idxs)
+                    if tau >= 1 else None})
+            T = T_new
+
+            bytes_up_total += rb.total_bytes
+            sync_rounds += int(coin)
+            tr["metric"][t] = float(ys["metric"][j])
+            tr["bits_sent"][t] = float(ys["bits"][j])
+            tr["bytes_up"][t] = rb.total_bytes
+            tr["value_bytes"][t] = rb.value_bytes
+            tr["bytes_down"][t] = recv * x_bytes
+            tr["sim_wall_clock"][t] = floor_t
+            tr["bcast_clock"][t] = T_new
+            tr["sync_round"][t] = float(coin)
+            tr["participants"][t] = float(active.sum())
+
+        summary = {
+            "rounds": float(rounds),
+            "wall_clock_s": float(tr["sim_wall_clock"].max())
+            if rounds else 0.0,
+            "bytes_up": float(bytes_up_total),
+            "bytes_down": float(tr["bytes_down"].sum()),
+            "sync_rounds": float(sync_rounds),
+            "mean_participants": float(tr["participants"].mean()),
+            "mean_bytes_up_per_round":
+                float(bytes_up_total) / max(rounds, 1),
+            "tau": float(tau),
         }
         return SimResult(state=state, traces=tr,
                          events=events if log_events else None,
@@ -337,12 +589,14 @@ def simulate(variant: str, comp, substrate, hyper: Hyper, x0, key, *,
              downlink: Optional[LinkModel] = None, compute_s: float = 0.01,
              seed: int = 0, init_kw: Optional[dict] = None,
              metric_fn=None, log_events: bool = False,
-             engine: str = "heap") -> SimResult:
+             engine: str = "heap", tau: Optional[int] = None) -> SimResult:
     """One-shot convenience: build the sim, init the method, run it.
 
     ``engine="heap"`` (default) is this module's event-driven reference;
     ``engine="vec"`` runs :class:`repro.fed.vecsim.VecFedSim` — same
-    bytes, same network draws, one compiled program (DESIGN.md §12)."""
+    bytes, same network draws, one compiled program (DESIGN.md §12).
+    ``tau`` selects asynchronous pipelined rounds with that staleness
+    bound (DESIGN.md §14); None keeps the round barrier."""
     if engine == "vec":
         from repro.fed.vecsim import VecFedSim
         cls = VecFedSim
@@ -353,7 +607,7 @@ def simulate(variant: str, comp, substrate, hyper: Hyper, x0, key, *,
     sim = cls(variant=variant, comp=comp, substrate=substrate,
               hyper=hyper, uplink=uplink or LinkModel(),
               downlink=downlink or LinkModel(), compute_s=compute_s,
-              seed=seed)
+              seed=seed, tau=tau)
     state = sim.init(x0, key, **(init_kw or {}))
     kw = {} if engine == "vec" else {"log_events": log_events}
     return sim.run(state, rounds, metric_fn=metric_fn, **kw)

@@ -46,6 +46,7 @@ import numpy as np
 from repro.fed import wire
 from repro.fed.net import LinkModel, campaign_streams, round_multipliers
 from repro.fed.sim import DEFAULT_CHUNK, X_BYTES_PER_COORD, SimResult
+from repro.methods.accounting import downlink_receivers
 from repro.methods.engine import Hyper, Method
 from repro.methods.rules import get_rule
 
@@ -68,6 +69,14 @@ class VecFedSim:
     compute_s: float = 0.01
     seed: int = 0
     chunk: int = DEFAULT_CHUNK
+    #: staleness bound for asynchronous pipelined rounds (DESIGN.md §14);
+    #: None keeps the round barrier.  Same semantics as
+    #: :class:`repro.fed.sim.FedSim` — here the per-client clocks and the
+    #: bounded in-flight ring live INSIDE the scan carry (clocks rebased
+    #: to the broadcast each round so f32 stays sharp; a (tau, n) arrival
+    #: ring + a (tau, n, d) message ring feed the deficit), and the scan
+    #: still emits per-round scalars only.
+    tau: Optional[int] = None
 
     def __post_init__(self):
         self.rule = get_rule(self.variant)
@@ -80,12 +89,15 @@ class VecFedSim:
             raise ValueError(
                 "VecFedSim needs a substrate exposing estimator_update_full"
                 f" — got {type(self.substrate).__name__}")
+        if self.tau is not None and int(self.tau) < 0:
+            raise ValueError(f"staleness bound tau={self.tau} must be >= 0")
         self.sampled = bool(getattr(self.substrate, "samples_clients",
                                     False))
         self.n = int(getattr(self.substrate, "n", self.comp.n))
         self._bound = self.substrate.with_compressor(self.comp)
         self.schema = wire.wire_schema(
-            self._bound.cohort_rc if self.sampled else self.comp)
+            self._bound.cohort_rc if self.sampled else self.comp,
+            slot_keyed=self.sampled)
         self.method: Method = Method.build(self.variant, self.comp,
                                            self.substrate, self.hyper)
         self._compiled: Dict[Any, Callable] = {}
@@ -160,6 +172,8 @@ class VecFedSim:
     def run(self, state, rounds: int, *,
             metric_fn: Optional[Callable] = None) -> SimResult:
         metric_fn = self._metric_fn(metric_fn)
+        if self.tau is not None and rounds > 0:
+            return self._run_async(state, rounds, metric_fn)
         n, d = self.n, int(self.comp.spec.d)
         rng = np.random.default_rng(self.seed)
         streams = campaign_streams(rng, rounds)
@@ -195,8 +209,15 @@ class VecFedSim:
         dense_total = n * (wire.HEADER_BYTES + 4 * d)
         bytes_up = np.where(coin, dense_total, head * part + bpv * csum)
         value_bytes = np.where(coin, n * 4 * d, 4 * csum)
-        bytes_down = X_BYTES_PER_COORD * d * part
+        # cohort-only downlink: the broadcast reaches the clients that
+        # compute this round (the C-cohort under sampling, all n otherwise
+        # — Appendix-D absentees still refresh h_i locally)
+        recv = downlink_receivers(n, self.substrate.c if self.sampled
+                                  else None)
+        bytes_down = np.full(rounds, X_BYTES_PER_COORD * d * recv,
+                             np.int64)
         wall = np.cumsum(ys["round_t"].astype(np.float64))
+        bcast = np.concatenate([[0.0], wall[:-1]])
 
         traces = {
             "metric": ys["metric"].astype(np.float64),
@@ -205,6 +226,7 @@ class VecFedSim:
             "value_bytes": value_bytes.astype(np.float64),
             "bytes_down": bytes_down.astype(np.float64),
             "sim_wall_clock": wall,
+            "bcast_clock": bcast,
             "sync_round": coin.astype(np.float64),
             "participants": part.astype(np.float64),
         }
@@ -216,6 +238,217 @@ class VecFedSim:
             "sync_rounds": float(coin.sum()),
             "mean_participants": float(part.mean()),
             "mean_bytes_up_per_round": float(bytes_up.sum()) / rounds,
+        }
+        return SimResult(state=state, traces=traces, events=None,
+                         summary=summary)
+
+    # ------------------------------------------------------------------
+    # asynchronous pipelined rounds (DESIGN.md §14)
+    # ------------------------------------------------------------------
+
+    def _chunk_fn_async(self, length: int, metric_fn) -> Callable:
+        """The async scan body: per-client clocks + the bounded in-flight
+        ring live in the CARRY, rebased to the broadcast time every round
+        so float32 stays sharp no matter how long the campaign runs; the
+        scan emits per-round scalars only (``bcast_rel`` = how far the
+        broadcast advanced, ``land_rel`` = when the round's own uploads
+        finish, both relative — the host f64-cumsums absolute clocks).
+
+        tau=0 parity is arithmetic, not coincidence: the gate is exactly
+        the previous round's ``land_rel`` (so the emitted durations are
+        the barrier scan's ``round_t`` sequence bit-for-bit), the
+        busy-client branch never binds (a client frees before the round
+        it gates completes), and the deficit ring does not exist — the
+        engine call is the identical no-deficit jaxpr."""
+        fn = self._compiled.get(("async", length, metric_fn))
+        if fn is not None:
+            return fn
+        n, d = self.n, int(self.comp.spec.d)
+        rule, schema = self.rule, self.schema
+        x_bytes = X_BYTES_PER_COORD * d
+        dense_up = float(wire.HEADER_BYTES + 4 * d)
+        lat_d = float(self.downlink.latency_s)
+        tau = int(self.tau)
+        flush_rule = rule.pipeline_coin_flush
+        neg_inf = jnp.float32(-jnp.inf)
+
+        def body(carry, xs):
+            if tau >= 1:
+                st, free, ring_a, ring_floor, ring_m, flush = carry
+            else:
+                st, free, ring_a, ring_floor, flush = carry
+            m_down, m_up = xs                          # (n,) f32 each
+            key = st.key                               # pre-step key
+
+            # broadcast gate: rounds <= t-1-tau (ring slot 0) + any
+            # pending sync flush must have landed; rebase all clocks so
+            # "0" is the new broadcast instant
+            gate = jnp.maximum(ring_floor[0], flush)
+            adv = jnp.maximum(gate, jnp.float32(0.0))
+            free = free - adv
+            ring_a = ring_a - adv
+            ring_floor = ring_floor - adv
+            flush = neg_inf
+
+            if tau >= 1:
+                in_flight = ring_a[1:] > 0.0           # (tau, n)
+                deficit = jnp.sum(
+                    jnp.where(in_flight[..., None], ring_m, 0.0),
+                    axis=(0, 1)) / jnp.float32(n)
+                new, info = self.method.step_full(st, None,
+                                                  deficit=deficit)
+            else:
+                new, info = self.method.step_full(st, None)
+            coin = info.coin if info.coin is not None \
+                else jnp.zeros((), bool)
+            present = info.present if info.present is not None \
+                else jnp.ones((n,), bool)
+            if rule.sync_requires_all and info.coin is not None:
+                active = jnp.logical_or(present, coin)  # the flush round
+            else:
+                active = present
+            if schema.static_count is None:
+                counts = self._bound.round_wire_counts(key)
+            else:
+                counts = jnp.full((n,), schema.static_count, jnp.int32)
+            counts = counts * active
+
+            comp_b = schema.header_bytes \
+                + schema.bytes_per_value * counts.astype(jnp.float32)
+            up_b = jnp.where(coin, dense_up, comp_b) \
+                * active.astype(jnp.float32)
+            down_b = x_bytes * active.astype(jnp.float32)
+            # a client starts once the broadcast reaches it AND it is
+            # free; the not-busy branch is the barrier scan's delay
+            # expression token for token (tau=0 bit parity)
+            dd = self.downlink.latency_s \
+                + down_b / self.downlink.bandwidth_Bps * m_down
+            a_new = jnp.where(
+                free > dd,
+                free + self.compute_s + self.uplink.latency_s
+                + up_b / self.uplink.bandwidth_Bps * m_up,
+                self.downlink.latency_s
+                + down_b / self.downlink.bandwidth_Bps * m_down
+                + self.compute_s
+                + self.uplink.latency_s
+                + up_b / self.uplink.bandwidth_Bps * m_up)
+            masked = jnp.where(active, a_new, -jnp.inf)
+            n_active = jnp.sum(active.astype(jnp.int32))
+            land = jnp.where(n_active > 0, jnp.max(masked), lat_d)
+            free = jnp.where(active, a_new, free)
+
+            pushed_a = jnp.concatenate([ring_a[1:], masked[None]], 0)
+            pushed_f = jnp.concatenate([ring_floor[1:], land[None]], 0)
+            if tau >= 1:
+                rows = info.messages.dense().astype(jnp.float32)
+                if self.sampled:
+                    sel = self.substrate.round_cohort(key)
+                    rows = jnp.zeros((n, d), jnp.float32).at[sel] \
+                        .set(rows)
+                pushed_m = jnp.concatenate([ring_m[1:], rows[None]], 0)
+            if flush_rule:
+                # sync coin: the reset g <- mean(h_sync) discards every
+                # pre-coin in-flight message; the next broadcast waits
+                # for all n dense uploads via the flush gate
+                do_flush = coin
+                flush = jnp.where(do_flush, land, neg_inf)
+                ring_a = jnp.where(do_flush, neg_inf, pushed_a)
+                ring_floor = jnp.where(do_flush, neg_inf, pushed_f)
+                if tau >= 1:
+                    ring_m = jnp.where(do_flush, jnp.float32(0.0),
+                                       pushed_m)
+            else:
+                ring_a, ring_floor = pushed_a, pushed_f
+                if tau >= 1:
+                    ring_m = pushed_m
+
+            ys = {"metric": metric_fn(new), "bits": new.bits_sent,
+                  "coin": coin, "participants": n_active,
+                  "counts_sum": jnp.sum(counts),
+                  "bcast_rel": adv, "land_rel": land}
+            if tau >= 1:
+                out = (new, free, ring_a, ring_floor, ring_m, flush)
+            else:
+                out = (new, free, ring_a, ring_floor, flush)
+            return out, ys
+
+        def scan_chunk(carry, m_down, m_up):
+            return jax.lax.scan(body, carry, (m_down, m_up))
+
+        fn = jax.jit(scan_chunk)
+        self._compiled[("async", length, metric_fn)] = fn
+        return fn
+
+    def _run_async(self, state, rounds: int, metric_fn) -> SimResult:
+        n, d = self.n, int(self.comp.spec.d)
+        tau = int(self.tau)
+        rng = np.random.default_rng(self.seed)
+        streams = campaign_streams(rng, rounds)
+
+        free = jnp.zeros((n,), jnp.float32)
+        ring_a = jnp.full((tau + 1, n), -jnp.inf, jnp.float32)
+        ring_floor = jnp.full((tau + 1,), -jnp.inf, jnp.float32)
+        flush = jnp.float32(-jnp.inf)
+        if tau >= 1:
+            ring_m = jnp.zeros((tau, n, d), jnp.float32)
+            carry = (state, free, ring_a, ring_floor, ring_m, flush)
+        else:
+            carry = (state, free, ring_a, ring_floor, flush)
+
+        parts = []
+        done = 0
+        while done < rounds:
+            length = min(self.chunk, rounds - done)
+            md = np.empty((length, n), np.float32)
+            mu = np.empty((length, n), np.float32)
+            for j in range(length):
+                md[j], mu[j] = round_multipliers(
+                    streams[done + j], self.downlink, self.uplink, n)
+            carry, ys = self._chunk_fn_async(length, metric_fn)(
+                carry, jnp.asarray(md), jnp.asarray(mu))
+            parts.append(jax.device_get(ys))       # ONE transfer per chunk
+            done += length
+        state = carry[0]
+        ys = {k: np.concatenate([p[k] for p in parts]) for k in parts[0]}
+
+        coin = ys["coin"].astype(bool)
+        part = ys["participants"].astype(np.int64)
+        csum = ys["counts_sum"].astype(np.int64)
+        head, bpv = self.schema.header_bytes, self.schema.bytes_per_value
+        dense_total = n * (wire.HEADER_BYTES + 4 * d)
+        bytes_up = np.where(coin, dense_total, head * part + bpv * csum)
+        value_bytes = np.where(coin, n * 4 * d, 4 * csum)
+        recv = downlink_receivers(n, self.substrate.c if self.sampled
+                                  else None)
+        bytes_down = np.full(rounds, X_BYTES_PER_COORD * d * recv,
+                             np.int64)
+        # absolute clocks: broadcast times are the f64 cumsum of the
+        # per-round advances; a round's own uploads land land_rel later.
+        # (At tau=0 bcast_rel[t] == land_rel[t-1] exactly, so sim_wall_
+        # clock reproduces the barrier's cumsum bit for bit.)
+        bcast = np.cumsum(ys["bcast_rel"].astype(np.float64))
+        wall = bcast + ys["land_rel"].astype(np.float64)
+
+        traces = {
+            "metric": ys["metric"].astype(np.float64),
+            "bits_sent": ys["bits"].astype(np.float64),
+            "bytes_up": bytes_up.astype(np.float64),
+            "value_bytes": value_bytes.astype(np.float64),
+            "bytes_down": bytes_down.astype(np.float64),
+            "sim_wall_clock": wall,
+            "bcast_clock": bcast,
+            "sync_round": coin.astype(np.float64),
+            "participants": part.astype(np.float64),
+        }
+        summary = {
+            "rounds": float(rounds),
+            "wall_clock_s": float(wall.max()),
+            "bytes_up": float(bytes_up.sum()),
+            "bytes_down": float(bytes_down.sum()),
+            "sync_rounds": float(coin.sum()),
+            "mean_participants": float(part.mean()),
+            "mean_bytes_up_per_round": float(bytes_up.sum()) / rounds,
+            "tau": float(tau),
         }
         return SimResult(state=state, traces=traces, events=None,
                          summary=summary)

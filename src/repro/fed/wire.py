@@ -1,7 +1,7 @@
 """Layer 1 of the federated transport subsystem: the wire codec.
 
 Every compressed message the plan layer can emit has a byte-exact
-serialization here (DESIGN.md §12).  Four formats, one fixed 16-byte
+serialization here (DESIGN.md §12).  Five formats, one fixed 16-byte
 header (`<BBHIII`: version, fmt, node, round, d, count):
 
 =============  ==============================================  ============
@@ -20,7 +20,18 @@ fmt            body                                            used by
 ``PERMK``      8-byte slice header (`<II`: shift, period)      PermK
                + blk raw float32 values; node i's indices      (shared and
                are ``(i*blk + j - shift) mod period``          independent)
+``PERMK_SLOT`` 12-byte slice header (`<III`: slot, shift,      PermK under
+               period) + blk raw float32 values; indices       C-of-n
+               are ``(slot*blk + j - shift) mod period``       client
 =============  ==============================================  ============
+
+``PERMK_SLOT`` exists because a sampled cohort's permutation partitions d
+over the C cohort SLOTS, not over client ids: slot s of the round's
+cohort owns block s of the (period = C*blk)-cycle, whichever client holds
+it.  The plain ``PERMK`` record reconstructs indices from the uint16 node
+field — correct only when node == slot, i.e. full participation — so the
+cohort record carries its slot explicitly (4 more bytes per message) and
+stays self-describing.
 
 (*) QDither ships its d values as raw fp32 — this codec does not entropy-
 code, so QDither's wire bytes exceed its Definition-1.3 payload; the gap is
@@ -51,14 +62,18 @@ FMT_DENSE = 0
 FMT_SPARSE_IDX = 1
 FMT_SPARSE_SEED = 2
 FMT_PERMK = 3
+FMT_PERMK_SLOT = 4
 
 FMT_NAMES = {FMT_DENSE: "dense", FMT_SPARSE_IDX: "sparse_idx",
-             FMT_SPARSE_SEED: "sparse_seed", FMT_PERMK: "permk"}
+             FMT_SPARSE_SEED: "sparse_seed", FMT_PERMK: "permk",
+             FMT_PERMK_SLOT: "permk_slot"}
 
 _HEADER = struct.Struct("<BBHIII")      # version, fmt, node, round, d, count
 _PERMK_EXT = struct.Struct("<II")       # shift, period (= n * blk)
+_PERMK_SLOT_EXT = struct.Struct("<III")  # slot, shift, period (= C * blk)
 HEADER_BYTES = _HEADER.size             # 16
 PERMK_EXT_BYTES = _PERMK_EXT.size       # 8
+PERMK_SLOT_EXT_BYTES = _PERMK_SLOT_EXT.size  # 12
 
 #: packed (uint32 idx, float32 val) record — the SPARSE_IDX body
 REC_DTYPE = np.dtype([("idx", "<u4"), ("val", "<f4")])
@@ -68,6 +83,8 @@ REC_DTYPE = np.dtype([("idx", "<u4"), ("val", "<f4")])
 HDR_DTYPE = np.dtype([("ver", "u1"), ("fmt", "u1"), ("node", "<u2"),
                       ("round", "<u4"), ("d", "<u4"), ("count", "<u4")])
 EXT_DTYPE = np.dtype([("shift", "<u4"), ("period", "<u4")])
+SLOT_EXT_DTYPE = np.dtype([("slot", "<u4"), ("shift", "<u4"),
+                           ("period", "<u4")])
 
 
 class WireSchema(NamedTuple):
@@ -91,13 +108,20 @@ class WireSchema(NamedTuple):
     static_count: Optional[int]
 
 
-def wire_schema(rc) -> WireSchema:
+def wire_schema(rc, *, slot_keyed: bool = False) -> WireSchema:
     """Classify a :class:`repro.compress.RoundCompressor`'s non-sync wire
-    format (sync/coin rounds are always DENSE: ``HEADER_BYTES + 4 d``)."""
+    format (sync/coin rounds are always DENSE: ``HEADER_BYTES + 4 d``).
+
+    ``slot_keyed`` marks a C-of-n sampled cohort: PermK slices then ship
+    the 12-byte ``PERMK_SLOT`` header (the slot travels explicitly) —
+    every other format is unchanged, a cohort row is just a client row."""
     spec, mode = rc.spec, rc.mode
     d = int(spec.d)
     if spec.name == "permk":
         blk = -(-d // spec.n)
+        if slot_keyed:
+            return WireSchema(FMT_PERMK_SLOT,
+                              HEADER_BYTES + PERMK_SLOT_EXT_BYTES, 4, blk)
         return WireSchema(FMT_PERMK, HEADER_BYTES + PERMK_EXT_BYTES, 4, blk)
     if spec.name == "randk":
         if mode == "shared_coords":
@@ -121,6 +145,7 @@ class WireMessage(NamedTuple):
     indices: Optional[np.ndarray]      # int64, None for DENSE
     shift: int = 0
     period: int = 0
+    slot: int = -1                     # PERMK_SLOT cohort slot (-1 else)
 
     def dense(self) -> np.ndarray:
         out = np.zeros((self.d,), np.float32)
@@ -182,6 +207,19 @@ def encode_permk(node: int, t: int, d: int, shift: int, period: int,
         + val.tobytes()
 
 
+def encode_permk_slot(node: int, t: int, d: int, slot: int, shift: int,
+                      period: int, values) -> bytes:
+    """Sampled-cohort PermK slice: 12-byte (slot, shift, period) header +
+    the slot's block values.  ``slot`` is the node's position in THIS
+    round's cohort — the permutation partitions d over slots, so the
+    receiver reconstructs ``(slot*blk + j - shift) mod period`` without
+    knowing the cohort draw."""
+    val = _f32(values)
+    head = _HEADER.pack(WIRE_VERSION, FMT_PERMK_SLOT, node, t, d, val.size)
+    return head + _PERMK_SLOT_EXT.pack(slot, shift % max(period, 1),
+                                       period) + val.tobytes()
+
+
 def permk_shift(idx_row: np.ndarray, node: int, n: int) -> int:
     """Recover the cyclic shift of :func:`repro.compress.plan.perm_partition`
     from one node row: ``idx[j] = (node*blk + j - shift) mod (n*blk)``.
@@ -232,6 +270,15 @@ def decode(buf: bytes, *, shared_indices=None) -> WireMessage:
         keep = c < d
         return WireMessage(fmt, node, t, d, values[keep], c[keep],
                            shift=shift, period=period)
+    if fmt == FMT_PERMK_SLOT:
+        slot, shift, period = _PERMK_SLOT_EXT.unpack_from(buf, off)
+        off += PERMK_SLOT_EXT_BYTES
+        values = np.frombuffer(buf, "<f4", count, off)
+        j = np.arange(count, dtype=np.int64)
+        c = (slot * count + j - shift) % max(period, 1)
+        keep = c < d
+        return WireMessage(fmt, node, t, d, values[keep], c[keep],
+                           shift=shift, period=period, slot=slot)
     raise ValueError(f"unknown wire fmt {fmt}")
 
 
@@ -262,7 +309,11 @@ def round_bytes(bufs: Sequence[Optional[bytes]]) -> RoundBytes:
         if buf is None:
             continue
         ver, fmt, _, _, _, count = _HEADER.unpack_from(buf, 0)
-        h = HEADER_BYTES + (PERMK_EXT_BYTES if fmt == FMT_PERMK else 0)
+        h = HEADER_BYTES
+        if fmt == FMT_PERMK:
+            h += PERMK_EXT_BYTES
+        elif fmt == FMT_PERMK_SLOT:
+            h += PERMK_SLOT_EXT_BYTES
         v = 4 * count
         tot += len(buf)
         val += v
@@ -319,7 +370,7 @@ def _emit_rows(n: int, nodes: np.ndarray,
 
 def encode_round(rc, plan: Optional[Plan], msgs, t: int, *,
                  coin: bool = False, sync_values=None,
-                 present=None) -> List[Optional[bytes]]:
+                 present=None, slots=None) -> List[Optional[bytes]]:
     """Serialize one round of per-node uploads.
 
     ``rc`` is the :class:`repro.compress.RoundCompressor` (spec + mode pick
@@ -329,7 +380,11 @@ def encode_round(rc, plan: Optional[Plan], msgs, t: int, *,
     (independent sparse RandK) or the round is dense.  On a sync round
     (``coin``) every node ships ``sync_values`` dense — Alg. 2 / MARINA's
     synchronization upload.  ``present`` marks Appendix-D participants;
-    absent nodes return None (zero bytes).
+    absent nodes return None (zero bytes).  ``slots`` is the C-of-n
+    sampled-cohort map — (n,) int, client -> cohort slot, -1 when
+    unsampled: PermK rows then emit the slot-keyed ``PERMK_SLOT`` record
+    (the permutation partitions d over SLOTS, and the period is C*blk, not
+    n*blk); every other format ignores it.
 
     Record packing is vectorized numpy (structured header/record arrays +
     one contiguous byte matrix, sliced per node) — byte-identical to the
@@ -360,23 +415,40 @@ def encode_round(rc, plan: Optional[Plan], msgs, t: int, *,
     if name == "permk" and plan_idx is not None:
         idx = plan_idx[nodes]
         blk = idx.shape[1]
-        period = n * blk
+        if slots is not None:
+            # cohort: the permutation cycles over the C slots (period
+            # C*blk) and a client's base offset is its SLOT, not its id
+            slot_arr = np.asarray(slots, np.int64)
+            period = int((slot_arr >= 0).sum()) * blk
+            base = slot_arr[nodes] * blk
+        else:
+            period = n * blk
+            base = nodes * blk
         valid = idx < period
         j = np.argmax(valid, 1)
         taken = idx[np.arange(nodes.size), j]
-        shifts = np.where(valid.any(1),
-                          (nodes * blk + j - taken) % period, 0)
+        shifts = np.where(valid.any(1), (base + j - taken) % period, 0)
         if not sparse:                   # dense backend: gather the block
             safe = np.minimum(idx.astype(np.int64), d - 1)
             vals = np.where(idx < d, np.take_along_axis(vals, safe, 1),
                             np.float32(0))
-        hdr = _headers_u8(FMT_PERMK, nodes, t, d, blk)
-        ext = np.empty(nodes.size, EXT_DTYPE)
-        ext["shift"] = shifts
-        ext["period"] = period
+        if slots is not None:
+            hdr = _headers_u8(FMT_PERMK_SLOT, nodes, t, d, blk)
+            ext = np.empty(nodes.size, SLOT_EXT_DTYPE)
+            ext["slot"] = slot_arr[nodes].astype(np.uint32)
+            ext["shift"] = shifts
+            ext["period"] = period
+            ext_u8 = ext.view(np.uint8).reshape(nodes.size,
+                                                PERMK_SLOT_EXT_BYTES)
+        else:
+            hdr = _headers_u8(FMT_PERMK, nodes, t, d, blk)
+            ext = np.empty(nodes.size, EXT_DTYPE)
+            ext["shift"] = shifts
+            ext["period"] = period
+            ext_u8 = ext.view(np.uint8).reshape(nodes.size,
+                                                PERMK_EXT_BYTES)
         return _emit_rows(n, nodes, np.hstack([
-            hdr, ext.view(np.uint8).reshape(nodes.size, PERMK_EXT_BYTES),
-            np.ascontiguousarray(vals).view(np.uint8)]))
+            hdr, ext_u8, np.ascontiguousarray(vals).view(np.uint8)]))
 
     if mode == "shared_coords":
         if not sparse:

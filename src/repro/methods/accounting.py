@@ -53,6 +53,27 @@ def sampled_per_node(cohort_coords: float, n: int, c: int) -> float:
     return float(c) / float(n) * cohort_coords
 
 
+def downlink_receivers(n: int, cohort: Optional[int] = None) -> int:
+    """How many clients the server's dense broadcast reaches per round.
+
+    The broadcast is the full fp32 iterate (no downlink compression yet),
+    so the round's downlink cost is ``receivers * d * 4`` bytes:
+
+    * full participation AND Appendix-D partial participation: all ``n``
+      clients — an Appendix-D absentee skips the UPLOAD, but it still
+      refreshes h_i locally every round (the engine computes every row),
+      which requires receiving x^{t+1};
+    * C-of-n client sampling (``SampledFlatSubstrate``): only the
+      ``cohort`` — unsampled rows FREEZE (no local compute, nothing to
+      refresh), so the server need not ship them the iterate.  This is the
+      cohort-only downlink of the bidirectional-compression direction
+      (Gruntkowska et al., 2024): bytes_down drops from n*d*4 to C*d*4.
+
+    Both federated simulators bill ``downlink_receivers(...) * d * 4`` per
+    round (tests/test_fed_sim.py, tests/test_fed_scale.py reconcile)."""
+    return int(n) if cohort is None else int(cohort)
+
+
 def expected_wire_coords(rule, hyper, wire_per_node: float,
                          dense_coords: float) -> float:
     """E[scalars the WIRE moves] per node per round of ``rule``.

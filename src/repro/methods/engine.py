@@ -109,8 +109,10 @@ class Hyper:
 class Method(NamedTuple):
     """``init(x0, key, ...) -> MethodState``; ``step(state, data=None) ->
     MethodState`` (jit-able); ``run(state, num_rounds, ...)`` scans;
-    ``step_full(state, data=None) -> (MethodState, StepInfo)`` is ``step``
-    plus the wire-observable round internals (same traced body)."""
+    ``step_full(state, data=None, *, deficit=None) -> (MethodState,
+    StepInfo)`` is ``step`` plus the wire-observable round internals (same
+    traced body); ``deficit`` feeds the async simulators' in-flight
+    correction into the server update (DESIGN.md §14)."""
 
     init: Callable[..., MethodState]
     step: Callable[..., MethodState]
@@ -162,14 +164,28 @@ class Method(NamedTuple):
                                key=key, t=jnp.zeros((), jnp.int32),
                                bits_sent=jnp.asarray(bits0, jnp.float32))
 
-        def step_full(state: MethodState, data=None
+        def step_full(state: MethodState, data=None, *, deficit=None
                       ) -> Tuple[MethodState, StepInfo]:
             """One round, returning the wire-observable internals too
             (:class:`StepInfo`).  ``step`` is this with the info dropped —
-            same traced body, so observers never fork the math."""
+            same traced body, so observers never fork the math.
+
+            ``deficit`` is the asynchronous-pipelining hook (DESIGN.md
+            §14): the (1/n)-scaled sum of compressed messages the server
+            has BROADCAST-counted in ``state.g`` but not yet received.
+            The server update then uses g - deficit — exactly what a real
+            async server holds, since g is a sum and every landing just
+            adds its term back.  ``deficit=None`` (the default, and the
+            staleness-0 case) leaves the traced body identical to the
+            synchronous engine — the bit-exactness anchor the federated
+            simulators' tau=0 parity tests rely on.  Clients are
+            unaffected: h/g recursions depend only on the broadcast
+            x-sequence and local state."""
             key, k_h, k_c, k_coin = jax.random.split(state.key, 4)
             # line 4 (server) + broadcast
-            x_new, opt_state = sub.server_update(state.x, state.g,
+            g_vis = state.g if deficit is None \
+                else sub.sub_deficit(state.g, deficit)
+            x_new, opt_state = sub.server_update(state.x, g_vis,
                                                  state.opt_state, hp)
             # sampled-client substrates window the round onto a gathered
             # (C, d) cohort slice: the h-update and estimator run at

@@ -80,6 +80,21 @@ class VariantRule:
         return self.sync_update is not None
 
     @property
+    def pipeline_coin_flush(self) -> bool:
+        """Asynchronous pipelining metadata (DESIGN.md §14): whether a
+        sync-coin round forces a FULL FLUSH of the pipeline.  True exactly
+        for ``sync_requires_all`` rules — their coin round overwrites the
+        server estimator with the all-client dense mean (``g <-
+        mean(h_sync)``), so (a) every pre-coin in-flight compressed message
+        is discarded by the reset (the async server drops late landings
+        tagged with a round <= the sync round), and (b) the NEXT broadcast
+        cannot leave before all n dense sync uploads have landed.  This is
+        the mechanism that caps MARINA / SYNC-MVR's pipelining gain, while
+        DASHA / PAGE / MVR (no sync coin) never flush — the paper's
+        no-client-synchronization claim in wall-clock form."""
+        return self.sync_requires_all
+
+    @property
     def supports_client_sampling(self) -> bool:
         """Whether the rule can run on a sampled-client substrate (DESIGN.md
         §13): any rule whose rounds need only the participating cohort.  A

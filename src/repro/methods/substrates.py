@@ -133,6 +133,12 @@ class FlatSubstrate:
     def add_server(self, g, agg):
         return g + agg
 
+    def sub_deficit(self, g, deficit):
+        """g minus the in-flight message sum (async pipelining, DESIGN.md
+        §14): what the server has actually RECEIVED.  Exact because g is a
+        sum — subtracting the unlanded terms commutes with every landing."""
+        return g - deficit
+
     def zeros_per_node(self, x0):
         return jnp.zeros((self.n, self.d), x0.dtype)
 
@@ -684,6 +690,11 @@ class TreeSubstrate:
 
     def add_server(self, g, agg):
         return jax.tree_util.tree_map(jnp.add, g, agg)
+
+    def sub_deficit(self, g, deficit):
+        """Leaf-wise g - deficit (async in-flight correction, DESIGN.md
+        §14)."""
+        return jax.tree_util.tree_map(jnp.subtract, g, deficit)
 
     def zeros_per_node(self, x0):
         return jax.tree_util.tree_map(

@@ -1,0 +1,230 @@
+"""Asynchronous pipelined rounds (DESIGN.md §14): the staleness-bounded
+no-barrier server against its two proofs.
+
+Contracts pinned here:
+
+* tau = 0 IS the barrier: both simulators reproduce their own barrier
+  runs BIT-exactly (traces and final state) across all five variants —
+  the gate degenerates to round t-1's completion, the deficit is provably
+  empty, and the clock arithmetic repeats the barrier's f64 add chains
+  term for term;
+* the two async implementations agree: the event-driven heap oracle and
+  the compiled in-scan ring buffer produce bit-equal integer traces
+  (bytes, coins, participants) and float-tolerance-equal clocks, metrics
+  and states at tau >= 1;
+* g is a SUM, so landings commute — applying one round's messages in any
+  order gives the same g^{t+1}, which is why the server may apply a slow
+  client's upload whenever it lands;
+* the deficit hook: ``step_full(deficit=0) == step_full()`` and a nonzero
+  deficit shifts the server step by exactly ``gamma * deficit``;
+* under stragglers, pipelining pays: async DASHA's wall clock is strictly
+  below the barrier's, the async schedule genuinely overlaps rounds
+  (broadcast t+1 before round t fully lands), severity stays monotone
+  under common random numbers — while MARINA's sync coins keep flushing
+  the pipeline (no broadcast may cross a coin round's completion).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks.common import glm_problem, lipschitz_glm, theory_hyper
+from repro.compress import make_round_compressor
+from repro.fed.net import LinkModel, Lognormal
+from repro.fed.sim import FedSim
+from repro.fed.vecsim import VecFedSim
+from repro.methods import FlatSubstrate, Hyper, Method
+
+D, K, N = 40, 6, 5
+
+VARIANTS = ["dasha", "page", "mvr", "sync_mvr", "marina"]
+
+
+def _setup(variant, *, p=None):
+    prob = glm_problem(d=D, m=32)
+    sub = FlatSubstrate(prob, N, D)
+    rc = make_round_compressor("randk", D, N, k=K, backend="sparse")
+    hp = theory_hyper(variant, rc.omega, lipschitz_glm(prob), d=D, k=K,
+                      n=N, m=32)
+    if p is not None:
+        hp = dataclasses.replace(hp, p=p)
+    return sub, rc, hp
+
+
+def _links(sigma):
+    up = LinkModel(latency_s=0.01, bandwidth_Bps=1e5,
+                   straggler=Lognormal(sigma))
+    down = LinkModel(latency_s=0.005, bandwidth_Bps=1e7)
+    return dict(uplink=up, downlink=down)
+
+
+def _run(cls, variant, tau, rounds=30, sigma=1.5, seed=3, p=None, **kw):
+    sub, rc, hp = _setup(variant, p=p)
+    sim = cls(variant, rc, sub, hp, seed=seed, tau=tau,
+              **_links(sigma), **kw)
+    st = sim.init(jnp.zeros(D), jax.random.PRNGKey(1))
+    return sim.run(st, rounds)
+
+
+# ---------------------------------------------------------------------------
+# tau = 0 is the barrier, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("variant", VARIANTS)
+@pytest.mark.parametrize("cls", [FedSim, VecFedSim],
+                         ids=["heap", "vec"])
+def test_tau0_is_barrier_bit_exact(cls, variant):
+    """tau=0 reproduces the barrier simulator's every trace and the final
+    state BIT-exactly: same compiled engine pass, same f64 clock chains
+    — the parity anchor that makes the async path trustworthy."""
+    p = 0.3 if variant in ("sync_mvr", "marina") else None
+    rb = _run(cls, variant, None, p=p)
+    r0 = _run(cls, variant, 0, p=p)
+    assert set(rb.traces) == set(r0.traces)
+    for k in rb.traces:
+        np.testing.assert_array_equal(rb.traces[k], r0.traces[k],
+                                      err_msg=k)
+    for a, b in zip(jax.tree_util.tree_leaves(rb.state),
+                    jax.tree_util.tree_leaves(r0.state)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert r0.summary["tau"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# the two async implementations prove each other
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_async_vec_matches_async_heap(variant):
+    """tau >= 1: the event-driven oracle and the in-scan ring buffer are
+    the same simulator — integer traces bit-equal, clocks/metrics/states
+    equal to f32-carry resolution."""
+    p = 0.3 if variant in ("sync_mvr", "marina") else None
+    rh = _run(FedSim, variant, 2, p=p)
+    rv = _run(VecFedSim, variant, 2, p=p)
+    for k in ("bytes_up", "value_bytes", "bytes_down", "sync_round",
+              "participants"):
+        np.testing.assert_array_equal(rh.traces[k], rv.traces[k],
+                                      err_msg=k)
+    for k in ("sim_wall_clock", "bcast_clock"):
+        np.testing.assert_allclose(rv.traces[k], rh.traces[k],
+                                   rtol=2e-5, atol=1e-8, err_msg=k)
+    np.testing.assert_allclose(rv.traces["metric"], rh.traces["metric"],
+                               rtol=1e-4, atol=1e-9)
+    np.testing.assert_allclose(np.asarray(rv.state.x),
+                               np.asarray(rh.state.x),
+                               rtol=1e-4, atol=1e-7)
+    np.testing.assert_allclose(rv.summary["wall_clock_s"],
+                               rh.summary["wall_clock_s"], rtol=2e-5)
+
+
+@pytest.mark.parametrize("tau", [1, 3])
+def test_async_tau_sweep_agrees(tau):
+    rh = _run(FedSim, "dasha", tau)
+    rv = _run(VecFedSim, "dasha", tau)
+    np.testing.assert_allclose(rv.traces["sim_wall_clock"],
+                               rh.traces["sim_wall_clock"], rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(rv.state.x),
+                               np.asarray(rh.state.x),
+                               rtol=1e-4, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# the math the pipeline leans on
+# ---------------------------------------------------------------------------
+
+def test_g_accumulation_commutes_with_landing_order():
+    """g^{t+1} = g^t + (1/n) sum_i m_i: a SUM of per-client messages, so
+    the server may apply arrivals in ANY landing order — shuffled
+    sequential application reproduces the engine's own g bit-tolerant,
+    which is the license for cross-round in-flight application."""
+    sub, rc, hp = _setup("dasha")
+    m = Method.build("dasha", rc, sub, hp)
+    st = m.init(jnp.zeros(D), jax.random.PRNGKey(7))
+    for _ in range(3):
+        st, info = jax.jit(lambda s: m.step_full(s, None))(st)
+    new, info = jax.jit(lambda s: m.step_full(s, None))(st)
+    rows = np.asarray(info.messages.dense(), np.float64)
+    g0 = np.asarray(st.g, np.float64)
+    rng = np.random.default_rng(0)
+    for perm in (np.arange(N), rng.permutation(N), rng.permutation(N)):
+        g = g0.copy()
+        for i in perm:                      # one landing at a time
+            g += rows[i] / N
+        np.testing.assert_allclose(g, np.asarray(new.g),
+                                   rtol=1e-5, atol=1e-7)
+
+
+def test_deficit_hook_shifts_server_step():
+    """step_full(deficit=0) is step_full(); deficit v makes the server
+    descend along g - v exactly (x shifts by + gamma * v)."""
+    sub, rc, hp = _setup("dasha")
+    m = Method.build("dasha", rc, sub, hp)
+    st = m.init(jnp.zeros(D), jax.random.PRNGKey(2))
+    st = jax.jit(m.step)(st)
+    base, _ = m.step_full(st, None)
+    zero, _ = m.step_full(st, None, deficit=jnp.zeros(D))
+    assert np.array_equal(np.asarray(base.x), np.asarray(zero.x))
+    v = jnp.asarray(np.linspace(-1, 1, D), jnp.float32)
+    shifted, _ = m.step_full(st, None, deficit=v)
+    np.testing.assert_allclose(
+        np.asarray(shifted.x) - np.asarray(base.x),
+        hp.gamma * np.asarray(v), rtol=1e-5, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# pipelining pays (and coin rounds still barrier)
+# ---------------------------------------------------------------------------
+
+def test_async_beats_barrier_under_stragglers():
+    """High severity: async DASHA's wall-clock is strictly below the same
+    seed's barrier run — the whole point of retiring the round barrier."""
+    rb = _run(FedSim, "dasha", None, sigma=2.0, rounds=40)
+    ra = _run(FedSim, "dasha", 2, sigma=2.0, rounds=40)
+    assert ra.summary["wall_clock_s"] < rb.summary["wall_clock_s"]
+
+
+def test_async_schedule_genuinely_overlaps():
+    """DASHA tau>=1 broadcasts round t+1 BEFORE round t fully lands on
+    some round (the pipeline is real), while MARINA never lets a
+    broadcast cross a coin round's completion (the flush is real)."""
+    ra = _run(FedSim, "dasha", 2, sigma=2.0, rounds=40)
+    bc, land = ra.traces["bcast_clock"], ra.traces["sim_wall_clock"]
+    assert (bc[1:] < land[:-1] - 1e-12).any()
+
+    rm = _run(FedSim, "marina", 2, sigma=2.0, rounds=40, p=0.3)
+    bc, land = rm.traces["bcast_clock"], rm.traces["sim_wall_clock"]
+    coins = rm.traces["sync_round"].astype(bool)
+    assert coins.any()
+    for t in np.nonzero(coins[:-1])[0]:
+        assert bc[t + 1] >= land[t] - 1e-9
+
+
+def test_severity_monotone_under_crn():
+    """Common random numbers across severities: raising sigma degrades
+    the async wall clock pointwise-in-seed, and async never loses to the
+    barrier at any severity (same seed, same draws)."""
+    walls = []
+    for sigma in (0.5, 1.0, 1.5, 2.0):
+        ra = _run(FedSim, "dasha", 2, sigma=sigma, rounds=30)
+        rb = _run(FedSim, "dasha", None, sigma=sigma, rounds=30)
+        assert ra.summary["wall_clock_s"] \
+            <= rb.summary["wall_clock_s"] + 1e-12
+        walls.append(ra.summary["wall_clock_s"])
+    assert all(a < b for a, b in zip(walls, walls[1:]))
+
+
+def test_async_event_log_interleaves_rounds():
+    """The heap oracle's event log shows true pipelining: some round-t
+    apply event lands after round t+1's broadcast."""
+    sub, rc, hp = _setup("dasha")
+    sim = FedSim("dasha", rc, sub, hp, seed=3, tau=2, **_links(2.0))
+    st = sim.init(jnp.zeros(D), jax.random.PRNGKey(1))
+    res = sim.run(st, 30, log_events=True)
+    bcast_at = {e.round: e.time for e in res.events if e.kind == "bcast"}
+    late = [e for e in res.events if e.kind == "apply"
+            and e.round + 1 in bcast_at
+            and e.time > bcast_at[e.round + 1] + 1e-12]
+    assert late, "no apply event ever crossed the next broadcast"

@@ -344,20 +344,23 @@ def test_vec_matches_heap_sampled(spec_kw):
         assert (rh.traces["bytes_up"] == c * (HEADER_BYTES + 8 * K)).all()
 
 
-def test_heap_rejects_sampled_permk():
+def test_vec_matches_heap_sampled_permk():
+    """Sampled PermK through both engines: the heap oracle byte-encodes
+    the cohort's slot-keyed PERMK_SLOT records (slice headers carry the
+    cohort SLOT, and the permutation period is c*blk, not n*blk) and the
+    vectorized engine bills the same schema analytically — byte for
+    byte."""
     n, c = 16, 5
     prob = _problem(n, m=8)
     sub = SampledFlatSubstrate(prob, n, D, c=c)
     rc = make_round_compressor("permk", D, n, mode="permk",
                                backend="sparse")
     hp = Hyper(gamma=0.05, a=0.3, variant="dasha")
-    with pytest.raises(NotImplementedError, match="PERMK"):
-        FedSim("dasha", rc, sub, hp)
-    # the vectorized engine bills PERMK cohorts analytically instead
-    v = VecFedSim("dasha", rc, sub, hp, seed=0)
-    sv = v.init(jnp.zeros(D), jax.random.PRNGKey(1))
-    res = v.run(sv, 6)
+    rh, rv = _run_pair("dasha", rc, sub, hp, 1.0, 12)
+    _assert_equivalent(rh, rv)
     blk = -(-D // c)
-    from repro.fed.wire import HEADER_BYTES, PERMK_EXT_BYTES
-    assert (res.traces["bytes_up"]
-            == c * (HEADER_BYTES + PERMK_EXT_BYTES + 4 * blk)).all()
+    from repro.fed.wire import HEADER_BYTES, PERMK_SLOT_EXT_BYTES
+    assert (rh.traces["bytes_up"]
+            == c * (HEADER_BYTES + PERMK_SLOT_EXT_BYTES + 4 * blk)).all()
+    # cohort-only downlink: only the c sampled clients receive x^{t+1}
+    assert (rh.traces["bytes_down"] == c * 4 * D).all()

@@ -88,10 +88,12 @@ def test_sync_round_bytes_and_barrier():
 
 
 def test_absent_clients_send_zero_bytes():
-    """Appendix D: a round's absent clients contribute zero bytes up AND
-    down, and the senders in the event log are exactly the plan's
-    participation coins (the engine's own randomness — bytes and math
-    agree about who was absent)."""
+    """Appendix D: a round's absent clients contribute zero bytes UP, the
+    senders in the event log are exactly the plan's participation coins
+    (the engine's own randomness — bytes and math agree about who was
+    absent), but the dense broadcast still reaches all n clients: an
+    absentee skips the upload yet refreshes h_i locally every round, which
+    requires x^{t+1} (accounting.downlink_receivers)."""
     prob, sub, rc = _setup(p_participate=0.5)
     hp = _hyper("dasha", rc, lipschitz_glm(prob))
     sim = FedSim("dasha", rc, sub, hp, seed=4)
@@ -119,7 +121,7 @@ def test_absent_clients_send_zero_bytes():
         assert senders == set(np.nonzero(present)[0].tolist())
         assert res.traces["participants"][t] == present.sum()
         assert res.traces["bytes_up"][t] == msg_bytes * present.sum()
-        assert res.traces["bytes_down"][t] == 4 * D * present.sum()
+        assert res.traces["bytes_down"][t] == 4 * D * N
     # some rounds actually had absentees, or the test proves nothing
     assert (res.traces["participants"] < N).any()
 

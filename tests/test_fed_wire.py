@@ -136,6 +136,77 @@ def test_permk_slice_header_reconstructs_partition():
     assert len(allidx) == d_odd and len(np.unique(allidx)) == d_odd
 
 
+def test_permk_slot_header_reconstructs_cohort_partition():
+    """The slot-keyed PERMK_SLOT record (C-of-n sampled cohorts): the
+    (slot, shift, period) header regenerates the cohort block — the
+    permutation partitions d over SLOTS with period c*blk, so the client
+    id in the header plays no role in the support."""
+    n, d, c = 4, 12, 2
+    blk = d // c
+    period = c * blk
+    shift = 5
+    sel = np.array([1, 3])                   # this round's cohort
+    slots = np.full(n, -1, np.int64)
+    slots[sel] = np.arange(c)
+    vals = np.arange(c * blk, dtype=np.float32).reshape(c, blk) + 0.25
+    for s, i in enumerate(sel):
+        buf = wire.encode_permk_slot(int(i), 2, d, s, shift, period,
+                                     vals[s])
+        assert len(buf) == wire.HEADER_BYTES \
+            + wire.PERMK_SLOT_EXT_BYTES + 4 * blk
+        m = wire.decode(buf)
+        assert m.fmt == wire.FMT_PERMK_SLOT
+        assert m.node == int(i) and m.slot == s and m.d == d
+        exp = (s * blk + np.arange(blk) - shift) % period
+        assert np.array_equal(m.indices, exp)
+        assert m.values.tobytes() == vals[s].tobytes()
+    # the two slots partition [0, period): disjoint and complete
+    all_idx = np.concatenate([
+        wire.decode(wire.encode_permk_slot(int(i), 2, d, s, shift,
+                                           period, vals[s])).indices
+        for s, i in enumerate(sel)])
+    assert len(np.unique(all_idx)) == period
+
+
+def test_vectorized_permk_slot_matches_scalar_encoder():
+    """encode_round(slots=...) emits exactly the scalar encode_permk_slot
+    records for the cohort and None for unsampled clients."""
+    from repro.compress.plan import Plan
+    n, d, c = 4, 12, 2
+    blk = d // c
+    period = c * blk
+    shift = 5
+    sel = np.array([1, 3])
+    slots = np.full(n, -1, np.int64)
+    slots[sel] = np.arange(c)
+    # per-CLIENT plan rows, cohort support scattered through sel (what
+    # FedSim._expand_plan produces); inactive rows never encode
+    idx = np.zeros((n, blk), np.int32)
+    vals = np.zeros((n, blk), np.float32)
+    for s, i in enumerate(sel):
+        idx[i] = (s * blk + np.arange(blk) - shift) % period
+        vals[i] = np.arange(blk) + 10.0 * s
+
+    class Msgs:
+        def __init__(self, values, indices):
+            self.values = values
+            self.indices = indices
+
+    rc = make_round_compressor("permk", d, n, mode="permk",
+                               backend="sparse")
+    active = slots >= 0
+    plan = Plan(kind="sparsify", scale=float(n), indices=idx)
+    got = wire.encode_round(rc, plan, Msgs(vals, idx), 6,
+                            present=active, slots=slots)
+    for i in range(n):
+        if not active[i]:
+            assert got[i] is None
+        else:
+            s = int(slots[i])
+            assert got[i] == wire.encode_permk_slot(
+                i, 6, d, s, shift, period, vals[i])
+
+
 def test_topk_content_defined_support():
     """TopK has no seed to rederive its support from: it ships packed
     (uint32 idx, float32 val) records and round-trips bit-identically."""
@@ -279,6 +350,12 @@ def test_golden_round_bytes():
     permk_idx = ((np.arange(n * blk).reshape(n, blk) + 5) % d) \
         .astype(np.int32)
     permk_plan = Plan(kind="sparsify", scale=float(n), indices=permk_idx)
+    # slot-keyed cohort round: 2 of 4 clients sampled, period = 2 * cblk
+    cblk = d // 2
+    slot_map = np.array([-1, 0, -1, 1], np.int64)
+    slot_idx = np.zeros((n, cblk), np.int32)
+    for s, i in enumerate((1, 3)):
+        slot_idx[i] = (s * cblk + np.arange(cblk) - 2) % (2 * cblk)
     got = {
         "sparse_idx": digest(wire.encode_round(
             rc_sparse, None, Msgs(vals, idx), 3)),
@@ -295,6 +372,11 @@ def test_golden_round_bytes():
             Msgs(dense_vals), 6)),
         "permk": digest(wire.encode_round(
             rc_permk, permk_plan, Msgs(vals[:, :blk], permk_idx), 7)),
+        "permk_slot": digest(wire.encode_round(
+            rc_permk, Plan(kind="sparsify", scale=float(n),
+                           indices=slot_idx),
+            Msgs(vals[:, :cblk], slot_idx), 7,
+            present=np.array([0, 1, 0, 1], bool), slots=slot_map)),
         "coin": digest(wire.encode_round(
             rc_sparse, None, Msgs(vals, idx), 8, coin=True,
             sync_values=dense_vals)),
@@ -306,6 +388,7 @@ def test_golden_round_bytes():
         "dense": "7727e21c73665e2c",
         "bernoulli": "ad82688a8ef65e87",
         "permk": "69fd8500bb742e6a",
+        "permk_slot": "455aadd55d9ae46b",
         "coin": "9994ec026541d158",
     }
     assert got == expected, got
