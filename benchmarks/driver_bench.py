@@ -32,12 +32,13 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit
+from repro.analysis import recompile
 from repro.compress import make_round_compressor
 from repro.configs import get_smoke_config
 from repro.core.oracles import StochasticProblem
 from repro.data.pipeline import SyntheticTextConfig, make_node_batches
 from repro.methods import FlatSubstrate, Hyper, Method
-from repro.methods.driver import Driver, sweep
+from repro.methods.driver import Driver, Sweeper
 from repro.models import init_params, lm
 from repro.optim.distributed import (DashaTrainConfig, dasha_train_init,
                                      make_method, make_train_step)
@@ -122,24 +123,27 @@ def _bench_smoke_lm_tune() -> Dict:
     def data_fn(k, t):
         return make_node_batches(k, tcfg, N_NODES, BATCH)
 
+    sweeper = Sweeper(method_fn, data_fn=data_fn, chunk=LOG_EVERY)
+
     def new_tune():
-        fin, _ = sweep(method_fn, jnp.array(gammas), ms0, STEPS_TUNE,
-                       data_fn=data_fn, data_key=jax.random.PRNGKey(2),
-                       chunk=LOG_EVERY)
+        fin, _ = sweeper.run(jnp.array(gammas), ms0, STEPS_TUNE,
+                             data_key=jax.random.PRNGKey(2))
         jax.block_until_ready(fin.x)
 
     t0 = time.perf_counter()
     new_tune()                                        # incl. its ONE compile
     drv_first = total / (time.perf_counter() - t0)
-    t0 = time.perf_counter()
-    new_tune()
-    drv_sps = total / (time.perf_counter() - t0)
+    with recompile.watch("lm_tune_steady") as region:
+        t0 = time.perf_counter()
+        new_tune()
+        drv_sps = total / (time.perf_counter() - t0)
     return {"case": "smoke_lm_tune", "gammas": len(gammas),
             "steps": STEPS_TUNE,
             "python_loop_steps_per_s": round(py_sps, 3),
             "driver_steps_per_s": round(drv_sps, 3),
             "driver_steps_per_s_incl_compile": round(drv_first, 3),
-            "speedup": round(drv_sps / py_sps, 2)}
+            "speedup": round(drv_sps / py_sps, 2),
+            "steady_state_compiles": region.count}
 
 
 def _bench_smoke_lm_single() -> Dict:
@@ -184,16 +188,18 @@ def _bench_smoke_lm_single() -> Dict:
                  metric_every=LOG_EVERY, chunk=LOG_EVERY)
     fin, _ = drv.run(ms0, STEPS_LM, data_key=jax.random.PRNGKey(9))
     jax.block_until_ready(fin.x)                       # warm up chunk jits
-    drv_sps = _best_sps(
-        lambda: jax.block_until_ready(
-            drv.run(ms0, STEPS_LM, data_key=jax.random.PRNGKey(2))[0].x),
-        STEPS_LM)
+    with recompile.watch("lm_single_steady") as region:
+        drv_sps = _best_sps(
+            lambda: jax.block_until_ready(
+                drv.run(ms0, STEPS_LM, data_key=jax.random.PRNGKey(2))[0].x),
+            STEPS_LM)
     return {"case": "smoke_lm_single", "steps": STEPS_LM,
             "d": sum(int(x.size)
                      for x in jax.tree_util.tree_leaves(params)),
             "python_loop_steps_per_s": round(py_sps, 3),
             "driver_steps_per_s": round(drv_sps, 3),
-            "speedup": round(drv_sps / py_sps, 2)}
+            "speedup": round(drv_sps / py_sps, 2),
+            "steady_state_compiles": region.count}
 
 
 def _flat_problem(d: int) -> StochasticProblem:
@@ -238,19 +244,23 @@ def _bench_flat(d: int) -> Dict:
     drv = Driver(m, metrics={"metric": lambda s, d_: metric(s)}, chunk=10)
     fin, _ = drv.run(st0, STEPS_FLAT)
     jax.block_until_ready(fin.x)                       # warm up chunk jits
-    drv_sps = _best_sps(
-        lambda: jax.block_until_ready(drv.run(st0, STEPS_FLAT)[0].x),
-        STEPS_FLAT)
+    with recompile.watch("flat_steady") as region:
+        drv_sps = _best_sps(
+            lambda: jax.block_until_ready(drv.run(st0, STEPS_FLAT)[0].x),
+            STEPS_FLAT)
     return {"case": f"flat_d{d:.0e}", "steps": STEPS_FLAT, "d": d,
             "python_loop_steps_per_s": round(py_sps, 3),
             "driver_steps_per_s": round(drv_sps, 3),
-            "speedup": round(drv_sps / py_sps, 2)}
+            "speedup": round(drv_sps / py_sps, 2),
+            "steady_state_compiles": region.count}
 
 
 def run() -> List[Dict]:
     cases = [_bench_smoke_lm_tune(), _bench_smoke_lm_single(),
              _bench_flat(D_FLAT)]
+    recompile_free = all(c["steady_state_compiles"] == 0 for c in cases)
     payload = {"bench": "driver", "quick": QUICK,
+               "steady_state_recompile_free": recompile_free,
                "backend": jax.default_backend(),
                "note": ("smoke_lm_tune: the paper's stepsize tune — "
                         "sequential per-gamma Python loops (each gamma "
@@ -262,6 +272,12 @@ def run() -> List[Dict]:
                "cases": cases}
     with open("BENCH_driver.json", "w") as f:
         json.dump(payload, f, indent=2)
+    if QUICK:
+        # CI smoke gate: a warmed driver loop must never recompile —
+        # a nonzero count is the identity-keyed-closure bug class the
+        # recompile sentinels (DESIGN.md §15) exist to catch
+        assert recompile_free, \
+            f"warmed driver runs triggered backend compiles: {cases}"
     return [dict(bench="driver_bench",
                  **{k: v for k, v in c.items()}) for c in cases]
 

@@ -48,6 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import recompile
 from repro.compress import make_round_compressor
 from repro.core.oracles import FiniteSumProblem
 from repro.data.pipeline import synthetic_classification
@@ -168,6 +169,12 @@ def sampled_campaigns() -> List[Dict]:
         res = vec.run(st, rounds, metric_fn=metric)
         wall = time.perf_counter() - t0
 
+        # steady state must be recompile-free: a second identical campaign
+        # hits the per-chunk compile cache, so the backend-compile event
+        # counter (repro.analysis.recompile) must stay at zero
+        with recompile.watch(f"sampled_n{n}") as region:
+            vec.run(st, rounds, metric_fn=metric)
+
         # structural scaling-in-C evidence for the compiled sampled step
         m = vec.method
         compiled = jax.jit(m.step).lower(st).compile()
@@ -186,6 +193,7 @@ def sampled_campaigns() -> List[Dict]:
             else int(mem.temp_size_in_bytes),
             "state_bytes_n_d": 2 * n * D * 4,
             "step_flops": None if not ca else ca.get("flops"),
+            "steady_state_compiles": region.count,
         })
         print(f"[fed_scale] sampled n={n} c={c}: {rounds} rounds in "
               f"{wall:.1f}s ({rounds / wall:.0f} r/s), XLA temps "
@@ -322,6 +330,7 @@ def report_dict() -> Dict:
         r["xla_temp_bytes"] is None
         or r["xla_temp_bytes"] < r["state_bytes_n_d"] / 4
         for r in sampled)
+    recompile_free = all(r["steady_state_compiles"] == 0 for r in sampled)
     report = {
         "config": {"d": D, "k": K, "quick": QUICK,
                    "backend": jax.default_backend()},
@@ -339,6 +348,7 @@ def report_dict() -> Dict:
         "transport_speedup_ge_10x_at_n_ge_1024": transport_ok,
         "sampled_campaigns": sampled,
         "sampled_temp_memory_scales_in_c": bool(sampled_ok),
+        "sampled_steady_state_recompile_free": bool(recompile_free),
         "no_sync": adv,
         "payload": payload,
     }
@@ -353,6 +363,8 @@ def report_dict() -> Dict:
         assert adv["no_sync_advantage_ok"], "no-sync advantage regressed"
         assert payload["payload_reconciles"], "payload reconciliation broke"
         assert sampled_ok, "sampled-path temp memory grew to O(n*d)"
+        assert recompile_free, \
+            "warmed sampled campaign triggered backend compiles"
     return report
 
 

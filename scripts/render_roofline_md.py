@@ -1,6 +1,5 @@
 """Render the EXPERIMENTS.md §Roofline tables from the dry-run JSONs."""
 import json
-import sys
 
 
 def render(path, title):

@@ -1,0 +1,56 @@
+#!/usr/bin/env python
+"""Run the repro.analysis static lint over source trees.
+
+Usage::
+
+    PYTHONPATH=src python scripts/repro_lint.py src            # gate mode
+    PYTHONPATH=src python scripts/repro_lint.py --no-allowlist src   # raw
+
+Exits nonzero when any finding survives the allowlist, or when an
+allowlist entry is stale (matches nothing) — the gate must track
+reality in both directions.  See DESIGN.md §15.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.analysis import apply_allowlist, load_allowlist, lint_paths  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("roots", nargs="+", help="files or directories to lint")
+    ap.add_argument("--repo-root", default=".",
+                    help="paths in findings are relative to this")
+    ap.add_argument("--allowlist", default=None,
+                    help="alternate allowlist.toml (default: the package's)")
+    ap.add_argument("--no-allowlist", action="store_true",
+                    help="report raw findings without filtering")
+    args = ap.parse_args(argv)
+
+    raw = lint_paths(args.roots, repo_root=args.repo_root)
+    if args.no_allowlist:
+        kept, stale, entries = raw, [], []
+    else:
+        entries = load_allowlist(args.allowlist) if args.allowlist \
+            else load_allowlist()
+        kept, stale = apply_allowlist(raw, entries)
+
+    for f in kept:
+        print(f.render())
+    for e in stale:
+        print(f"stale allowlist entry: {e.rule} {e.path} "
+              f"[{e.symbol or '<module>'}] — matches nothing; remove it")
+    n_allowed = len(raw) - len(kept)
+    status = "FAIL" if (kept or stale) else "OK"
+    print(f"repro-lint: {status} — {len(kept)} finding(s), "
+          f"{n_allowed} allowlisted, {len(stale)} stale entr(y/ies)")
+    return 1 if (kept or stale) else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

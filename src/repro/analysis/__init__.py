@@ -1,0 +1,24 @@
+"""repro.analysis — machine-checked compile-path contracts (DESIGN.md §15).
+
+Three layers:
+
+* :mod:`~repro.analysis.jaxpr_audit` — jaxpr/HLO walker: large-temporary
+  counts, donation effectiveness, scan-carry byte accounting.
+* :mod:`~repro.analysis.rng_lint` — AST lint of the RNG discipline and
+  the PR 5 bug classes (host syncs / fresh lambdas in scanned paths,
+  tracer ``if``), with the fold_in tag registry in
+  :mod:`~repro.analysis.tags` as the single source of truth.
+* :mod:`~repro.analysis.recompile` — runtime lowering-count sentinels
+  benchmarks and equivalence suites assert on.
+
+Run the static layers via ``scripts/repro_lint.py``; intentional
+exceptions live in ``src/repro/analysis/allowlist.toml``.
+
+``tags`` and the AST layer import no jax so the CLI stays fast; import
+the jaxpr/recompile layers via their submodules.
+"""
+from . import tags                                             # noqa: F401
+from .findings import (                                        # noqa: F401
+    AllowEntry, Finding, apply_allowlist, load_allowlist, DEFAULT_ALLOWLIST,
+)
+from .rng_lint import lint_paths, lint_source                  # noqa: F401

@@ -1,0 +1,114 @@
+"""Runtime recompilation sentinels — Layer 3 of ``repro.analysis``.
+
+Two complementary counters, both cheap enough to leave on in benchmarks
+and the equivalence suites:
+
+* :func:`wrap` — wraps the *python* callable before it is handed to
+  ``jax.jit``.  jit only invokes the underlying python function while
+  tracing, so the wrapper's call count IS the lowering count for that
+  function: a steady-state count above the expected number of distinct
+  (shape, static-arg) signatures means the compile cache is missing —
+  the per-run default-metric lambda PR 5's review caught by eye is
+  exactly this signature.
+* :func:`watch` — a region counter over ``jax.monitoring``'s
+  ``backend_compile`` events, catching *any* compilation in the region
+  regardless of which internal cache issued it.  The steady-state
+  invariant the benchmarks assert is simply ``count == 0``: re-running a
+  warmed campaign must compile nothing.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import functools
+from typing import Any, Callable, Iterator, List
+
+from jax import monitoring as _monitoring
+
+#: every backend compile fires this duration event exactly once
+_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+
+_EVENTS: List[str] = []      # append-only log of compile events
+_INSTALLED = False
+
+
+def _listener(event: str, duration: float = 0.0, **kwargs: Any) -> None:
+    if event == _COMPILE_EVENT:
+        _EVENTS.append(event)
+
+
+def _install() -> None:
+    global _INSTALLED
+    if not _INSTALLED:
+        _monitoring.register_event_duration_secs_listener(_listener)
+        _INSTALLED = True
+
+
+@dataclasses.dataclass
+class CompileRegion:
+    """Mutable record yielded by :func:`watch`; ``count`` is final once
+    the with-block exits."""
+
+    label: str
+    count: int = 0
+    _start: int = 0
+
+    def snapshot(self) -> int:
+        """Compiles so far inside the region (usable mid-block)."""
+        return len(_EVENTS) - self._start
+
+
+@contextlib.contextmanager
+def watch(label: str = "region") -> Iterator[CompileRegion]:
+    """Count backend compiles inside the block::
+
+        with recompile.watch("steady state") as region:
+            sim.run(...)          # second, warmed run
+        assert region.count == 0, region
+    """
+    _install()
+    region = CompileRegion(label, _start=len(_EVENTS))
+    try:
+        yield region
+    finally:
+        region.count = region.snapshot()
+
+
+def assert_no_compiles(region: CompileRegion) -> None:
+    if region.count != 0:
+        raise AssertionError(
+            f"recompile sentinel: region {region.label!r} triggered "
+            f"{region.count} backend compile(s); expected a warm cache")
+
+
+class LoweringSentinel:
+    """Counts how many times JAX traces the wrapped python callable.
+
+    Wrap *before* jit: ``step = jax.jit(recompile.wrap(step_fn))``.  The
+    count rises once per distinct jit signature and must then stay flat;
+    use :meth:`assert_lowerings` after the steady-state phase.
+    """
+
+    def __init__(self, fn: Callable, name: str = ""):
+        functools.update_wrapper(self, fn)
+        self._fn = fn
+        self.name = name or getattr(fn, "__name__", "<fn>")
+        self.lowerings = 0
+
+    def __call__(self, *args: Any, **kwargs: Any) -> Any:
+        self.lowerings += 1
+        return self._fn(*args, **kwargs)
+
+    def assert_lowerings(self, expected: int) -> None:
+        if self.lowerings != expected:
+            raise AssertionError(
+                f"recompile sentinel {self.name!r}: {self.lowerings} "
+                f"lowerings, expected {expected} — a compile cache is "
+                "missing (identity-keyed closure? changing static arg?)")
+
+    def __repr__(self) -> str:
+        return f"LoweringSentinel({self.name!r}, lowerings={self.lowerings})"
+
+
+def wrap(fn: Callable, name: str = "") -> LoweringSentinel:
+    return LoweringSentinel(fn, name)

@@ -1,0 +1,589 @@
+"""AST lint enforcing the repo's RNG and compile-path discipline.
+
+Layer 2 of ``repro.analysis`` (DESIGN.md §15).  Walks every Python file
+under the given roots and emits :class:`~repro.analysis.findings.Finding`
+records for:
+
+``rng-raw-key``
+    A ``jax.random`` sampler consuming a key minted by ``PRNGKey`` at the
+    sample site (directly or via a local assignment) instead of a key
+    derived through ``split``/``fold_in`` — hard-coded seeds in library
+    paths break the seed-era contract.
+``rng-key-reuse``
+    The same key expression feeding two or more samplers in one scope:
+    identical keys mean identical draws, the classic silent-correlation
+    bug.
+``rng-key-fanout``
+    A ``split``/``fold_in``-derived key name handed to two or more
+    distinct consumer calls.  Indirect reuse: each callee may sample from
+    it.  Intentional fanouts (the engine's coin/sync contract) are
+    allowlisted with justification.
+``rng-fold-tag``
+    A ``fold_in`` whose tag is not a name from the central registry
+    (:mod:`repro.analysis.tags`).  Dynamic derivations (round indices)
+    must be allowlisted per call site.
+``scan-host-sync``
+    ``float()`` / ``np.asarray()`` / ``np.array()`` / ``.item()`` applied
+    to a traced value inside a function reachable from a ``lax.scan``
+    body — the PR 5 bug class that serializes the compiled campaign
+    against the host.
+``scan-fresh-lambda``
+    A lambda that *escapes* (is assigned, returned or stored, rather than
+    passed inline to e.g. ``tree_map``) inside a scan-reachable function;
+    fresh closures defeat identity-keyed compile caches.
+``scan-tracer-if``
+    A Python ``if`` whose test reads a traced value inside a direct scan
+    body (``is None`` / ``isinstance`` / shape-attribute tests excluded —
+    those are static at trace time).
+
+Reachability is a per-repo call graph seeded at ``lax.scan`` /
+``while_loop`` / ``fori_loop`` body arguments (looking through wrappers
+like ``jax.checkpoint``) and closed over callee *names*; attribute calls
+match any same-named function anywhere in the linted tree.  That is
+deliberately over-approximate — a name match marks more code as hot, and
+hot-path rules only gate on taint from traced parameters, so the noise
+floor stays low.  Known gap: callables smuggled through registry fields
+(``VariantRule.h_update``) are not resolved; their bodies are linted by
+the pure-RNG rules but not the scan-scoped ones.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+from typing import Dict, Iterator, List, Optional, Sequence, Set, Tuple
+
+from .findings import Finding
+from .tags import REGISTERED_TAGS, TAG_NAMES
+
+#: jax.random endpoints that CONSUME a key (first positional argument).
+SAMPLERS = {
+    "bernoulli", "bits", "categorical", "cauchy", "chisquare", "choice",
+    "dirichlet", "exponential", "gamma", "gumbel", "laplace", "logistic",
+    "normal", "permutation", "poisson", "rademacher", "randint",
+    "truncated_normal", "uniform",
+}
+#: jax.random endpoints that DERIVE new keys (never count as consumers).
+DERIVERS = {"split", "fold_in"}
+#: host-sync callables: flag the call when any argument is tainted.
+HOST_SYNC_FREE = {"float"}
+HOST_SYNC_NP = {"asarray", "array"}
+NP_ALIASES = {"np", "numpy", "onp"}
+#: attribute reads that are static at trace time (never taint a test).
+STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "aval", "sharding"}
+SCAN_LIKE = {"scan": 0, "while_loop": 1, "fori_loop": 2}  # name -> body argpos
+
+_FUNCLIKE = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+_SCOPES = _FUNCLIKE + (ast.ClassDef,)
+
+
+def _terminal_name(node: ast.AST) -> Optional[str]:
+    """foo -> 'foo'; a.b.foo -> 'foo'; anything else -> None."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    return None
+
+
+def _is_jax_random(func: ast.AST, endpoint: str) -> bool:
+    """Match ``jax.random.<endpoint>`` / ``random.<endpoint>`` / ``jr.<endpoint>``."""
+    if not (isinstance(func, ast.Attribute) and func.attr == endpoint):
+        return False
+    base = func.value
+    if isinstance(base, ast.Attribute):
+        return base.attr == "random"
+    if isinstance(base, ast.Name):
+        return base.id in {"random", "jr", "jrandom"}
+    return False
+
+
+def _sampler_name(func: ast.AST) -> Optional[str]:
+    name = _terminal_name(func)
+    if name in SAMPLERS and _is_jax_random(func, name):
+        return name
+    return None
+
+
+def _walk_same_scope(node: ast.AST) -> Iterator[ast.AST]:
+    """Yield descendants without entering nested function/class scopes."""
+    for child in ast.iter_child_nodes(node):
+        if isinstance(child, _SCOPES):
+            continue
+        yield child
+        yield from _walk_same_scope(child)
+
+
+def _own_exprs(st: ast.stmt) -> List[ast.expr]:
+    """The statement's immediate expressions (not nested statements)."""
+    out = []
+    for child in ast.iter_child_nodes(st):
+        if isinstance(child, ast.expr):
+            out.append(child)
+        elif isinstance(child, (ast.withitem, ast.comprehension)):
+            out.extend(c for c in ast.iter_child_nodes(child)
+                       if isinstance(c, ast.expr))
+    return out
+
+
+def _nested_bodies(st: ast.stmt) -> Iterator[List[ast.stmt]]:
+    for attr in ("body", "orelse", "finalbody"):
+        sub = getattr(st, attr, None)
+        if sub and isinstance(sub[0], ast.stmt):
+            yield sub
+    for h in getattr(st, "handlers", []) or []:
+        yield h.body
+
+
+@dataclasses.dataclass
+class FuncInfo:
+    path: str
+    qualname: str
+    node: ast.AST          # FunctionDef | AsyncFunctionDef | Lambda | Module
+    callees: Set[str]      # terminal names of calls + bare-Name call args
+    is_scan_body: bool = False
+
+    def body_stmts(self) -> List[ast.stmt]:
+        if isinstance(self.node, ast.Lambda):
+            e = ast.Expr(self.node.body)
+            ast.copy_location(e, self.node.body)
+            return [e]
+        return list(self.node.body)
+
+
+class _Collector(ast.NodeVisitor):
+    """Pass A: enumerate functions, their callee names, and scan bodies."""
+
+    def __init__(self, path: str, tree: ast.AST):
+        self.path = path
+        self.tree = tree
+        self.stack: List[str] = []
+        self.funcs: List[FuncInfo] = []
+        self.scan_body_names: Set[str] = set()     # local names passed to scan
+        self._lambda_bodies: Set[int] = set()      # id() of lambda scan bodies
+        self.visit(tree)
+        for f in self.funcs:
+            leaf = f.qualname.rsplit(".", 1)[-1]
+            if leaf in self.scan_body_names or id(f.node) in self._lambda_bodies:
+                f.is_scan_body = True
+
+    def visit_ClassDef(self, node: ast.ClassDef):
+        self.stack.append(node.name)
+        self.generic_visit(node)
+        self.stack.pop()
+
+    def _visit_func(self, node, name: str):
+        callees: Set[str] = set()
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call):
+                t = _terminal_name(sub.func)
+                if t:
+                    callees.add(t)
+                for a in sub.args:
+                    if isinstance(a, ast.Name):    # higher-order: f(body, ...)
+                        callees.add(a.id)
+        self.funcs.append(
+            FuncInfo(self.path, ".".join(self.stack + [name]), node, callees))
+        self.stack.append(name)
+        self.generic_visit(node)
+        self.stack.pop()
+
+    def visit_FunctionDef(self, node):
+        self._visit_func(node, node.name)
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_Lambda(self, node):
+        self._visit_func(node, "<lambda>")
+
+    def visit_Call(self, node: ast.Call):
+        t = _terminal_name(node.func)
+        if t in SCAN_LIKE and len(node.args) > SCAN_LIKE[t]:
+            body = node.args[SCAN_LIKE[t]]
+            if isinstance(body, ast.Call):  # jax.checkpoint(f), _maybe_remat(f, r)
+                inner = [a for a in body.args if isinstance(a, ast.Name)]
+                body = inner[0] if inner else body
+            if isinstance(body, ast.Name):
+                self.scan_body_names.add(body.id)
+            elif isinstance(body, ast.Lambda):
+                self._lambda_bodies.add(id(body))
+        self.generic_visit(node)
+
+    def module_scope(self) -> FuncInfo:
+        return FuncInfo(self.path, "", self.tree, set())
+
+
+def _reachable(collectors: Sequence[_Collector]) -> Set[Tuple[str, str]]:
+    """Close scan-body seeds over the global callee-name graph."""
+    by_name: Dict[str, List[FuncInfo]] = {}
+    for col in collectors:
+        for f in col.funcs:
+            by_name.setdefault(f.qualname.rsplit(".", 1)[-1], []).append(f)
+    frontier = [f for col in collectors for f in col.funcs if f.is_scan_body]
+    seen: Set[Tuple[str, str]] = set()
+    while frontier:
+        f = frontier.pop()
+        key = (f.path, f.qualname)
+        if key in seen:
+            continue
+        seen.add(key)
+        for callee in f.callees:
+            frontier.extend(g for g in by_name.get(callee, ())
+                            if (g.path, g.qualname) not in seen)
+    return seen
+
+
+# ---------------------------------------------------------------------------
+# Per-scope rule checks
+# ---------------------------------------------------------------------------
+
+#: a use's branch context: innermost-out stack of (IfExp id, arm).  Two
+#: uses are mutually exclusive — and so never double-consume a key — when
+#: they sit in different arms of the same conditional expression.
+_Branch = Tuple[Tuple[int, str], ...]
+
+
+def _exclusive(a: _Branch, b: _Branch) -> bool:
+    arms_a = dict(a)
+    return any(arms_a.get(ifexp_id, arm) != arm for ifexp_id, arm in b)
+
+
+def _branch_map(root: ast.AST) -> Dict[int, _Branch]:
+    """id(node) -> branch stack for every node under ``root``."""
+    out: Dict[int, _Branch] = {}
+
+    def rec(n: ast.AST, branch: _Branch) -> None:
+        out[id(n)] = branch
+        if isinstance(n, ast.IfExp):
+            rec(n.test, branch)
+            rec(n.body, branch + ((id(n), "body"),))
+            rec(n.orelse, branch + ((id(n), "orelse"),))
+            return
+        for c in ast.iter_child_nodes(n):
+            rec(c, branch)
+
+    rec(root, ())
+    return out
+
+
+def _key_rules(fn: FuncInfo, out: List[Finding]) -> None:
+    """rng-raw-key / rng-key-reuse / rng-key-fanout / rng-fold-tag."""
+    epoch: Dict[str, int] = {}
+    derived: Set[Tuple[str, int]] = set()          # names from split/fold_in
+    raw: Set[Tuple[str, int]] = set()              # names from bare PRNGKey
+    sampler_uses: Dict[str, List[Tuple[ast.Call, _Branch]]] = {}
+    consumers: Dict[Tuple[str, int], List[Tuple[ast.Call, _Branch]]] = {}
+
+    def cur(name: str) -> Tuple[str, int]:
+        return (name, epoch.get(name, 0))
+
+    def bind(target: ast.AST, kind: Optional[str]) -> None:
+        """kind: 'derived' | 'raw' | None (opaque value clears key status)."""
+        if isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                bind(elt, kind)
+            return
+        if isinstance(target, ast.Name):
+            epoch[target.id] = epoch.get(target.id, 0) + 1
+            if kind == "derived":
+                derived.add(cur(target.id))
+            elif kind == "raw":
+                raw.add(cur(target.id))
+
+    def value_kind(value: Optional[ast.AST]) -> Optional[str]:
+        v = value
+        if isinstance(v, ast.Subscript):           # split(key, 4)[2]
+            v = v.value
+        if isinstance(v, ast.Call):
+            t = _terminal_name(v.func)
+            if t in DERIVERS and _is_jax_random(v.func, t):
+                return "derived"
+            if t == "PRNGKey" and _is_jax_random(v.func, "PRNGKey"):
+                return "raw"
+        return None
+
+    def use_call(call: ast.Call, branch: _Branch) -> None:
+        t = _terminal_name(call.func)
+        is_deriver = t in DERIVERS and _is_jax_random(call.func, t)
+        if t == "fold_in" and is_deriver:
+            _fold_tag_rule(fn, call, out)
+        if _sampler_name(call.func) and call.args:
+            karg = call.args[0]
+            dump = ast.dump(karg)
+            uses = sampler_uses.setdefault(dump, [])
+            if any(not _exclusive(branch, b) for _, b in uses):
+                first = uses[0][0]
+                out.append(Finding(
+                    "rng-key-reuse", fn.path, call.lineno, fn.qualname,
+                    f"key {ast.unparse(karg)!r} feeds two samplers "
+                    f"(first use at line {first.lineno})"))
+            uses.append((call, branch))
+            kv = karg.value if isinstance(karg, ast.Subscript) else karg
+            if isinstance(kv, ast.Call) \
+                    and _terminal_name(kv.func) == "PRNGKey":
+                out.append(Finding(
+                    "rng-raw-key", fn.path, call.lineno, fn.qualname,
+                    "sampler consumes PRNGKey(...) directly — derive via "
+                    "split/fold_in"))
+            if isinstance(karg, ast.Name) and cur(karg.id) in raw:
+                out.append(Finding(
+                    "rng-raw-key", fn.path, call.lineno, fn.qualname,
+                    f"sampler consumes {karg.id!r} minted by PRNGKey in "
+                    "this scope — derive via split/fold_in"))
+        if not is_deriver:
+            for a in list(call.args) + [kw.value for kw in call.keywords]:
+                if isinstance(a, ast.Name) and cur(a.id) in derived:
+                    uses = consumers.setdefault(cur(a.id), [])
+                    if any(not _exclusive(branch, b) for _, b in uses):
+                        first = uses[0][0]
+                        out.append(Finding(
+                            "rng-key-fanout", fn.path, call.lineno,
+                            fn.qualname,
+                            f"derived key {a.id!r} reaches a second "
+                            f"consumer call (first at line "
+                            f"{first.lineno})"))
+                    uses.append((call, branch))
+
+    def walk_stmts(stmts: Sequence[ast.stmt]) -> None:
+        for st in stmts:
+            if isinstance(st, _SCOPES):
+                continue                 # nested scopes get their own pass
+            for e in _own_exprs(st):
+                branches = _branch_map(e)
+                for sub in [e, *_walk_same_scope(e)]:
+                    if isinstance(sub, ast.Call):
+                        use_call(sub, branches.get(id(sub), ()))
+            if isinstance(st, ast.Assign):
+                kind = value_kind(st.value)
+                for tgt in st.targets:
+                    bind(tgt, kind)
+            elif isinstance(st, ast.AnnAssign) and st.value is not None:
+                bind(st.target, value_kind(st.value))
+            for body in _nested_bodies(st):
+                walk_stmts(body)
+
+    walk_stmts(fn.body_stmts())
+
+
+def _fold_tag_rule(fn: FuncInfo, call: ast.Call, out: List[Finding]) -> None:
+    if len(call.args) < 2:
+        return
+    tag = call.args[1]
+    name = _terminal_name(tag)
+    if name in REGISTERED_TAGS:
+        return
+    if isinstance(tag, ast.Constant) and tag.value in TAG_NAMES:
+        return
+    out.append(Finding(
+        "rng-fold-tag", fn.path, call.lineno, fn.qualname,
+        f"fold_in tag {ast.unparse(tag)!r} is not in the "
+        "repro.analysis.tags registry"))
+
+
+def _taint_seeds(node: ast.AST) -> Set[str]:
+    if not hasattr(node, "args") or not isinstance(node.args, ast.arguments):
+        return set()
+    args = node.args
+    names = [a.arg for a in args.posonlyargs + args.args + args.kwonlyargs]
+    if args.vararg:
+        names.append(args.vararg.arg)
+    if args.kwarg:
+        names.append(args.kwarg.arg)
+    return {n for n in names if n not in {"self", "cls"}}
+
+
+def _tainted_names(expr: ast.AST, tainted: Set[str]) -> Set[str]:
+    """Names from ``tainted`` read in ``expr``, ignoring static-attr reads."""
+    hits: Set[str] = set()
+
+    def rec(n: ast.AST) -> None:
+        if isinstance(n, ast.Attribute) and n.attr in STATIC_ATTRS:
+            return                                 # x.shape is static
+        if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load) \
+                and n.id in tainted:
+            hits.add(n.id)
+        for c in ast.iter_child_nodes(n):
+            rec(c)
+
+    rec(expr)
+    return hits
+
+
+def _scan_rules(fn: FuncInfo, out: List[Finding]) -> None:
+    """scan-host-sync / scan-fresh-lambda inside scan-reachable functions."""
+    tainted = _taint_seeds(fn.node)
+
+    inline_lambdas: Set[int] = set()
+    for sub in ast.walk(fn.node):
+        if isinstance(sub, ast.Call):
+            for a in list(sub.args) + [kw.value for kw in sub.keywords]:
+                if isinstance(a, ast.Lambda):
+                    inline_lambdas.add(id(a))
+
+    def handle_expr(e: ast.AST) -> None:
+        for sub in [e, *_walk_same_scope(e)]:
+            if isinstance(sub, ast.Lambda) and id(sub) not in inline_lambdas:
+                out.append(Finding(
+                    "scan-fresh-lambda", fn.path, sub.lineno, fn.qualname,
+                    "lambda escapes inside a scan-reachable function — "
+                    "fresh closures defeat identity-keyed compile caches"))
+            if not isinstance(sub, ast.Call):
+                continue
+            f = sub.func
+            args = list(sub.args) + [kw.value for kw in sub.keywords]
+            is_sync = False
+            if isinstance(f, ast.Name) and f.id in HOST_SYNC_FREE:
+                is_sync = True
+            elif isinstance(f, ast.Attribute) and f.attr in HOST_SYNC_NP \
+                    and isinstance(f.value, ast.Name) \
+                    and f.value.id in NP_ALIASES:
+                is_sync = True
+            elif isinstance(f, ast.Attribute) and f.attr == "item" \
+                    and not args:
+                args = [f.value]
+                is_sync = True
+            if is_sync and any(_tainted_names(a, tainted) for a in args):
+                out.append(Finding(
+                    "scan-host-sync", fn.path, sub.lineno, fn.qualname,
+                    f"{ast.unparse(f)}() forces a host sync on a traced "
+                    "value inside a scan-reachable function"))
+
+    def walk_stmts(stmts: Sequence[ast.stmt]) -> None:
+        for st in stmts:
+            if isinstance(st, _SCOPES):
+                continue                 # nested defs are linted separately
+            for e in _own_exprs(st):
+                handle_expr(e)
+            if isinstance(st, ast.Assign) \
+                    and _tainted_names(st.value, tainted):
+                for tgt in st.targets:
+                    for n in ast.walk(tgt):
+                        if isinstance(n, ast.Name):
+                            tainted.add(n.id)
+            for body in _nested_bodies(st):
+                walk_stmts(body)
+
+    walk_stmts(fn.body_stmts())
+
+
+def _tracer_if_rules(fn: FuncInfo, out: List[Finding]) -> None:
+    """Python ``if`` on traced values — direct scan bodies only."""
+    if isinstance(fn.node, ast.Lambda):
+        return                                     # lambdas have no if stmts
+    tainted = _taint_seeds(fn.node)
+
+    def dynamic_taint(test: ast.AST) -> Set[str]:
+        """Tainted names in ``test``, skipping subexpressions that are
+        static at trace time: ``is``/``is not`` comparisons (None checks),
+        isinstance/hasattr/callable tests, and static-attribute reads."""
+        hits: Set[str] = set()
+
+        def rec(n: ast.AST) -> None:
+            if isinstance(n, ast.Compare) \
+                    and all(isinstance(op, (ast.Is, ast.IsNot))
+                            for op in n.ops):
+                return
+            if isinstance(n, ast.Call) \
+                    and _terminal_name(n.func) in {"isinstance", "hasattr",
+                                                   "callable"}:
+                return
+            if isinstance(n, ast.Attribute) and n.attr in STATIC_ATTRS:
+                return
+            if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load) \
+                    and n.id in tainted:
+                hits.add(n.id)
+            for c in ast.iter_child_nodes(n):
+                rec(c)
+
+        rec(test)
+        return hits
+
+    def walk(stmts: Sequence[ast.stmt]) -> None:
+        for st in stmts:
+            if isinstance(st, _SCOPES):
+                continue
+            if isinstance(st, ast.Assign) \
+                    and _tainted_names(st.value, tainted):
+                for tgt in st.targets:
+                    for n in ast.walk(tgt):
+                        if isinstance(n, ast.Name):
+                            tainted.add(n.id)
+            if isinstance(st, ast.If):
+                hits = dynamic_taint(st.test)
+                if hits:
+                    out.append(Finding(
+                        "scan-tracer-if", fn.path, st.lineno, fn.qualname,
+                        f"Python `if` on traced value(s) {sorted(hits)} in "
+                        "a scan body — use lax.cond/jnp.where"))
+            for body in _nested_bodies(st):
+                walk(body)
+
+    walk(fn.body_stmts())
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+def _py_files(roots: Sequence[str]) -> List[str]:
+    files: List[str] = []
+    for root in roots:
+        if os.path.isfile(root):
+            files.append(root)
+            continue
+        for dirpath, dirnames, filenames in os.walk(root):
+            dirnames[:] = [d for d in dirnames
+                           if not d.startswith((".", "__pycache__"))]
+            files.extend(os.path.join(dirpath, f)
+                         for f in sorted(filenames) if f.endswith(".py"))
+    return sorted(files)
+
+
+def lint_paths(roots: Sequence[str], repo_root: str = ".") -> List[Finding]:
+    """Lint every ``*.py`` under ``roots``; returns raw (un-allowlisted)
+    findings sorted by location."""
+    collectors: List[_Collector] = []
+    out: List[Finding] = []
+    for path in _py_files(roots):
+        rel = os.path.relpath(path, repo_root).replace(os.sep, "/")
+        try:
+            with open(path, "r", encoding="utf-8") as fh:
+                tree = ast.parse(fh.read(), filename=path)
+        except SyntaxError as exc:
+            out.append(Finding("syntax-error", rel, exc.lineno or 0, "",
+                               str(exc.msg)))
+            continue
+        collectors.append(_Collector(rel, tree))
+
+    hot = _reachable(collectors)
+    for col in collectors:
+        _key_rules(col.module_scope(), out)
+        for f in col.funcs:
+            _key_rules(f, out)
+            if (f.path, f.qualname) in hot:
+                _scan_rules(f, out)
+            if f.is_scan_body:
+                _tracer_if_rules(f, out)
+    out.sort(key=lambda f: (f.path, f.line, f.rule))
+    return out
+
+
+def lint_source(src: str, path: str = "<memory>") -> List[Finding]:
+    """Lint a source string — the hook the rule self-tests drive."""
+    try:
+        tree = ast.parse(src, filename=path)
+    except SyntaxError as exc:
+        return [Finding("syntax-error", path, exc.lineno or 0, "",
+                        str(exc.msg))]
+    col = _Collector(path, tree)
+    hot = _reachable([col])
+    out: List[Finding] = []
+    _key_rules(col.module_scope(), out)
+    for f in col.funcs:
+        _key_rules(f, out)
+        if (f.path, f.qualname) in hot:
+            _scan_rules(f, out)
+        if f.is_scan_body:
+            _tracer_if_rules(f, out)
+    out.sort(key=lambda f: (f.path, f.line, f.rule))
+    return out

@@ -1,0 +1,40 @@
+"""Central registry of ``fold_in`` namespace tags — the single source of
+truth for every static RNG derivation in the repo.
+
+The seed-era RNG contract (DESIGN.md §6) hands each round four keys via
+``split(state.key, 4)`` and derives every further stream from them with
+``jax.random.fold_in``.  Bit-identity to the DASHA/MARINA reference runs
+depends on those derivations never colliding, so every *constant* tag a
+``fold_in`` call uses must be registered here — ``rng_lint`` rejects any
+``fold_in`` whose tag is not a name from this module (rule
+``rng-fold-tag``).  Dynamic derivations (e.g. the driver's per-round
+``fold_in(data_key, t)``) are not tags; they are allowlisted at the call
+site with a justification.
+
+This module is imported by hot-path code (``methods.substrates``), so it
+must stay dependency-free: constants only, no jax.
+"""
+
+#: Cohort-draw namespace: the round's client subset is
+#: ``permutation(fold_in(k_c, COHORT_TAG), n)[:c]``.  Folding a tag keeps
+#: the cohort stream disjoint from the compression-plan stream, which
+#: consumes ``k_c`` itself (DESIGN.md §13).
+COHORT_TAG = 0x5A3D
+
+#: Slot-key namespace reserved for the PERMK_SLOT wire path (DESIGN.md
+#: §14): a sampled cohort's PermK permutation partitions d over the C
+#: cohort *slots*, so any future per-slot key derivation must use
+#: ``fold_in(fold_in(k_c, PERMK_SLOT_TAG), slot)`` rather than minting a
+#: new stream.  Registered now so the namespace is owned before the
+#: sparse-on-mesh refactor (ROADMAP) starts consuming it.
+PERMK_SLOT_TAG = 0x534C
+
+#: name -> value; ``rng_lint`` accepts a ``fold_in`` tag iff its source
+#: text resolves to one of these names (or the literal value).
+REGISTERED_TAGS = {
+    "COHORT_TAG": COHORT_TAG,
+    "PERMK_SLOT_TAG": PERMK_SLOT_TAG,
+}
+
+#: Inverse map for findings messages / audits.
+TAG_NAMES = {v: k for k, v in REGISTERED_TAGS.items()}

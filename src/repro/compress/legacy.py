@@ -20,7 +20,7 @@ import jax.numpy as jnp
 from repro.compress.backends import RoundCompressor
 from repro.compress.plan import (indices_to_masks, perm_partition,
                                  randk_indices)
-from repro.compress.spec import REGISTRY, CompressorSpec, make_spec
+from repro.compress.spec import CompressorSpec, make_spec
 
 
 class Compressor:

@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.compress.plan import (Plan, draw_mask, indices_to_masks,
+from repro.compress.plan import (Plan, draw_mask,
                                  participation_coins, perm_partition,
                                  randk_indices)
 

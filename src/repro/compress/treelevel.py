@@ -39,6 +39,14 @@ def _spec_leaf(t) -> bool:
     return t is None or isinstance(t, (jax.Array, PartitionSpec))
 
 
+def _is_pair(t) -> bool:
+    return isinstance(t, tuple) and len(t) == 2
+
+
+def _is_triple(t) -> bool:
+    return isinstance(t, tuple) and len(t) == 3
+
+
 def _none_specs(tree: PyTree) -> PyTree:
     return jax.tree_util.tree_map(lambda x: None, tree)
 
@@ -104,9 +112,8 @@ def permk_compress(key: jax.Array, delta: PyTree, n: int,
         specs = _none_specs(delta)
     pairs = jax.tree_util.tree_map(leaf, leaf_keys(key, delta), delta, specs,
                                    is_leaf=_spec_leaf)
-    is2 = lambda t: isinstance(t, tuple) and len(t) == 2
-    m = jax.tree_util.tree_map(lambda p_: p_[0], pairs, is_leaf=is2)
-    agg = jax.tree_util.tree_map(lambda p_: p_[1], pairs, is_leaf=is2)
+    m = jax.tree_util.tree_map(lambda p_: p_[0], pairs, is_leaf=_is_pair)
+    agg = jax.tree_util.tree_map(lambda p_: p_[1], pairs, is_leaf=_is_pair)
     return m, agg
 
 
@@ -178,7 +185,8 @@ def fused_tree_update(key: jax.Array, grads_new: PyTree, h: PyTree,
 
         trips = jax.tree_util.tree_map(leaf, masks, grads_new, h, g_local)
 
-    is3 = lambda t: isinstance(t, tuple) and len(t) == 3
-    pick = lambda i: jax.tree_util.tree_map(lambda t: t[i], trips,
-                                            is_leaf=is3)
+    def pick(i):
+        return jax.tree_util.tree_map(lambda t: t[i], trips,
+                                      is_leaf=_is_triple)
+
     return pick(0), pick(1), pick(2)

@@ -14,11 +14,10 @@ in DESIGN.md §9):
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 def synthetic_classification(key: jax.Array, n_nodes: int, m: int, d: int,
@@ -58,7 +57,7 @@ def make_lm_batch(key: jax.Array, cfg: SyntheticTextConfig, batch: int,
                   *, with_images: int = 0, with_frames: int = 0,
                   d_model: int = 0, dtype=jnp.bfloat16) -> Dict:
     """Next-token LM batch: {"tokens", "labels"} (+ stub modality embeds)."""
-    k1, k2, k3 = jax.random.split(key, 3)
+    k1, k2, k3, k_img, k_frm = jax.random.split(key, 5)
     S, V = cfg.seq_len, cfg.vocab_size
     base = jax.random.randint(k1, (batch, cfg.copy_period), 1, V)
     reps = -(-S // cfg.copy_period) + 1
@@ -69,10 +68,10 @@ def make_lm_batch(key: jax.Array, cfg: SyntheticTextConfig, batch: int,
     out = {"tokens": seq[:, :S], "labels": seq[:, 1:]}
     if with_images:
         out["image_embeds"] = jax.random.normal(
-            k3, (batch, with_images, d_model)).astype(dtype)
+            k_img, (batch, with_images, d_model)).astype(dtype)
     if with_frames:
         out["frames"] = jax.random.normal(
-            k3, (batch, with_frames, d_model)).astype(dtype)
+            k_frm, (batch, with_frames, d_model)).astype(dtype)
     return out
 
 

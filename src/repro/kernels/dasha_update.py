@@ -20,7 +20,6 @@ the 128-lane width).
 """
 from __future__ import annotations
 
-import functools
 from typing import Tuple
 
 import jax

@@ -51,7 +51,9 @@ def dasha_update(grad: jax.Array, h: jax.Array, g_local: jax.Array,
     mk2, _ = _to_lanes(mask)
     m, hn, gln = dasha_update_pallas(g2, h2, gl2, mk2, a, scale,
                                      interpret=INTERPRET)
-    back = lambda t: _from_lanes(t, d, shape, dtype)
+    def back(t):
+        return _from_lanes(t, d, shape, dtype)
+
     return back(m), back(hn), back(gln)
 
 
@@ -67,7 +69,9 @@ def dasha_mvr_update(grad_new: jax.Array, grad_old: jax.Array, h: jax.Array,
     mk2, _ = _to_lanes(mask)
     m, hn, gln = dasha_mvr_update_pallas(gn2, go2, h2, gl2, mk2, a, b, scale,
                                          interpret=INTERPRET)
-    back = lambda t: _from_lanes(t, d, shape, dtype)
+    def back(t):
+        return _from_lanes(t, d, shape, dtype)
+
     return back(m), back(hn), back(gln)
 
 

@@ -72,7 +72,10 @@ def ssd_chunk_pallas(x: jax.Array, dt: jax.Array, A: jax.Array,
     N = b.shape[-1]
     f32 = jnp.float32
     grid = (G, nc)
-    t4 = lambda d: pl.BlockSpec((1, 1, Q, d), lambda i, j: (i, j, 0, 0))
+    def t4(d):
+        return pl.BlockSpec((1, 1, Q, d), lambda i, j: (i, j, 0, 0))
+
+
     t3 = pl.BlockSpec((1, 1, Q), lambda i, j: (i, j, 0))
     ta = pl.BlockSpec((1,), lambda i, j: (i,))
 

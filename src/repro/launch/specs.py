@@ -6,7 +6,6 @@ to lower, abstract arguments, and in/out shardings — no device allocation.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -15,8 +14,8 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.models import init_params, lm
 from repro.models.common import ArchConfig
-from repro.models.sharding import (batch_specs, cache_specs, dp_axes,
-                                   dp_size, expert_sharding, param_specs)
+from repro.models.sharding import (cache_specs, dp_axes, dp_size,
+                                   expert_sharding, param_specs)
 from repro.optim.distributed import (DashaTrainConfig, dasha_train_init,
                                      make_train_step)
 

@@ -15,7 +15,7 @@
 from repro.methods.accounting import (expected_payload_frac,  # noqa: F401
                                       expected_wire_coords, round_payload,
                                       sampled_per_node)
-from repro.methods.driver import Driver, sweep  # noqa: F401
+from repro.methods.driver import Driver, Sweeper, sweep  # noqa: F401
 from repro.methods.engine import (Hyper, Method,  # noqa: F401
                                   MethodState, StepInfo)
 from repro.methods.rules import (VARIANTS, MvrFusion,  # noqa: F401

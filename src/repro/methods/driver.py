@@ -225,12 +225,94 @@ def run(method, state, rounds: int, *, data_fn=None, data=None,
 # vmapped hyperparameter sweeps (Appendix A stepsize tunes)
 # ---------------------------------------------------------------------------
 
+class Sweeper:
+    """Reusable vmapped-sweep runner for one ``method_fn`` config.
+
+    Like :class:`Driver`, the jitted chunk functions are cached on the
+    instance, so repeated ``.run()`` calls (re-tunes, timing reps) compile
+    nothing after the first.  The one-shot :func:`sweep` used to rebuild
+    the jit per invocation — a fresh-closure recompile per call that the
+    recompile sentinels (``repro.analysis.recompile``) now flag.
+    """
+
+    def __init__(self, method_fn, *, data_fn=None, data=None,
+                 metrics: Optional[Dict[str, MetricFn]] = None,
+                 metric_every: int = 1, chunk: Optional[int] = None,
+                 donate: Optional[bool] = None,
+                 host_traces: Optional[bool] = None):
+        if data_fn is not None and data is not None:
+            raise ValueError("pass data_fn (in-jit) OR data (static), "
+                             "not both")
+        self.method_fn = method_fn
+        self.data_fn = data_fn
+        self.data = data
+        self.metrics = dict(metrics or {})
+        self.metric_every = int(metric_every)
+        self.chunk = chunk
+        if donate is None:
+            # donation is unimplemented on CPU (jax warns and ignores it)
+            donate = jax.default_backend() != "cpu"
+        self.donate = bool(donate)
+        if host_traces is None:
+            host_traces = default_host_traces()
+        self.host_traces = bool(host_traces)
+        self._compiled: Dict[int, Callable] = {}
+
+    def _chunk_fn(self, length: int) -> Callable:
+        fn = self._compiled.get(length)
+        if fn is None:
+            def vrun(vals, carry, dk):
+                def one(v, c):
+                    step = _resolve_step(self.method_fn(v))
+                    return _scan_chunk(step, self.data_fn, self.data,
+                                       self.metrics, self.metric_every,
+                                       length, c, dk)
+                return jax.vmap(one)(vals, carry)
+            fn = jax.jit(vrun, donate_argnums=(1,) if self.donate else ())
+            self._compiled[length] = fn
+        return fn
+
+    def run(self, values, state, rounds: int, *,
+            data_key: Optional[jax.Array] = None):
+        """Run ``rounds`` rounds of every lane; returns ``(final_states,
+        traces)`` with a leading (G,) axis on every state leaf and
+        (G, rounds) traces."""
+        values = jax.tree_util.tree_map(jnp.asarray, values)
+        leaves = jax.tree_util.tree_leaves(values)
+        if not leaves:
+            raise ValueError("sweep needs at least one value axis")
+        G = leaves[0].shape[0]
+        if self.data_fn is not None and data_key is None:
+            raise ValueError("data_fn requires an explicit data_key")
+        if data_key is None:
+            data_key = jax.random.PRNGKey(0)        # unused
+        template = _data_template(self.data_fn, self.data, data_key)
+        chunk = self.chunk or min(rounds, DEFAULT_CHUNK)
+        stacked = jax.tree_util.tree_map(
+            lambda l: jnp.tile(l, (G,) + (1,) * jnp.ndim(l)), state)
+        carry = (stacked, jnp.zeros((G,), jnp.int32),
+                 _metric_zeros(self.metrics, state, template,
+                               batch_shape=(G,)))
+        done, parts = 0, []
+        while done < rounds:
+            length = min(chunk, rounds - done)
+            carry, tr = self._chunk_fn(length)(values, carry, data_key)
+            done += length
+            parts.append(jax.device_get(tr) if self.host_traces else tr)
+        cat = np.concatenate if self.host_traces else jnp.concatenate
+        traces = {k: cat([p[k] for p in parts], axis=1)
+                  for k in parts[0]} if parts else {}
+        return carry[0], traces
+
+
 def sweep(method_fn, values, state, rounds: int, *, data_fn=None, data=None,
           data_key=None, metrics: Optional[Dict[str, MetricFn]] = None,
           metric_every: int = 1, chunk: Optional[int] = None,
           donate: Optional[bool] = None,
           host_traces: Optional[bool] = None):
-    """Vmap the chunked driver over a hyperparameter axis.
+    """Vmap the chunked driver over a hyperparameter axis (one-shot
+    convenience over :class:`Sweeper` — hold a Sweeper instead when you
+    will run the same sweep more than once, so the chunk jits are reused).
 
     ``method_fn(value) -> Method`` is traced ONCE with a batched tracer for
     ``value`` — the value must only enter arithmetic (a stepsize, a momentum
@@ -243,48 +325,7 @@ def sweep(method_fn, values, state, rounds: int, *, data_fn=None, data=None,
     Returns ``(final_states, traces)`` with a leading (G,) axis on every
     state leaf and (G, rounds) traces.
     """
-    values = jax.tree_util.tree_map(jnp.asarray, values)
-    leaves = jax.tree_util.tree_leaves(values)
-    if not leaves:
-        raise ValueError("sweep needs at least one value axis")
-    G = leaves[0].shape[0]
-    metrics = dict(metrics or {})
-    if data_fn is not None and data_key is None:
-        raise ValueError("data_fn requires an explicit data_key")
-    if data_key is None:
-        data_key = jax.random.PRNGKey(0)            # unused
-    template = _data_template(data_fn, data, data_key)
-    if donate is None:
-        donate = jax.default_backend() != "cpu"
-    chunk = chunk or min(rounds, DEFAULT_CHUNK)
-
-    compiled: Dict[int, Callable] = {}
-
-    def chunk_fn(length):
-        fn = compiled.get(length)
-        if fn is None:
-            def vrun(vals, carry, dk):
-                def one(v, c):
-                    step = _resolve_step(method_fn(v))
-                    return _scan_chunk(step, data_fn, data, metrics,
-                                       metric_every, length, c, dk)
-                return jax.vmap(one)(vals, carry)
-            fn = jax.jit(vrun, donate_argnums=(1,) if donate else ())
-            compiled[length] = fn
-        return fn
-
-    stacked = jax.tree_util.tree_map(
-        lambda l: jnp.tile(l, (G,) + (1,) * jnp.ndim(l)), state)
-    carry = (stacked, jnp.zeros((G,), jnp.int32),
-             _metric_zeros(metrics, state, template, batch_shape=(G,)))
-    host = default_host_traces() if host_traces is None else host_traces
-    done, parts = 0, []
-    while done < rounds:
-        length = min(chunk, rounds - done)
-        carry, tr = chunk_fn(length)(values, carry, data_key)
-        done += length
-        parts.append(jax.device_get(tr) if host else tr)
-    cat = np.concatenate if host else jnp.concatenate
-    traces = {k: cat([p[k] for p in parts], axis=1)
-              for k in parts[0]} if parts else {}
-    return carry[0], traces
+    sw = Sweeper(method_fn, data_fn=data_fn, data=data, metrics=metrics,
+                 metric_every=metric_every, chunk=chunk, donate=donate,
+                 host_traces=host_traces)
+    return sw.run(values, state, rounds, data_key=data_key)

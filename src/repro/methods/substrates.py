@@ -31,6 +31,7 @@ from typing import Any, Callable, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.tags import COHORT_TAG
 from repro.compress import as_round_compressor
 from repro.compress.backends import RoundCompressor
 from repro.compress.treelevel import (bernoulli_compress, fused_tree_update,
@@ -190,21 +191,35 @@ class FlatSubstrate:
 
     # -- metrics -----------------------------------------------------------
     def default_metric(self):
+        # memoized: callers key compile caches on the metric's identity
+        # (driver/sim `(length, metric_fn)` dicts), so returning a fresh
+        # closure per call would force a retrace per run (the PR 5 bug).
+        cached = self.__dict__.get("_default_metric")
+        if cached is not None:
+            return cached
         p = self.problem
         if hasattr(p, "grad_f"):
-            return lambda s: jnp.sum(p.grad_f(s.x) ** 2)
-        if getattr(p, "true_grad", None) is not None:
-            return lambda s: jnp.sum(p.true_grad(s.x) ** 2)
-        return lambda s: jnp.float32(0)
+            def metric(s):
+                return jnp.sum(p.grad_f(s.x) ** 2)
+        elif getattr(p, "true_grad", None) is not None:
+            def metric(s):
+                return jnp.sum(p.true_grad(s.x) ** 2)
+        else:
+            def metric(s):
+                return jnp.float32(0)
+        object.__setattr__(self, "_default_metric", metric)
+        return metric
 
 
 # ---------------------------------------------------------------------------
 # SampledFlatSubstrate — the cross-device O(C*d) round (DESIGN.md §13)
 # ---------------------------------------------------------------------------
 
-#: fold_in tag deriving the cohort-draw key from the round's k_c without
-#: consuming from the engine's key stream (full-path RNG stays untouched)
-COHORT_TAG = 0x5A3D
+# COHORT_TAG (the fold_in tag deriving the cohort-draw key from the
+# round's k_c without consuming from the engine's key stream) lives in
+# repro.analysis.tags — the registry is the single source of truth for
+# fold_in namespaces, and is imported above so existing consumers keep
+# reading substrates.COHORT_TAG.
 
 
 def cohort_indices(k_round: jax.Array, n: int, c: int) -> jax.Array:
@@ -625,14 +640,20 @@ class LeafSpecCompressor:
             shape = hn.shape[1:]
             d_leaf = int(_leaf_size(hn))
             rc = self._leaf_rc(d_leaf)
-            flat = lambda t: t.reshape(n, d_leaf)
+
+            def flat(t, n=n, d_leaf=d_leaf):
+                return t.reshape(n, d_leaf)
+
             msgs, h_out, gl_new = rc.estimator_update(
                 k, flat(hn), flat(hh), flat(gl), a)
             aggs.append(msgs.mean().reshape(shape))
             h_outs.append(h_out.reshape(hn.shape))
             gls.append(gl_new.reshape(hn.shape))
             payload += rc.payload_per_node
-        unflat = lambda ls: jax.tree_util.tree_unflatten(treedef, ls)
+
+        def unflat(ls):
+            return jax.tree_util.tree_unflatten(treedef, ls)
+
         return unflat(aggs), unflat(h_outs), unflat(gls), payload
 
 
@@ -719,5 +740,14 @@ class TreeSubstrate:
 
     # -- metrics -----------------------------------------------------------
     def default_metric(self):
-        return lambda s: sum(jnp.sum(jnp.square(x))
-                             for x in jax.tree_util.tree_leaves(s.g))
+        # memoized for identity-keyed compile caches (see FlatSubstrate)
+        cached = self.__dict__.get("_default_metric")
+        if cached is not None:
+            return cached
+
+        def metric(s):
+            return sum(jnp.sum(jnp.square(x))
+                       for x in jax.tree_util.tree_leaves(s.g))
+
+        object.__setattr__(self, "_default_metric", metric)
+        return metric

@@ -6,8 +6,7 @@ files in :mod:`repro.configs` instantiate it with the exact assigned numbers.
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -13,7 +13,6 @@ with `lax.cond` + dynamic indexing so each family still compiles ONE body.
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict, Optional, Tuple
 
 import jax

@@ -53,8 +53,10 @@ class Adam:
     weight_decay: float = 0.0
 
     def init(self, params: PyTree) -> AdamState:
-        z = lambda t: jax.tree_util.tree_map(
-            lambda p: jnp.zeros(p.shape, jnp.float32), t)
+        def z(t):
+            return jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), t)
+
         return AdamState(mu=z(params), nu=z(params),
                          count=jnp.zeros((), jnp.int32))
 

@@ -9,7 +9,7 @@ collect and run.
 import pytest
 
 try:
-    from hypothesis import given, settings, strategies as st
+    from hypothesis import given, settings, strategies as st  # noqa: F401
     HAVE_HYPOTHESIS = True
 except ImportError:  # pragma: no cover - depends on the environment
     HAVE_HYPOTHESIS = False

@@ -1,0 +1,294 @@
+"""Rule self-tests for ``repro.analysis`` (DESIGN.md §15): each rule class
+is seeded with a minimal violation that MUST produce a finding, next to a
+clean variant that MUST NOT — so a lint pass can never silently rot into a
+no-op.  Layer 1/3 (jaxpr walks, recompile sentinels) are exercised against
+real traced programs."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import (Finding, AllowEntry, apply_allowlist,
+                            lint_source, tags)
+from repro.analysis import jaxpr_audit, recompile
+
+
+def _rules(src):
+    return [f.rule for f in lint_source(src)]
+
+
+# ---------------------------------------------------------------------------
+# Layer 2: RNG hygiene (AST)
+# ---------------------------------------------------------------------------
+
+def test_key_reuse_is_caught():
+    src = (
+        "import jax\n"
+        "def f(key):\n"
+        "    k1, k2 = jax.random.split(key)\n"
+        "    a = jax.random.normal(k1, (3,))\n"
+        "    b = jax.random.uniform(k1, (3,))\n"
+    )
+    assert "rng-key-reuse" in _rules(src)
+
+
+def test_split_keys_are_clean():
+    src = (
+        "import jax\n"
+        "def f(key):\n"
+        "    k1, k2 = jax.random.split(key)\n"
+        "    a = jax.random.normal(k1, (3,))\n"
+        "    b = jax.random.uniform(k2, (3,))\n"
+    )
+    assert _rules(src) == []
+
+
+def test_raw_key_consumption_is_caught():
+    # hard-coded seed at the sample site, direct and via local assignment
+    direct = (
+        "import jax\n"
+        "def f():\n"
+        "    return jax.random.normal(jax.random.PRNGKey(0), (3,))\n"
+    )
+    assert "rng-raw-key" in _rules(direct)
+    assigned = (
+        "import jax\n"
+        "def f():\n"
+        "    k = jax.random.PRNGKey(0)\n"
+        "    return jax.random.normal(k, (3,))\n"
+    )
+    assert "rng-raw-key" in _rules(assigned)
+
+
+def test_exclusive_ifexp_arms_are_not_reuse():
+    src = (
+        "import jax\n"
+        "def f(key, flag):\n"
+        "    k, _ = jax.random.split(key)\n"
+        "    return (jax.random.normal(k, (3,)) if flag\n"
+        "            else jax.random.uniform(k, (3,)))\n"
+    )
+    assert _rules(src) == []
+
+
+def test_unregistered_fold_tag_is_caught():
+    src = (
+        "import jax\n"
+        "def f(key):\n"
+        "    k = jax.random.fold_in(key, 0xBEEF)\n"
+        "    return jax.random.normal(k, (3,))\n"
+    )
+    assert "rng-fold-tag" in _rules(src)
+
+
+def test_registered_fold_tag_is_clean():
+    src = (
+        "import jax\n"
+        "from repro.analysis.tags import COHORT_TAG\n"
+        "def f(key):\n"
+        "    k = jax.random.fold_in(key, COHORT_TAG)\n"
+        "    return jax.random.normal(k, (3,))\n"
+    )
+    assert _rules(src) == []
+    # the registry itself stays consistent both ways
+    assert tags.REGISTERED_TAGS["COHORT_TAG"] == tags.COHORT_TAG
+    assert tags.TAG_NAMES[tags.COHORT_TAG] == "COHORT_TAG"
+
+
+# ---------------------------------------------------------------------------
+# Layer 2: scan-body hygiene (AST)
+# ---------------------------------------------------------------------------
+
+def test_host_sync_in_scan_body_is_caught():
+    src = (
+        "import jax\n"
+        "def body(carry, x):\n"
+        "    v = float(carry)\n"
+        "    return carry, v\n"
+        "def run(xs):\n"
+        "    return jax.lax.scan(body, 0.0, xs)\n"
+    )
+    assert "scan-host-sync" in _rules(src)
+
+
+def test_item_call_in_scan_reachable_fn_is_caught():
+    src = (
+        "import jax\n"
+        "def helper(c):\n"
+        "    return c.item()\n"
+        "def body(carry, x):\n"
+        "    return carry, helper(carry)\n"
+        "def run(xs):\n"
+        "    return jax.lax.scan(body, 0.0, xs)\n"
+    )
+    assert "scan-host-sync" in _rules(src)
+
+
+def test_fresh_lambda_in_scan_body_is_caught():
+    src = (
+        "import jax\n"
+        "def body(carry, x):\n"
+        "    f = lambda t: t + 1\n"
+        "    return carry, f(x)\n"
+        "def run(xs):\n"
+        "    return jax.lax.scan(body, 0.0, xs)\n"
+    )
+    assert "scan-fresh-lambda" in _rules(src)
+
+
+def test_inline_treemap_lambda_is_clean():
+    src = (
+        "import jax\n"
+        "def body(carry, x):\n"
+        "    y = jax.tree_util.tree_map(lambda t: t + 1, x)\n"
+        "    return carry, y\n"
+        "def run(xs):\n"
+        "    return jax.lax.scan(body, 0.0, xs)\n"
+    )
+    assert _rules(src) == []
+
+
+def test_tracer_if_in_scan_body_is_caught():
+    src = (
+        "import jax\n"
+        "def body(carry, x):\n"
+        "    if carry > 0:\n"
+        "        carry = carry + x\n"
+        "    return carry, x\n"
+        "def run(xs):\n"
+        "    return jax.lax.scan(body, 0.0, xs)\n"
+    )
+    assert "scan-tracer-if" in _rules(src)
+
+
+def test_static_shape_if_is_clean():
+    src = (
+        "import jax\n"
+        "def body(carry, x):\n"
+        "    if x.ndim > 1:\n"
+        "        x = x.sum(-1)\n"
+        "    return carry, x\n"
+        "def run(xs):\n"
+        "    return jax.lax.scan(body, 0.0, xs)\n"
+    )
+    assert _rules(src) == []
+
+
+def test_syntax_error_becomes_finding():
+    assert "syntax-error" in _rules("def f(:\n")
+
+
+# ---------------------------------------------------------------------------
+# Allowlist mechanics
+# ---------------------------------------------------------------------------
+
+def test_allowlist_suppresses_and_reports_stale():
+    found = [Finding(rule="rng-key-reuse", path="src/a/b.py", line=3,
+                     symbol="f", message="m")]
+    hit = AllowEntry(rule="rng-key-reuse", path="a/b.py", symbol="f",
+                     reason="intentional")
+    stale = AllowEntry(rule="rng-key-reuse", path="gone.py", symbol="g",
+                       reason="left behind")
+    kept, stale_out = apply_allowlist(found, [hit, stale])
+    assert kept == []
+    assert stale_out == [stale]
+    # a non-matching symbol does NOT suppress
+    kept2, _ = apply_allowlist(
+        found, [AllowEntry(rule="rng-key-reuse", path="a/b.py",
+                           symbol="other", reason="")])
+    assert kept2 == found
+
+
+# ---------------------------------------------------------------------------
+# Layer 1: jaxpr audits (traced programs)
+# ---------------------------------------------------------------------------
+
+def test_large_temp_regression_fails():
+    n, d = 256, 16
+
+    def leaky(state):
+        # materializes an (n, n) temporary — bigger than any input
+        gram = state @ state.T
+        return state + gram @ state * 1e-6
+
+    st = jnp.ones((n, d))
+    with pytest.raises(AssertionError, match="large equation outputs"):
+        jaxpr_audit.assert_large_outputs(leaky, st, max_big=1)
+    # a clean step's only input-sized output is its result
+    jaxpr_audit.assert_large_outputs(lambda s: s * 2.0, st, max_big=1)
+
+
+def test_large_outputs_recurses_into_scan():
+    def step(c, x):
+        big = jnp.outer(x, x)            # (d, d) inside the scan body
+        return c + big.sum(), x
+
+    def run(xs):
+        return jax.lax.scan(step, 0.0, xs)
+
+    xs = jnp.ones((4, 64))
+    big = jaxpr_audit.large_outputs(run, xs, min_bytes=64 * 64 * 4)
+    assert any(o.shape == (64, 64) for o in big)
+
+
+def test_scan_carry_report_counts_bytes():
+    def run(c0):
+        def step(c, _):
+            return c * 0.5, c.sum()
+        return jax.lax.scan(step, c0, None, length=8)
+
+    c0 = jnp.ones((32, 4))
+    rep = jaxpr_audit.scan_carry_report(run, c0)
+    assert len(rep) == 1
+    assert rep[0].length == 8
+    assert rep[0].carry_bytes == 32 * 4 * 4
+
+
+def test_donation_report_counts_declared_leaves():
+    def f(state, y):
+        return {"a": state["a"] + y, "b": state["b"] * y}
+
+    st = {"a": jnp.ones((8,)), "b": jnp.ones((8,))}
+    rep = jaxpr_audit.donation_report(f, st, 2.0, donate_argnums=(0,))
+    assert rep.donated_leaves == 2
+    # CPU gives no must-alias entries — the carry-copy floor is measured,
+    # not assumed; the render names both sides of the gap
+    assert rep.must_alias == 0
+    assert "declared 2 donated buffers" in rep.render()
+
+
+# ---------------------------------------------------------------------------
+# Layer 3: recompile sentinels
+# ---------------------------------------------------------------------------
+
+def test_recompile_watch_catches_fresh_jit():
+    def f(x):
+        return x * 3.0
+
+    x = jnp.arange(8.0)
+    with recompile.watch("cold") as cold:
+        jax.jit(f)(x)                    # fresh jit object: must compile
+    assert cold.count >= 1
+
+    warm_fn = jax.jit(f)
+    warm_fn(x)
+    with recompile.watch("warm") as warm:
+        warm_fn(x)                       # cached: must NOT compile
+    recompile.assert_no_compiles(warm)
+
+    with recompile.watch("regressed") as bad:
+        jax.jit(lambda y: y * 3.0)(x)    # the fresh-closure regression
+    with pytest.raises(AssertionError, match="backend compile"):
+        recompile.assert_no_compiles(bad)
+
+
+def test_lowering_sentinel_counts_traces():
+    sent = recompile.wrap(lambda x: x + 1.0, name="step")
+    fn = jax.jit(sent)
+    x = jnp.ones((4,))
+    fn(x)
+    fn(x)                                # cache hit: no new trace
+    sent.assert_lowerings(1)
+    fn(jnp.ones((8,)))                   # new shape: one more lowering
+    sent.assert_lowerings(2)
+    with pytest.raises(AssertionError, match="lowerings"):
+        sent.assert_lowerings(1)

@@ -9,7 +9,7 @@ import numpy as np
 import pytest
 from hypcompat import given, settings, st
 
-from repro.core.compressors import (Identity, PartialParticipation, PermK,
+from repro.core.compressors import (PartialParticipation, PermK,
                                     QDither, RandK, empirical_omega,
                                     make_compressor)
 from repro.core.node_compress import NodeCompressor

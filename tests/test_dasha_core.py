@@ -13,8 +13,6 @@ Key correctness anchors:
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
-
 from repro.core import dasha, marina, theory
 from repro.core.compressors import Identity, RandK
 from repro.core.node_compress import NodeCompressor

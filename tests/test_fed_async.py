@@ -35,7 +35,7 @@ from repro.compress import make_round_compressor
 from repro.fed.net import LinkModel, Lognormal
 from repro.fed.sim import FedSim
 from repro.fed.vecsim import VecFedSim
-from repro.methods import FlatSubstrate, Hyper, Method
+from repro.methods import FlatSubstrate, Method
 
 D, K, N = 40, 6, 5
 

@@ -11,7 +11,7 @@ import pytest
 from benchmarks.common import (N_NODES, glm_problem, lipschitz_glm,
                                theory_hyper)
 from repro.compress import make_round_compressor
-from repro.fed.net import Constant, LinkModel, Lognormal, Pareto
+from repro.fed.net import Constant, LinkModel, Lognormal
 from repro.fed.sim import FedSim
 from repro.methods import FlatSubstrate, Hyper, Method
 

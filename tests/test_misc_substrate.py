@@ -1,5 +1,4 @@
 """MARINA baselines, data pipeline, checkpointing, optimizers."""
-import os
 import tempfile
 
 import jax

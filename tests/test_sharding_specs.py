@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.configs import all_arch_ids, get_config, get_smoke_config
+from repro.configs import all_arch_ids, get_config
 from repro.launch.mesh import abstract_mesh
 from repro.models import init_params, lm
 from repro.models.sharding import cache_specs, dp_axes, dp_size, param_specs

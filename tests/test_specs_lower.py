@@ -1,7 +1,6 @@
 """Integration: the dry-run path end-to-end in a subprocess (it needs its
 own process: 512 placeholder devices are locked in at jax init), plus spec
 construction sanity on abstract meshes."""
-import json
 import os
 import subprocess
 import sys
@@ -12,7 +11,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config
 from repro.launch.mesh import abstract_mesh
-from repro.launch.specs import SHAPES, input_specs, shape_supported
+from repro.launch.specs import input_specs, shape_supported
 from repro.optim.distributed import DashaTrainConfig
 
 MESH = abstract_mesh((16, 16), ("data", "model"))

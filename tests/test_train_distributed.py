@@ -1,8 +1,6 @@
 """DASHA-as-training-feature (optim.distributed): loss goes down, the Pallas
 kernel path is bit-identical to the reference path, PermK aggregation is
 exact, and bf16 state stays numerically sane."""
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
