@@ -56,13 +56,16 @@ import heapq
 from typing import Any, Callable, Dict, List, NamedTuple, Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.fed import wire
 from repro.fed.net import LinkModel, campaign_multipliers
+from repro.kernels import ops
 from repro.methods.accounting import downlink_receivers
 from repro.methods.engine import Hyper, Method
 from repro.methods.rules import get_rule
+from repro.methods.substrates import gather_slab_rows, slab_layout
 
 X_BYTES_PER_COORD = 4                  # the server broadcast is dense fp32
 
@@ -123,6 +126,15 @@ class FedSim:
     #: barrier BIT-exactly (the gate is round t's own completion and the
     #: deficit is provably empty) — the parity anchor tests pin.
     tau: Optional[int] = None
+    #: persistent client-state store for sampled substrates (DESIGN.md
+    #: §16).  "slab" hoists the (n, d) ``h_local`` / ``g_local`` arrays
+    #: out of the scan carry: the cohort schedule is replayed on the host,
+    #: the chunk's touched rows gather into a compact (U, d) slab, and one
+    #: writeback per chunk scatters them home.  "scatter" keeps the
+    #: legacy carry-resident store.  "auto" (default) picks slab whenever
+    #: the substrate samples clients.  Both stores are BIT-identical —
+    #: same RNG chain, same traces, same wire bytes.
+    store: str = "auto"
 
     def __post_init__(self):
         self.rule = get_rule(self.variant)
@@ -140,6 +152,16 @@ class FedSim:
             raise ValueError(f"staleness bound tau={self.tau} must be >= 0")
         self.sampled = bool(getattr(self.substrate, "samples_clients",
                                     False))
+        if self.store not in ("auto", "slab", "scatter"):
+            raise ValueError(f"store={self.store!r} must be 'auto', "
+                             "'slab' or 'scatter'")
+        if self.store == "slab" and not self.sampled:
+            raise ValueError("store='slab' needs a sampled-client "
+                             "substrate — dense substrates (including "
+                             "SampledFlatSubstrate at c == n, which IS "
+                             "the dense path) touch every row every "
+                             "round; use store='auto'")
+        self.slab = self.sampled and self.store != "scatter"
         self.n = int(getattr(self.substrate, "n", self.comp.n))
         self.method: Method = Method.build(self.variant, self.comp,
                                            self.substrate, self.hyper)
@@ -206,6 +228,76 @@ class FedSim:
         self._compiled[(length, metric_fn)] = fn
         return fn
 
+    def _chunk_fn_slab(self, length: int, metric_fn) -> Callable:
+        """The chunk scan on the chunk-resident store (DESIGN.md §16):
+        the carry holds the (U, d) SLAB instead of the (n, d) arrays, and
+        each round's cohort arrives as scan inputs — ``sel`` (global ids,
+        for oracles/wire/present) and ``loc`` (slab rows, for the
+        gather/scatter).  ``ys`` keeps the legacy schema (``sel`` now a
+        passthrough of the precomputed schedule), so :meth:`_round_wire`
+        replays bytes unchanged."""
+        fn = self._compiled.get(("slab", length, metric_fn))
+        if fn is not None:
+            return fn
+        rule = self.rule
+
+        def body(st, xs):
+            sel, loc = xs
+            ys = {"key": st.key, "sel": sel}
+            new, info = self.method.step_full(st, None, window=(sel, loc))
+            ys["metric"] = metric_fn(new)
+            ys["bits"] = new.bits_sent
+            ys["values"] = info.messages.values
+            if getattr(info.messages, "indices", None) is not None:
+                ys["indices"] = info.messages.indices
+            if info.coin is not None:
+                ys["coin"] = info.coin
+            if info.present is not None:
+                ys["present"] = info.present
+            if rule.has_sync:
+                ys["sync"] = info.sync_dense
+            return new, ys
+
+        fn = jax.jit(lambda st, sels, locs:
+                     jax.lax.scan(body, st, (sels, locs)))
+        self._compiled[("slab", length, metric_fn)] = fn
+        return fn
+
+    def _slab_enter(self, state, uniq_pad: np.ndarray):
+        """Swap the (n, d) store out of the carry: gather the chunk's
+        touched rows into the slab; the full arrays wait on the side for
+        :meth:`_slab_exit`'s once-per-chunk writeback."""
+        idx = jnp.asarray(uniq_pad)
+        st = state._replace(h_local=gather_slab_rows(state.h_local, idx),
+                            g_local=gather_slab_rows(state.g_local, idx))
+        return st, state.h_local, state.g_local
+
+    def _slab_exit(self, state, uniq_pad: np.ndarray, full_h, full_g):
+        """Per-chunk writeback: one O(U·d) scatter into the store (the
+        aliased Pallas kernel on compiled backends, XLA drop-scatter
+        under interpret — :func:`repro.kernels.ops.slab_writeback`)."""
+        idx = jnp.asarray(uniq_pad)
+        return state._replace(
+            h_local=ops.slab_writeback(full_h, idx, state.h_local),
+            g_local=ops.slab_writeback(full_g, idx, state.g_local))
+
+    def _run_chunk(self, state, length: int, metric_fn):
+        """One engine chunk on the active store: the slab path precomputes
+        the cohort schedule from ``state.key`` (the same stateless key
+        chain the engine folds in-jit), gathers the touched rows, scans
+        with the slab in the carry, and writes back once; the scatter
+        path is the legacy carry-resident scan."""
+        if self.slab:
+            sels = self.substrate.cohort_schedule(state.key, length)
+            uniq, loc = slab_layout(sels, self.n)
+            st, full_h, full_g = self._slab_enter(state, uniq)
+            st, ys = self._chunk_fn_slab(length, metric_fn)(
+                st, jnp.asarray(sels), jnp.asarray(loc))
+            state = self._slab_exit(st, uniq, full_h, full_g)
+        else:
+            state, ys = self._chunk_fn(length, metric_fn)(state)
+        return state, ys
+
     def _expand_plan(self, plan, sel: np.ndarray, n: int):
         """Re-key a cohort plan's per-row support by CLIENT id so
         :func:`repro.fed.wire.encode_round` (which walks client rows) reads
@@ -252,12 +344,14 @@ class FedSim:
             vals = _expand_cohort(vals, sel, n)
             if idxs is not None:
                 idxs = _expand_cohort(idxs, sel, n)
-            if self.comp.spec.name == "permk":
-                # slot-keyed PERMK_SLOT records: the cohort permutation
-                # partitions d over slots, so each record carries the
-                # client's slot in THIS round's cohort
-                slots = np.full(n, -1, np.int64)
-                slots[sel] = np.arange(sel.size)
+            # slot-keyed headers: under sampling EVERY record carries the
+            # client's slot in THIS round's cohort, not its global id —
+            # slots are bounded by C (u16-safe at any n), and for PermK
+            # the slot additionally names the client's block in the
+            # cohort partition of d.  The global id is recovered from the
+            # round's replayable cohort (fold_in(k_c, COHORT_TAG)).
+            slots = np.full(n, -1, np.int64)
+            slots[sel] = np.arange(sel.size)
         msgs = _HostMessages(vals, idxs)
         plan = self._plan(ys["key"][j]) if self._need_plan else None
         if self.sampled and plan is not None:
@@ -314,7 +408,7 @@ class FedSim:
         done = 0
         while done < rounds:
             length = min(self.chunk, rounds - done)
-            state, ys = self._chunk_fn(length, metric_fn)(state)
+            state, ys = self._run_chunk(state, length, metric_fn)
             ys = jax.device_get(ys)                # ONE transfer per chunk
             for j in range(length):
                 t = done + j
@@ -381,7 +475,11 @@ class FedSim:
         tau >= 1 dispatch.  The deficit feeds back into the next round's
         math, so rounds cannot fuse into one scan; one dispatch per round
         is the oracle's price (use :class:`repro.fed.vecsim.VecFedSim`
-        for scale — its ring buffer lives inside the scan carry)."""
+        for scale — its ring buffer lives inside the scan carry).  This
+        path keeps the legacy carry-resident store regardless of
+        ``store=``: with no scan there is no per-round carry copy to
+        amortize, and the host-driven dispatch already pays O(n·d) in
+        transfers — the slab store's scan-carry win does not apply."""
         fn = self._compiled.get(("round", metric_fn))
         if fn is not None:
             return fn
@@ -482,7 +580,7 @@ class FedSim:
                 # chunked scan — bit-identical jaxpr, bit-identical states
                 if buf_off == buf_len:
                     buf_len = min(self.chunk, rounds - t)
-                    state, buf = self._chunk_fn(buf_len, metric_fn)(state)
+                    state, buf = self._run_chunk(state, buf_len, metric_fn)
                     buf = jax.device_get(buf)
                     buf_off = 0
                 ys, j = buf, buf_off
@@ -589,14 +687,17 @@ def simulate(variant: str, comp, substrate, hyper: Hyper, x0, key, *,
              downlink: Optional[LinkModel] = None, compute_s: float = 0.01,
              seed: int = 0, init_kw: Optional[dict] = None,
              metric_fn=None, log_events: bool = False,
-             engine: str = "heap", tau: Optional[int] = None) -> SimResult:
+             engine: str = "heap", tau: Optional[int] = None,
+             store: str = "auto") -> SimResult:
     """One-shot convenience: build the sim, init the method, run it.
 
     ``engine="heap"`` (default) is this module's event-driven reference;
     ``engine="vec"`` runs :class:`repro.fed.vecsim.VecFedSim` — same
     bytes, same network draws, one compiled program (DESIGN.md §12).
     ``tau`` selects asynchronous pipelined rounds with that staleness
-    bound (DESIGN.md §14); None keeps the round barrier."""
+    bound (DESIGN.md §14); None keeps the round barrier.  ``store``
+    picks the persistent client-state store on sampled substrates
+    (DESIGN.md §16): "slab" / "scatter" / "auto"."""
     if engine == "vec":
         from repro.fed.vecsim import VecFedSim
         cls = VecFedSim
@@ -607,7 +708,7 @@ def simulate(variant: str, comp, substrate, hyper: Hyper, x0, key, *,
     sim = cls(variant=variant, comp=comp, substrate=substrate,
               hyper=hyper, uplink=uplink or LinkModel(),
               downlink=downlink or LinkModel(), compute_s=compute_s,
-              seed=seed, tau=tau)
+              seed=seed, tau=tau, store=store)
     state = sim.init(x0, key, **(init_kw or {}))
     kw = {} if engine == "vec" else {"log_events": log_events}
     return sim.run(state, rounds, metric_fn=metric_fn, **kw)

@@ -46,9 +46,12 @@ import numpy as np
 from repro.fed import wire
 from repro.fed.net import LinkModel, campaign_streams, round_multipliers
 from repro.fed.sim import DEFAULT_CHUNK, X_BYTES_PER_COORD, SimResult
+from repro.kernels import ops
 from repro.methods.accounting import downlink_receivers
 from repro.methods.engine import Hyper, Method
 from repro.methods.rules import get_rule
+from repro.methods.substrates import gather_slab_rows as _gather_rows
+from repro.methods.substrates import slab_layout
 
 
 @dataclasses.dataclass
@@ -77,6 +80,16 @@ class VecFedSim:
     #: ring + a (tau, n, d) message ring feed the deficit), and the scan
     #: still emits per-round scalars only.
     tau: Optional[int] = None
+    #: client-state store for sampled substrates (DESIGN.md §16):
+    #: ``"slab"`` precomputes each chunk's cohort schedule outside the jit,
+    #: gathers the union of touched rows into a compact (U, d) slab, scans
+    #: with ONLY the slab in the carry and writes back once per chunk —
+    #: the O(n·d)-free fast path; ``"scatter"`` keeps the per-round (n, d)
+    #: carry (the pre-slab reference the bit-identity tests compare
+    #: against); ``"auto"`` resolves to slab exactly when the substrate
+    #: samples clients (c < n).  Both stores are bit-identical — same RNG
+    #: chain, traces and wire bytes (tests/test_slab_store.py).
+    store: str = "auto"
 
     def __post_init__(self):
         self.rule = get_rule(self.variant)
@@ -93,6 +106,14 @@ class VecFedSim:
             raise ValueError(f"staleness bound tau={self.tau} must be >= 0")
         self.sampled = bool(getattr(self.substrate, "samples_clients",
                                     False))
+        if self.store not in ("auto", "scatter", "slab"):
+            raise ValueError(f"store={self.store!r} must be 'auto', "
+                             "'scatter' or 'slab'")
+        if self.store == "slab" and not self.sampled:
+            raise ValueError("store='slab' needs a sampled-client "
+                             "substrate (c < n); at c == n the scatter "
+                             "store IS the degenerate slab")
+        self.slab = self.sampled and self.store != "scatter"
         self.n = int(getattr(self.substrate, "n", self.comp.n))
         self._bound = self.substrate.with_compressor(self.comp)
         self.schema = wire.wire_schema(
@@ -169,6 +190,95 @@ class VecFedSim:
         self._compiled[(length, metric_fn)] = fn
         return fn
 
+    # ------------------------------------------------------------------
+    # chunk-resident slab store (DESIGN.md §16)
+    # ------------------------------------------------------------------
+
+    def _chunk_fn_slab(self, length: int, metric_fn) -> Callable:
+        """The barrier scan body over the chunk slab: the carry holds the
+        (U_pad, d) slab — NOT the (n, d) store — plus the server state;
+        each round's cohort arrives as xs (global ids ``sel`` for the
+        client-id-keyed oracles, slab rows ``loc`` for gather/scatter,
+        and the cohort's OWN straggler multipliers, gathered on host from
+        the same CRN campaign matrices the scatter store consumes).  All
+        emitted quantities are computed in (C,) space; they are bit-equal
+        to the scatter body's (n,)-masked forms because every reduction
+        here is order-free (integer sums, max) and every per-client float
+        op is elementwise on identical inputs."""
+        fn = self._compiled.get(("slab", length, metric_fn))
+        if fn is not None:
+            return fn
+        c, d = int(self.substrate.c), int(self.comp.spec.d)
+        schema = self.schema
+        x_bytes = X_BYTES_PER_COORD * d
+        dense_up = float(wire.HEADER_BYTES + 4 * d)
+
+        def body(st, xs):
+            m_down_c, m_up_c, sel, loc = xs     # (C,) f32 f32 i32 i32
+            key = st.key                        # pre-step key
+            new, info = self.method.step_full(st, None, window=(sel, loc))
+            # sampled-capable variants have no sync coin (Method.build
+            # rejects sync_requires_all on sampled substrates) — keep the
+            # scatter body's where() tokens so the float math is
+            # expression-identical anyway
+            coin = info.coin if info.coin is not None \
+                else jnp.zeros((), bool)
+            if schema.static_count is None:
+                counts = self._bound.cohort_counts(key)          # (C,)
+            else:
+                counts = jnp.full((c,), schema.static_count, jnp.int32)
+            comp_b = schema.header_bytes \
+                + schema.bytes_per_value * counts.astype(jnp.float32)
+            up_b = jnp.where(coin, dense_up, comp_b)
+            delay = self.downlink.latency_s \
+                + x_bytes / self.downlink.bandwidth_Bps * m_down_c \
+                + self.compute_s \
+                + self.uplink.latency_s \
+                + up_b / self.uplink.bandwidth_Bps * m_up_c
+            ys = {"metric": metric_fn(new), "bits": new.bits_sent,
+                  "coin": coin, "participants": jnp.full((), c, jnp.int32),
+                  "counts_sum": jnp.sum(counts),
+                  "round_t": jnp.max(delay)}
+            return new, ys
+
+        def scan_chunk(st, m_down_c, m_up_c, sels, locs):
+            return jax.lax.scan(body, st, (m_down_c, m_up_c, sels, locs))
+
+        fn = jax.jit(scan_chunk)
+        self._compiled[("slab", length, metric_fn)] = fn
+        return fn
+
+    def _slab_chunk_xs(self, state, length: int, md: np.ndarray,
+                       mu: np.ndarray):
+        """Precompute one chunk's slab plumbing: the cohort schedule
+        (replayed from ``state.key`` via the selection-based permutation
+        head), the slab layout, and the cohort-gathered multiplier
+        slices."""
+        sels = self.substrate.cohort_schedule(state.key, length)
+        uniq_pad, loc = slab_layout(sels, self.n)
+        md_c = np.take_along_axis(md, sels, axis=1)
+        mu_c = np.take_along_axis(mu, sels, axis=1)
+        return sels, uniq_pad, loc, md_c, mu_c
+
+    def _slab_enter(self, state, uniq_pad: np.ndarray):
+        """Swap the (n, d) store out of the carry: gather the chunk's
+        touched rows into the slab.  Returns (slab_state, full_h, full_g)
+        — the full arrays stay on host/device UNTOUCHED until
+        :meth:`_slab_exit` scatters the slab back once per chunk."""
+        idx = jnp.asarray(uniq_pad)
+        st = state._replace(h_local=_gather_rows(state.h_local, idx),
+                            g_local=_gather_rows(state.g_local, idx))
+        return st, state.h_local, state.g_local
+
+    def _slab_exit(self, state, uniq_pad: np.ndarray, full_h, full_g):
+        """Per-chunk writeback: one O(U·d) scatter into the store (the
+        aliased Pallas kernel on compiled backends, XLA drop-scatter under
+        interpret — :func:`repro.kernels.ops.slab_writeback`)."""
+        idx = jnp.asarray(uniq_pad)
+        return state._replace(
+            h_local=ops.slab_writeback(full_h, idx, state.h_local),
+            g_local=ops.slab_writeback(full_g, idx, state.g_local))
+
     def run(self, state, rounds: int, *,
             metric_fn: Optional[Callable] = None) -> SimResult:
         metric_fn = self._metric_fn(metric_fn)
@@ -194,8 +304,17 @@ class VecFedSim:
             for j in range(length):
                 md[j], mu[j] = round_multipliers(
                     streams[done + j], self.downlink, self.uplink, n)
-            state, ys = self._chunk_fn(length, metric_fn)(
-                state, jnp.asarray(md), jnp.asarray(mu))
+            if self.slab:
+                sels, uniq, loc, md_c, mu_c = self._slab_chunk_xs(
+                    state, length, md, mu)
+                st, full_h, full_g = self._slab_enter(state, uniq)
+                st, ys = self._chunk_fn_slab(length, metric_fn)(
+                    st, jnp.asarray(md_c), jnp.asarray(mu_c),
+                    jnp.asarray(sels), jnp.asarray(loc))
+                state = self._slab_exit(st, uniq, full_h, full_g)
+            else:
+                state, ys = self._chunk_fn(length, metric_fn)(
+                    state, jnp.asarray(md), jnp.asarray(mu))
             parts.append(jax.device_get(ys))       # ONE transfer per chunk
             done += length
         ys = {k: np.concatenate([p[k] for p in parts]) for k in parts[0]}
@@ -379,6 +498,117 @@ class VecFedSim:
         self._compiled[("async", length, metric_fn)] = fn
         return fn
 
+    def _chunk_fn_async_slab(self, length: int, metric_fn) -> Callable:
+        """Async scan body over the chunk slab (DESIGN.md §16): the
+        MethodState carries the (U_pad, d) slab, and the in-flight message
+        ring references SLAB ROWS — a (tau, C, d) ring of raw cohort
+        messages plus a (tau, C) ring of their global ids — instead of the
+        scatter store's (tau, n, d) dense ring.  The deficit is computed
+        by scattering each ring slot back into a transient (n, d) zeros
+        buffer (exact placement, no arithmetic) and reusing the scatter
+        body's masked-sum expression VERBATIM: summing the gathered
+        (tau, C, d) rows directly is NOT bit-safe (XLA CPU's strided
+        multi-accumulator reduction makes the result depend on element
+        position), so the transient rebuild is the price of bit-identity;
+        it is a temp, not a carry, and exists only at tau >= 1.  The
+        per-client clocks (``free``, the (tau+1, n) arrival ring) stay
+        n-shaped — O(n) floats, not O(n·d) — with cohort updates
+        scattered at ``sel``, which is elementwise-identical to the
+        scatter body's where(active, ...) forms."""
+        fn = self._compiled.get(("slab-async", length, metric_fn))
+        if fn is not None:
+            return fn
+        n, d = self.n, int(self.comp.spec.d)
+        c = int(self.substrate.c)
+        schema = self.schema
+        x_bytes = X_BYTES_PER_COORD * d
+        dense_up = float(wire.HEADER_BYTES + 4 * d)
+        tau = int(self.tau)
+        neg_inf = jnp.float32(-jnp.inf)
+        # sampled substrates reject sync_requires_all rules, so the slab
+        # body never sees a coin flush (marina's pipeline_coin_flush)
+        assert not self.rule.pipeline_coin_flush
+
+        def body(carry, xs):
+            if tau >= 1:
+                st, free, ring_a, ring_floor, ring_m, ring_sel, flush = \
+                    carry
+            else:
+                st, free, ring_a, ring_floor, flush = carry
+            m_down_c, m_up_c, sel, loc = xs     # (C,) f32 f32 i32 i32
+            key = st.key                        # pre-step key
+
+            gate = jnp.maximum(ring_floor[0], flush)
+            adv = jnp.maximum(gate, jnp.float32(0.0))
+            free = free - adv
+            ring_a = ring_a - adv
+            ring_floor = ring_floor - adv
+            flush = neg_inf
+
+            if tau >= 1:
+                in_flight = ring_a[1:] > 0.0    # (tau, n)
+                ring_full = jax.vmap(
+                    lambda s, r: jnp.zeros((n, d), jnp.float32)
+                    .at[s].set(r))(ring_sel, ring_m)
+                deficit = jnp.sum(
+                    jnp.where(in_flight[..., None], ring_full, 0.0),
+                    axis=(0, 1)) / jnp.float32(n)
+                new, info = self.method.step_full(
+                    st, None, deficit=deficit, window=(sel, loc))
+            else:
+                new, info = self.method.step_full(st, None,
+                                                  window=(sel, loc))
+            coin = info.coin if info.coin is not None \
+                else jnp.zeros((), bool)
+            if schema.static_count is None:
+                counts = self._bound.cohort_counts(key)          # (C,)
+            else:
+                counts = jnp.full((c,), schema.static_count, jnp.int32)
+            comp_b = schema.header_bytes \
+                + schema.bytes_per_value * counts.astype(jnp.float32)
+            up_b = jnp.where(coin, dense_up, comp_b)
+            free_c = free[sel]
+            dd = self.downlink.latency_s \
+                + x_bytes / self.downlink.bandwidth_Bps * m_down_c
+            a_new = jnp.where(
+                free_c > dd,
+                free_c + self.compute_s + self.uplink.latency_s
+                + up_b / self.uplink.bandwidth_Bps * m_up_c,
+                self.downlink.latency_s
+                + x_bytes / self.downlink.bandwidth_Bps * m_down_c
+                + self.compute_s
+                + self.uplink.latency_s
+                + up_b / self.uplink.bandwidth_Bps * m_up_c)
+            masked = jnp.full((n,), -jnp.inf, jnp.float32).at[sel] \
+                .set(a_new)
+            land = jnp.max(a_new)               # C >= 1 active clients
+            free = free.at[sel].set(a_new)
+
+            ring_a = jnp.concatenate([ring_a[1:], masked[None]], 0)
+            ring_floor = jnp.concatenate([ring_floor[1:], land[None]], 0)
+            if tau >= 1:
+                rows = info.messages.dense().astype(jnp.float32)  # (C, d)
+                ring_m = jnp.concatenate([ring_m[1:], rows[None]], 0)
+                ring_sel = jnp.concatenate([ring_sel[1:], sel[None]], 0)
+
+            ys = {"metric": metric_fn(new), "bits": new.bits_sent,
+                  "coin": coin, "participants": jnp.full((), c, jnp.int32),
+                  "counts_sum": jnp.sum(counts),
+                  "bcast_rel": adv, "land_rel": land}
+            if tau >= 1:
+                out = (new, free, ring_a, ring_floor, ring_m, ring_sel,
+                       flush)
+            else:
+                out = (new, free, ring_a, ring_floor, flush)
+            return out, ys
+
+        def scan_chunk(carry, m_down_c, m_up_c, sels, locs):
+            return jax.lax.scan(body, carry, (m_down_c, m_up_c, sels, locs))
+
+        fn = jax.jit(scan_chunk)
+        self._compiled[("slab-async", length, metric_fn)] = fn
+        return fn
+
     def _run_async(self, state, rounds: int, metric_fn) -> SimResult:
         n, d = self.n, int(self.comp.spec.d)
         tau = int(self.tau)
@@ -390,10 +620,15 @@ class VecFedSim:
         ring_floor = jnp.full((tau + 1,), -jnp.inf, jnp.float32)
         flush = jnp.float32(-jnp.inf)
         if tau >= 1:
-            ring_m = jnp.zeros((tau, n, d), jnp.float32)
-            carry = (state, free, ring_a, ring_floor, ring_m, flush)
-        else:
-            carry = (state, free, ring_a, ring_floor, flush)
+            if self.slab:
+                # slab-row message ring: raw (C, d) cohort rows + their
+                # global ids; zeros scatter to zeros, matching the dense
+                # ring's zeros init bit for bit
+                c = int(self.substrate.c)
+                ring_m = jnp.zeros((tau, c, d), jnp.float32)
+                ring_sel = jnp.zeros((tau, c), jnp.int32)
+            else:
+                ring_m = jnp.zeros((tau, n, d), jnp.float32)
 
         parts = []
         done = 0
@@ -404,11 +639,38 @@ class VecFedSim:
             for j in range(length):
                 md[j], mu[j] = round_multipliers(
                     streams[done + j], self.downlink, self.uplink, n)
-            carry, ys = self._chunk_fn_async(length, metric_fn)(
-                carry, jnp.asarray(md), jnp.asarray(mu))
+            if self.slab:
+                sels, uniq, loc, md_c, mu_c = self._slab_chunk_xs(
+                    state, length, md, mu)
+                st, full_h, full_g = self._slab_enter(state, uniq)
+                if tau >= 1:
+                    carry = (st, free, ring_a, ring_floor, ring_m,
+                             ring_sel, flush)
+                else:
+                    carry = (st, free, ring_a, ring_floor, flush)
+                carry, ys = self._chunk_fn_async_slab(length, metric_fn)(
+                    carry, jnp.asarray(md_c), jnp.asarray(mu_c),
+                    jnp.asarray(sels), jnp.asarray(loc))
+                if tau >= 1:
+                    st, free, ring_a, ring_floor, ring_m, ring_sel, \
+                        flush = carry
+                else:
+                    st, free, ring_a, ring_floor, flush = carry
+                state = self._slab_exit(st, uniq, full_h, full_g)
+            else:
+                if tau >= 1:
+                    carry = (state, free, ring_a, ring_floor, ring_m,
+                             flush)
+                else:
+                    carry = (state, free, ring_a, ring_floor, flush)
+                carry, ys = self._chunk_fn_async(length, metric_fn)(
+                    carry, jnp.asarray(md), jnp.asarray(mu))
+                if tau >= 1:
+                    state, free, ring_a, ring_floor, ring_m, flush = carry
+                else:
+                    state, free, ring_a, ring_floor, flush = carry
             parts.append(jax.device_get(ys))       # ONE transfer per chunk
             done += length
-        state = carry[0]
         ys = {k: np.concatenate([p[k] for p in parts]) for k in parts[0]}
 
         coin = ys["coin"].astype(bool)

@@ -344,10 +344,13 @@ def _headers_u8(fmt: int, nodes: np.ndarray, t: int, d: int,
     :data:`HDR_DTYPE` instead of per-node ``struct.pack`` calls."""
     if nodes.size and int(nodes.max()) > np.iinfo(np.uint16).max:
         # preserve struct.pack('<BBHIII')'s loud overflow instead of
-        # silently wrapping client ids in the u16 node field
+        # silently wrapping client ids in the u16 node field — sampled
+        # campaigns with n > 65535 must encode slot-keyed (pass slots=
+        # to encode_round; slots are bounded by the cohort size C)
         raise ValueError(
             f"node id {int(nodes.max())} exceeds the wire header's uint16 "
-            "node field (65535)")
+            "node field (65535) — slot-key the round (slots=) instead of "
+            "shipping global client ids")
     h = np.empty(nodes.size, HDR_DTYPE)
     h["ver"] = WIRE_VERSION
     h["fmt"] = fmt
@@ -382,9 +385,13 @@ def encode_round(rc, plan: Optional[Plan], msgs, t: int, *,
     synchronization upload.  ``present`` marks Appendix-D participants;
     absent nodes return None (zero bytes).  ``slots`` is the C-of-n
     sampled-cohort map — (n,) int, client -> cohort slot, -1 when
-    unsampled: PermK rows then emit the slot-keyed ``PERMK_SLOT`` record
-    (the permutation partitions d over SLOTS, and the period is C*blk, not
-    n*blk); every other format ignores it.
+    unsampled.  A slot-keyed round writes the SLOT into every record's
+    uint16 node field: slots are bounded by the cohort size C, so the
+    header stays u16-safe at any n (global ids overflow past 65535 —
+    the receiver recovers them from the round's replayable cohort draw,
+    ``fold_in(k_c, COHORT_TAG)``).  PermK rows additionally emit the
+    ``PERMK_SLOT`` record (the permutation partitions d over SLOTS, and
+    the period is C*blk, not n*blk).
 
     Record packing is vectorized numpy (structured header/record arrays +
     one contiguous byte matrix, sliced per node) — byte-identical to the
@@ -404,6 +411,16 @@ def encode_round(rc, plan: Optional[Plan], msgs, t: int, *,
 
     pres = None if present is None else np.asarray(present, bool)
     nodes = np.arange(n) if pres is None else np.nonzero(pres)[0]
+    # slot-keyed cohort: the u16 header field carries the slot (< C) for
+    # EVERY format; ``nodes`` (global) only places buffers in the host-
+    # side per-client list, which has no width limit
+    if slots is None:
+        hdr_nodes = nodes
+    else:
+        hdr_nodes = np.asarray(slots, np.int64)[nodes]
+        if hdr_nodes.size and int(hdr_nodes.min()) < 0:
+            raise ValueError("present client outside the cohort: slots= "
+                             "maps it to -1, nothing to key its header by")
     vals = np.ascontiguousarray(
         np.asarray(msgs.values, np.float32))[nodes]
     sparse = getattr(msgs, "indices", None) is not None
@@ -418,9 +435,8 @@ def encode_round(rc, plan: Optional[Plan], msgs, t: int, *,
         if slots is not None:
             # cohort: the permutation cycles over the C slots (period
             # C*blk) and a client's base offset is its SLOT, not its id
-            slot_arr = np.asarray(slots, np.int64)
-            period = int((slot_arr >= 0).sum()) * blk
-            base = slot_arr[nodes] * blk
+            period = int((np.asarray(slots, np.int64) >= 0).sum()) * blk
+            base = hdr_nodes * blk
         else:
             period = n * blk
             base = nodes * blk
@@ -433,15 +449,15 @@ def encode_round(rc, plan: Optional[Plan], msgs, t: int, *,
             vals = np.where(idx < d, np.take_along_axis(vals, safe, 1),
                             np.float32(0))
         if slots is not None:
-            hdr = _headers_u8(FMT_PERMK_SLOT, nodes, t, d, blk)
+            hdr = _headers_u8(FMT_PERMK_SLOT, hdr_nodes, t, d, blk)
             ext = np.empty(nodes.size, SLOT_EXT_DTYPE)
-            ext["slot"] = slot_arr[nodes].astype(np.uint32)
+            ext["slot"] = hdr_nodes.astype(np.uint32)
             ext["shift"] = shifts
             ext["period"] = period
             ext_u8 = ext.view(np.uint8).reshape(nodes.size,
                                                 PERMK_SLOT_EXT_BYTES)
         else:
-            hdr = _headers_u8(FMT_PERMK, nodes, t, d, blk)
+            hdr = _headers_u8(FMT_PERMK, hdr_nodes, t, d, blk)
             ext = np.empty(nodes.size, EXT_DTYPE)
             ext["shift"] = shifts
             ext["period"] = period
@@ -453,7 +469,8 @@ def encode_round(rc, plan: Optional[Plan], msgs, t: int, *,
     if mode == "shared_coords":
         if not sparse:
             vals = vals[:, shared_support(plan)]
-        hdr = _headers_u8(FMT_SPARSE_SEED, nodes, t, d, vals.shape[1])
+        hdr = _headers_u8(FMT_SPARSE_SEED, hdr_nodes, t, d,
+                          vals.shape[1])
         return _emit_rows(n, nodes, np.hstack([
             hdr, np.ascontiguousarray(vals).view(np.uint8)]))
 
@@ -465,7 +482,8 @@ def encode_round(rc, plan: Optional[Plan], msgs, t: int, *,
         rec = np.empty(idx.shape, REC_DTYPE)
         rec["idx"] = idx.astype(np.uint32)
         rec["val"] = vals
-        hdr = _headers_u8(FMT_SPARSE_IDX, nodes, t, d, idx.shape[1])
+        hdr = _headers_u8(FMT_SPARSE_IDX, hdr_nodes, t, d,
+                          idx.shape[1])
         return _emit_rows(n, nodes, np.hstack([hdr, rec.view(np.uint8)]))
 
     if plan_mask is not None:            # independent Bernoulli: ragged
@@ -477,7 +495,7 @@ def encode_round(rc, plan: Optional[Plan], msgs, t: int, *,
         rec["val"] = vals[keep]
         offs = np.zeros(nodes.size + 1, np.int64)
         np.cumsum(counts, out=offs[1:])
-        hdr = _headers_u8(FMT_SPARSE_IDX, nodes, t, d, counts)
+        hdr = _headers_u8(FMT_SPARSE_IDX, hdr_nodes, t, d, counts)
         out: List[Optional[bytes]] = [None] * n
         for pos, i in enumerate(nodes):
             out[int(i)] = hdr[pos].tobytes() \
@@ -485,7 +503,7 @@ def encode_round(rc, plan: Optional[Plan], msgs, t: int, *,
         return out
 
     # passthrough / dither: dense fp32 rows
-    hdr = _headers_u8(FMT_DENSE, nodes, t, d, d)
+    hdr = _headers_u8(FMT_DENSE, hdr_nodes, t, d, d)
     return _emit_rows(n, nodes, np.hstack([
         hdr, np.ascontiguousarray(vals).view(np.uint8)]))
 

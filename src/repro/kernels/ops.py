@@ -75,6 +75,40 @@ def dasha_mvr_update(grad_new: jax.Array, grad_old: jax.Array, h: jax.Array,
     return back(m), back(hn), back(gln)
 
 
+@functools.partial(jax.jit, static_argnames=("accumulate", "use_kernel"))
+def slab_writeback(full: jax.Array, idx: jax.Array, rows: jax.Array, *,
+                   accumulate: bool = False,
+                   use_kernel: bool | None = None) -> jax.Array:
+    """Write a chunk slab back into the persistent (n, d) store.
+
+    ``idx`` (U,) int32 — sorted-unique global row ids padded with the
+    sentinel ``n`` (dropped); ``rows`` (U, d) — the slab.  On compiled
+    (non-interpret) backends this is the aliased Pallas kernel
+    (:mod:`repro.kernels.slab_writeback`): the store is donated and
+    mutated in place.  Under ``REPRO_PALLAS_INTERPRET`` (this CPU
+    container) the default is XLA's drop-mode scatter — running the
+    interpreter per chunk would serialize U python iterations — and the
+    kernel stays covered by passing ``use_kernel=True`` in the unit
+    tests.  Both paths produce identical bytes (same update, same drop
+    semantics), so store contents never depend on the dispatch."""
+    from repro.kernels.slab_writeback import (DEFAULT_BLOCK_ROWS,
+                                              slab_writeback_pallas)
+    if use_kernel is None:
+        use_kernel = not INTERPRET
+    if not use_kernel:
+        if accumulate:
+            return full.at[idx].add(rows, mode="drop")
+        return full.at[idx].set(rows, mode="drop")
+    n = full.shape[0]
+    u = idx.shape[0]
+    block = min(DEFAULT_BLOCK_ROWS, u)
+    pad = (-u) % block
+    idx = jnp.pad(idx, (0, pad), constant_values=n)
+    rows = jnp.pad(rows, ((0, pad), (0, 0)))
+    return slab_writeback_pallas(full, idx, rows, accumulate=accumulate,
+                                 block_rows=block, interpret=INTERPRET)
+
+
 @functools.partial(jax.jit, static_argnames=("levels",))
 def quantize(x: jax.Array, key: jax.Array, levels: int = 15) -> jax.Array:
     """Unbiased row-wise stochastic quantization of x: (R, C)."""

@@ -1,0 +1,79 @@
+"""Pallas kernel: in-place chunk-slab writeback into the persistent store.
+
+The chunk-resident cohort store (DESIGN.md §16) runs each chunk's scan with
+only the compact (U, d) slab of touched client rows in the carry, then
+writes the slab back into the persistent (n, d) array ONCE per chunk.  On
+backends with buffer donation this writeback should be truly in-place —
+an O(U·d) scatter into the existing store, not an O(n·d) copy-and-update
+— which is exactly what ``input_output_aliases`` expresses: the (n, d)
+store is operand 0 AND output 0, the kernel mutates only the addressed
+rows, and every unaddressed row keeps its bytes because the output buffer
+IS the input buffer.
+
+Index contract: ``idx`` holds each slab row's global client id, sorted
+unique, padded to a static length with the sentinel ``n`` (one past the
+last valid row).  Sentinel rows are dropped by a ``pl.when`` guard, so the
+caller can keep shapes static across chunks regardless of how many rows a
+chunk actually touched.  ``accumulate=True`` switches the row store to a
+read-add-write (scatter-accumulate), for callers that fold partial slabs.
+
+Tiling: the grid walks the slab in ``block_rows`` blocks; the store block
+is the whole (n, d) array (rows are addressed dynamically via ``pl.ds``).
+That holds the store in VMEM on accelerator backends — fine for the
+(U ≤ R·C) slabs this repo ships, and the interpret path (this CPU
+container, ``REPRO_PALLAS_INTERPRET``) has no such limit.  The production
+CPU writeback goes through XLA's scatter in :func:`repro.kernels.ops.
+slab_writeback`; this kernel is the accelerator path and is covered in
+interpret mode by tests/test_slab_store.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 128
+
+
+def slab_writeback_pallas(full: jax.Array, idx: jax.Array, rows: jax.Array,
+                          *, accumulate: bool = False,
+                          block_rows: int = DEFAULT_BLOCK_ROWS,
+                          interpret: bool = True) -> jax.Array:
+    """Scatter ``rows`` (U, d) into ``full`` (n, d) at ``idx`` (U,) int32.
+
+    ``idx`` entries equal to ``n`` (the pad sentinel) are dropped; U must
+    be a multiple of ``block_rows`` (the ops wrapper pads).  Returns the
+    updated store, aliased onto the ``full`` operand.
+    """
+    n, d = full.shape
+    u = idx.shape[0]
+    block_rows = min(block_rows, u)
+    if u % block_rows:
+        raise ValueError(f"slab length {u} not a multiple of block_rows "
+                         f"{block_rows} — pad with the sentinel {n}")
+
+    def kernel(full_ref, idx_ref, rows_ref, out_ref):
+        del full_ref  # aliased: out_ref already holds the store's bytes
+        for j in range(block_rows):
+            i = idx_ref[j]
+
+            @pl.when(i < n)
+            def _store(j=j, i=i):
+                row = rows_ref[pl.ds(j, 1), :]
+                if accumulate:
+                    cur = pl.load(out_ref, (pl.ds(i, 1), slice(None)))
+                    pl.store(out_ref, (pl.ds(i, 1), slice(None)), cur + row)
+                else:
+                    pl.store(out_ref, (pl.ds(i, 1), slice(None)), row)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(pl.cdiv(u, block_rows),),
+        in_specs=[pl.BlockSpec((n, d), lambda i: (0, 0)),
+                  pl.BlockSpec((block_rows,), lambda i: (i,)),
+                  pl.BlockSpec((block_rows, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((n, d), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct(full.shape, full.dtype),
+        input_output_aliases={0: 0},
+        interpret=interpret,
+    )(full, idx, rows)

@@ -164,8 +164,8 @@ class Method(NamedTuple):
                                key=key, t=jnp.zeros((), jnp.int32),
                                bits_sent=jnp.asarray(bits0, jnp.float32))
 
-        def step_full(state: MethodState, data=None, *, deficit=None
-                      ) -> Tuple[MethodState, StepInfo]:
+        def step_full(state: MethodState, data=None, *, deficit=None,
+                      window=None) -> Tuple[MethodState, StepInfo]:
             """One round, returning the wire-observable internals too
             (:class:`StepInfo`).  ``step`` is this with the info dropped —
             same traced body, so observers never fork the math.
@@ -180,7 +180,18 @@ class Method(NamedTuple):
             synchronous engine — the bit-exactness anchor the federated
             simulators' tau=0 parity tests rely on.  Clients are
             unaffected: h/g recursions depend only on the broadcast
-            x-sequence and local state."""
+            x-sequence and local state.
+
+            ``window`` is the slab-store hook (DESIGN.md §16): a
+            ``(sel, loc)`` pair of traced (C,) index vectors replacing
+            the in-jit cohort draw.  ``sel`` must hold the SAME global
+            ids ``round_view(k_c)`` would draw (the campaign driver
+            precomputes them from the stateless key chain) and ``loc``
+            their rows inside the chunk slab that ``state.h_local`` /
+            ``state.g_local`` then hold instead of the (n, d) store —
+            k_c is still split off, so the RNG chain and every drawn
+            plan are unchanged and the round stays bit-identical to
+            the scatter store."""
             key, k_h, k_c, k_coin = jax.random.split(state.key, 4)
             # line 4 (server) + broadcast
             g_vis = state.g if deficit is None \
@@ -192,7 +203,15 @@ class Method(NamedTuple):
             # O(C*d), then scatter back; the full path takes the unsliced
             # branch (round_view returns the substrate itself at C == n),
             # keeping its trace — and its RNG stream — untouched
-            rsub = sub.round_view(k_c) if samples else sub
+            if window is not None:
+                if not samples:
+                    raise ValueError("window= requires a sampled-client "
+                                     "substrate (samples_clients)")
+                rsub = sub.window_view(*window)
+            elif samples:
+                rsub = sub.round_view(k_c)
+            else:
+                rsub = sub
             if rsub is sub:
                 h_prev, g_prev = state.h_local, state.g_local
             else:

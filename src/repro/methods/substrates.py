@@ -26,10 +26,12 @@ key directly (the degenerate tree *is* the flat substrate).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.analysis.tags import COHORT_TAG
 from repro.compress import as_round_compressor
@@ -230,6 +232,137 @@ def cohort_indices(k_round: jax.Array, n: int, c: int) -> jax.Array:
     return jax.random.permutation(k_sel, n)[:c]
 
 
+# ---------------------------------------------------------------------------
+# host-side schedule precompute: the bit-exact permutation head
+# ---------------------------------------------------------------------------
+#
+# jax.random.permutation is a multi-round sort-by-random-u32-keys shuffle
+# (jax._src.random._shuffle: ``num_rounds = ceil(3 ln n / ln(2^32-1))``
+# rounds of ``key, sub = split(key); bits = random_bits(sub, 32, (n,));
+# _, x = lax.sort_key_val(bits, x)`` with is_stable=True).  A full sort is
+# O(n log n) and, at n = 10^5, dominates the sampled round (~67 ms/round on
+# one CPU core) — yet the campaign driver only ever needs the FIRST c
+# entries.  Because the per-round sort is STABLE, sorting by u32 bits is
+# exactly ascending order of the composite u64 key ``(bits << 32) | pos``
+# (position breaks ties), which is collision-free — so the head of the
+# permutation is recoverable by ORDER-STATISTIC SELECTION: the c smallest
+# composite keys of the last round give the output positions, and each
+# earlier round only needs the identity of its k-th smallest key at c given
+# ranks (``np.argpartition`` with a kth vector), O(n) per round instead of
+# a sort.  The threefry bit streams themselves stay in jax (exact), so the
+# result is BIT-IDENTICAL to ``jax.random.permutation(key, n)[:c]`` —
+# asserted once per process per n against the reference (guarding against
+# upstream algorithm drift) and exhaustively in tests/test_slab_store.py.
+
+def _shuffle_num_rounds(n: int) -> int:
+    """Round count of jax's sort-based shuffle for a size-``n`` range."""
+    if n <= 1:
+        return 0
+    u32max = float(np.iinfo(np.uint32).max)
+    return int(np.ceil(3 * np.log(n) / np.log(u32max)))
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def _shuffle_bits(key: jax.Array, n: int, num_rounds: int) -> jax.Array:
+    """The (num_rounds, n) u32 sort-key streams _shuffle would draw."""
+    outs = []
+    for _ in range(num_rounds):
+        key, sub = jax.random.split(key)
+        outs.append(jax.random.bits(sub, (n,), jnp.uint32))
+    return jnp.stack(outs)
+
+
+def _perm_head_from_bits(bits: np.ndarray, c: int) -> np.ndarray:
+    """First ``c`` entries of the stable sort-by-bits shuffle of arange(n).
+
+    Pure numpy selection over the composite keys ``(bits[r] << 32) | pos``;
+    unit-tested against a stable-argsort reference on crafted collision
+    inputs (the composite key makes ties positional, matching
+    ``lax.sort_key_val(..., is_stable=True)``)."""
+    num_rounds, n = bits.shape
+    pos = np.arange(n, dtype=np.uint64)
+    b = bits.astype(np.uint64)
+    # last round: positions of the c smallest composite keys, in key order
+    ck = (b[-1] << np.uint64(32)) | pos
+    idx = np.argpartition(ck, c - 1)[:c] if c < n else np.arange(n)
+    sel = idx[np.argsort(ck[idx], kind="stable")]
+    # walk earlier rounds backwards: the value at rank j of round r is the
+    # index of round r's j-th smallest composite key
+    for r in range(num_rounds - 2, -1, -1):
+        ck = (b[r] << np.uint64(32)) | pos
+        kth = np.unique(sel)
+        part = np.argpartition(ck, kth)
+        sel = part[sel]
+    return sel.astype(np.int32)
+
+
+_PERM_HEAD_VERIFIED: set = set()
+
+
+def permutation_head(key: jax.Array, n: int, c: int) -> np.ndarray:
+    """Host-side ``np.asarray(jax.random.permutation(key, n)[:c])``,
+    bit-identical, via threefry bit replay + O(n) selection (no sort).
+
+    The first call per (process, n) cross-checks a reference permutation
+    so any upstream change to jax's shuffle algorithm fails loudly instead
+    of silently desynchronizing the cohort schedule."""
+    if not 0 < c <= n:
+        raise ValueError(f"need 0 < c <= n, got c={c} n={n}")
+    num_rounds = _shuffle_num_rounds(n)
+    if num_rounds == 0:
+        return np.arange(c, dtype=np.int32)
+    if n not in _PERM_HEAD_VERIFIED:
+        _PERM_HEAD_VERIFIED.add(n)
+        probe = jax.random.PRNGKey(0x5e1ec7)
+        ref = np.asarray(jax.random.permutation(probe, n)[:min(c, n)])
+        got = _perm_head_from_bits(
+            np.asarray(_shuffle_bits(probe, n, num_rounds)), min(c, n))
+        if not np.array_equal(ref, got):
+            raise RuntimeError(
+                "permutation_head disagrees with jax.random.permutation "
+                f"at n={n} — jax's shuffle algorithm changed; fall back to "
+                "the in-jit scatter store")
+    bits = np.asarray(_shuffle_bits(key, n, num_rounds))
+    return _perm_head_from_bits(bits, c)
+
+
+@jax.jit
+def gather_slab_rows(full: jax.Array, idx: jax.Array) -> jax.Array:
+    """Slab gather: rows of ``full`` at ``idx``; the pad sentinel (== n,
+    one past the end) reads as zeros and is never addressed by a loc."""
+    return jnp.take(full, idx, axis=0, mode="fill", fill_value=0)
+
+
+def slab_layout(sels: np.ndarray, n: int):
+    """The chunk's slab layout from its (length, C) cohort schedule.
+
+    Returns ``(uniq_pad, loc)``: ``uniq_pad`` (U_pad,) int32 — the sorted
+    union of touched global rows, padded to the STATIC length
+    ``U_pad = min(length*C, n)`` with the sentinel ``n`` so every chunk of
+    the same length compiles once; ``loc`` (length, C) int32 — each
+    round's cohort as slab-row indices (``uniq_pad[loc[t]] == sels[t]``).
+    """
+    length, c = sels.shape
+    u_pad = min(length * c, n)
+    uniq = np.unique(sels)
+    loc = np.searchsorted(uniq, sels).astype(np.int32)
+    uniq_pad = np.full((u_pad,), n, np.int32)
+    uniq_pad[:uniq.size] = uniq
+    return uniq_pad, loc
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def _cohort_key_chain(state_key: jax.Array, length: int) -> jax.Array:
+    """Replay the engine's per-round ``split(key, 4)`` chain for ``length``
+    rounds, returning the COHORT_TAG-folded cohort-draw keys (length, ...)
+    — the observer-side contract of :meth:`SampledFlatSubstrate.
+    round_cohort`, batched."""
+    def step(k, _):
+        ks = jax.random.split(k, 4)
+        return ks[0], jax.random.fold_in(ks[2], COHORT_TAG)
+    return jax.lax.scan(step, state_key, None, length=length)[1]
+
+
 def _rows_stoch_grad(problem, key, x, batch, rows):
     """Row-restricted ``StochasticProblem.stoch_grad``: per-client keys stay
     CLIENT-ID keyed (``split(key, n)[rows]``), so the cohort draws the same
@@ -267,18 +400,30 @@ class _CohortView:
     persistent.  ``scatter_nodes`` writes the cohort rows back; unsampled
     rows FREEZE (an offline cross-device client computes nothing — unlike
     the Appendix-D wrapper, where every client refreshes h locally and only
-    the transmission is coin-gated)."""
+    the transmission is coin-gated).
 
-    def __init__(self, base: "SampledFlatSubstrate", sel: jax.Array):
+    Under the chunk-resident slab store (DESIGN.md §16) the view carries a
+    second index vector ``loc``: ``sel`` stays the GLOBAL client ids (every
+    oracle draw, data gather and participation mask is client-id keyed so
+    the cohort computes exactly what it would under the scatter store),
+    while ``gather_nodes`` / ``scatter_nodes`` address ``loc`` — the
+    cohort's rows inside the compact (U, d) slab that replaces the (n, d)
+    arrays in the scan carry."""
+
+    def __init__(self, base: "SampledFlatSubstrate", sel: jax.Array,
+                 loc: Optional[jax.Array] = None):
         self.base = base
         self.sel = sel
+        self.loc = loc
 
     # -- node-axis windowing ----------------------------------------------
     def gather_nodes(self, per_node):
-        return per_node[self.sel]
+        idx = self.sel if self.loc is None else self.loc
+        return per_node[idx]
 
     def scatter_nodes(self, full, rows):
-        return full.at[self.sel].set(rows)
+        idx = self.sel if self.loc is None else self.loc
+        return full.at[idx].set(rows)
 
     def _rows_problem(self):
         """The finite-sum problem restricted to the cohort's data rows."""
@@ -415,6 +560,14 @@ class SampledFlatSubstrate(FlatSubstrate):
             return self
         return _CohortView(self, cohort_indices(k_round, self.n, self.c))
 
+    def window_view(self, sel: jax.Array, loc: jax.Array) -> _CohortView:
+        """The slab-store round window (DESIGN.md §16): ``sel`` is the
+        round's global cohort — the SAME values :meth:`round_view` would
+        draw, precomputed outside the jit by :meth:`cohort_schedule` —
+        and ``loc`` its rows inside the chunk slab, which gather/scatter
+        address instead of the (n, d) store."""
+        return _CohortView(self, sel, loc)
+
     def round_cohort(self, state_key: jax.Array) -> jax.Array:
         """Recover the round's cohort from a MethodState key (the engine
         derives k_c = split(key, 4)[2]) — observer-side, for the federated
@@ -422,16 +575,39 @@ class SampledFlatSubstrate(FlatSubstrate):
         k_c = jax.random.split(state_key, 4)[2]
         return cohort_indices(k_c, self.n, self.c)
 
+    def cohort_schedule(self, state_key: jax.Array,
+                        length: int) -> np.ndarray:
+        """The next ``length`` rounds' cohorts, (length, c) int32 on host.
+
+        Replays the engine's stateless ``split(key, 4)`` chain from
+        ``state_key`` (one jitted scan), then recovers each round's
+        ``permutation(fold_in(k_c, COHORT_TAG), n)[:c]`` through the
+        selection-based :func:`permutation_head` — bit-identical to what
+        :meth:`round_view` draws in-jit, at O(n) instead of O(n log n)
+        per round.  This is what lets the slab store gather each chunk's
+        touched rows BEFORE the scan (DESIGN.md §16)."""
+        keys = jax.device_get(_cohort_key_chain(state_key, int(length)))
+        sels = np.empty((int(length), self.c), np.int32)
+        for j in range(int(length)):
+            sels[j] = permutation_head(keys[j], self.n, self.c)
+        return sels
+
+    def cohort_counts(self, state_key):
+        """(c,) per-cohort Bernoulli wire counts — the slab-body form of
+        :meth:`round_wire_counts` (same plan draw, no (n,) scatter)."""
+        k_c = jax.random.split(state_key, 4)[2]
+        plan = self.cohort_rc.plan(k_c)
+        if plan.mask is None:
+            raise ValueError("cohort_counts is only defined for mask "
+                             "(Bernoulli) plans")
+        return jnp.sum(plan.mask != 0, axis=1).astype(jnp.int32)
+
     def round_wire_counts(self, state_key):
         if not self.samples_clients:
             return FlatSubstrate.round_wire_counts(self, state_key)
         k_c = jax.random.split(state_key, 4)[2]
         sel = cohort_indices(k_c, self.n, self.c)
-        plan = self.cohort_rc.plan(k_c)
-        if plan.mask is None:
-            raise ValueError("round_wire_counts is only defined for mask "
-                             "(Bernoulli) plans")
-        cnt = jnp.sum(plan.mask != 0, axis=1).astype(jnp.int32)
+        cnt = self.cohort_counts(state_key)
         return jnp.zeros((self.n,), jnp.int32).at[sel].set(cnt)
 
 

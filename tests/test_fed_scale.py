@@ -222,6 +222,54 @@ def test_sampled_step_is_o_of_c_not_n():
         assert flops < 0.2 * flops_full, (flops, flops_full)
 
 
+def _slab_chunk_audit_args(n, c=64, d=64, chunk=16):
+    """A VecFedSim slab chunk function + representative traced inputs —
+    the compiled program the tightened CI memory guard audits."""
+    from repro.methods.substrates import slab_layout
+
+    prob = _problem(n, m=2, d=d)
+    rc = make_round_compressor("randk", d, c, k=8, backend="sparse")
+    sub = SampledFlatSubstrate(prob, n, d, c=c)
+    sim = VecFedSim("dasha", rc, sub,
+                    Hyper(gamma=0.01, a=0.1, variant="dasha"), chunk=chunk)
+    st = sim.init(jnp.zeros(d), jax.random.PRNGKey(1))
+    sels = sub.cohort_schedule(st.key, chunk)
+    uniq, loc = slab_layout(sels, n)
+    st_slab, _, _ = sim._slab_enter(st, uniq)
+    metric = lambda s: jnp.sum(jnp.square(s.g))  # noqa: E731
+    fn = sim._chunk_fn_slab(chunk, metric)
+    ones = jnp.ones((chunk, c), jnp.float32)
+    args = (st_slab, ones, ones, jnp.asarray(sels), jnp.asarray(loc))
+    return fn, args, uniq
+
+
+def test_slab_chunk_scan_is_free_of_n_sized_outputs_and_carry():
+    """The tightened CI memory guard (n=4096, DESIGN.md §16): on the
+    chunk-resident store the compiled chunk scan materializes ZERO
+    (n, d)-sized equation outputs — the scatter path's per-round budget
+    of 2 persistent-state scatters drops to 0, the O(n·d) copy amortized
+    into one gather + one writeback per CHUNK outside this program — and
+    the scan carry is slab-sized: bounded by the two (U_pad, d) state
+    slabs plus O(d) vectors, INDEPENDENT of n at fixed (R, C, d)."""
+    n, c, d, chunk = 4096, 64, 64, 16
+    fn, args, uniq = _slab_chunk_audit_args(n, c, d, chunk)
+    # "large" = a full (n, d) state buffer; the slab program holds none
+    jaxpr_audit.assert_large_outputs(fn, *args, max_big=0,
+                                     min_bytes=n * d * 4)
+    reports = jaxpr_audit.scan_carry_report(fn, *args)
+    assert reports, "chunk fn lost its lax.scan"
+    carry = max(r.carry_bytes for r in reports)
+    u_pad = uniq.size
+    assert u_pad == min(chunk * c, n)
+    # two state slabs + generous O(d) slack for x/g/h/momenta/scalars
+    assert carry <= 2 * u_pad * d * 4 + 16 * d * 4 + 4096, \
+        (carry, u_pad)
+    # n-independence: double n at fixed (R, C, d) — same carry bytes
+    fn2, args2, _ = _slab_chunk_audit_args(2 * n, c, d, chunk)
+    reports2 = jaxpr_audit.scan_carry_report(fn2, *args2)
+    assert max(r.carry_bytes for r in reports2) == carry
+
+
 # ---------------------------------------------------------------------------
 # vectorized simulator == heap oracle
 # ---------------------------------------------------------------------------

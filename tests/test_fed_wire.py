@@ -139,8 +139,10 @@ def test_permk_slice_header_reconstructs_partition():
 def test_permk_slot_header_reconstructs_cohort_partition():
     """The slot-keyed PERMK_SLOT record (C-of-n sampled cohorts): the
     (slot, shift, period) header regenerates the cohort block — the
-    permutation partitions d over SLOTS with period c*blk, so the client
-    id in the header plays no role in the support."""
+    permutation partitions d over SLOTS with period c*blk.  Slot-keyed
+    rounds put the SLOT in the u16 node field too (global ids overflow
+    u16 past 65535; the cohort draw is replayable host-side), so the
+    header node never names the client."""
     n, d, c = 4, 12, 2
     blk = d // c
     period = c * blk
@@ -150,19 +152,19 @@ def test_permk_slot_header_reconstructs_cohort_partition():
     slots[sel] = np.arange(c)
     vals = np.arange(c * blk, dtype=np.float32).reshape(c, blk) + 0.25
     for s, i in enumerate(sel):
-        buf = wire.encode_permk_slot(int(i), 2, d, s, shift, period,
+        buf = wire.encode_permk_slot(s, 2, d, s, shift, period,
                                      vals[s])
         assert len(buf) == wire.HEADER_BYTES \
             + wire.PERMK_SLOT_EXT_BYTES + 4 * blk
         m = wire.decode(buf)
         assert m.fmt == wire.FMT_PERMK_SLOT
-        assert m.node == int(i) and m.slot == s and m.d == d
+        assert m.node == s and m.slot == s and m.d == d
         exp = (s * blk + np.arange(blk) - shift) % period
         assert np.array_equal(m.indices, exp)
         assert m.values.tobytes() == vals[s].tobytes()
     # the two slots partition [0, period): disjoint and complete
     all_idx = np.concatenate([
-        wire.decode(wire.encode_permk_slot(int(i), 2, d, s, shift,
+        wire.decode(wire.encode_permk_slot(s, 2, d, s, shift,
                                            period, vals[s])).indices
         for s, i in enumerate(sel)])
     assert len(np.unique(all_idx)) == period
@@ -202,9 +204,48 @@ def test_vectorized_permk_slot_matches_scalar_encoder():
         if not active[i]:
             assert got[i] is None
         else:
+            # slot-keyed: the u16 node field carries the SLOT, not the
+            # global id (u16-safe at any n; the cohort is replayable)
             s = int(slots[i])
             assert got[i] == wire.encode_permk_slot(
-                i, 6, d, s, shift, period, vals[i])
+                s, 6, d, s, shift, period, vals[i])
+
+
+def test_slot_keyed_headers_are_u16_safe_beyond_65535_clients():
+    """Sampled campaigns at n > 65535: a global client id overflows the
+    header's u16 node field (loud ValueError, never a silent wrap), and
+    the slot-keyed round encodes for EVERY format — the node field
+    carries the cohort slot (< C), the global id being recoverable from
+    the round's replayable cohort draw."""
+
+    class Msgs:
+        def __init__(self, values, indices=None):
+            self.values = values
+            self.indices = indices
+
+    n, d, k, c = 70_000, 8, 2, 3
+    rc = make_round_compressor("randk", d, n, k=k, backend="sparse")
+    sel = np.array([7, 66_000, 69_999])      # ids past the u16 ceiling
+    vals = np.zeros((n, k), np.float32)
+    idx = np.zeros((n, k), np.int32)
+    vals[sel] = np.arange(c * k, dtype=np.float32).reshape(c, k) + 0.5
+    idx[sel] = np.arange(c * k).reshape(c, k) % d
+    present = np.zeros(n, bool)
+    present[sel] = True
+
+    with pytest.raises(ValueError, match="uint16"):
+        wire.encode_round(rc, None, Msgs(vals, idx), 0, present=present)
+
+    slots = np.full(n, -1, np.int64)
+    slots[sel] = np.arange(c)
+    bufs = wire.encode_round(rc, None, Msgs(vals, idx), 0,
+                             present=present, slots=slots)
+    assert sum(b is not None for b in bufs) == c
+    for s, i in enumerate(sel):
+        m = wire.decode(bufs[i])             # list slot stays the CLIENT
+        assert m.node == s                   # header field is the SLOT
+        assert np.array_equal(m.indices, idx[i])
+        assert m.values.tobytes() == vals[i].tobytes()
 
 
 def test_topk_content_defined_support():
@@ -388,7 +429,9 @@ def test_golden_round_bytes():
         "dense": "7727e21c73665e2c",
         "bernoulli": "ad82688a8ef65e87",
         "permk": "69fd8500bb742e6a",
-        "permk_slot": "455aadd55d9ae46b",
+        # slot-keyed headers: node field = cohort slot (u16-safe at any
+        # n); re-frozen when the global-id node field was retired
+        "permk_slot": "b9726eec76ba8ec2",
         "coin": "9994ec026541d158",
     }
     assert got == expected, got
