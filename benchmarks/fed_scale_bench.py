@@ -164,22 +164,29 @@ def sim_throughput() -> List[Dict]:
     return rows
 
 
+def _sampled_sim(n: int, c: int):
+    """A DASHA sampled-cohort VecFedSim ready to run (shared by the
+    sampled-campaign and obs-overhead experiments)."""
+    prob = _problem(n)
+    sub = SampledFlatSubstrate(prob, n, D, c=c)
+    rc = make_round_compressor("randk", D, n, k=K, backend="sparse")
+    hp = Hyper.from_theory(
+        "dasha", sub.with_compressor(rc).effective_omega(), n,
+        L=float(jnp.mean(jnp.sum(prob.features ** 2, -1)) * 2),
+        gamma_mult=8)
+    up, down = _links()
+    vec = VecFedSim("dasha", rc, sub, hp, uplink=up, downlink=down,
+                    seed=SEED)
+    st = vec.init(jnp.zeros(D), jax.random.PRNGKey(1))
+    metric = lambda s: jnp.sum(jnp.square(s.g))  # noqa: E731
+    return vec, st, metric
+
+
 def sampled_campaigns() -> List[Dict]:
     """Experiment 2: big-n sampled-cohort campaigns + structural scaling."""
     rows = []
     for n, c, rounds in SAMPLED_RUNS:
-        prob = _problem(n)
-        sub = SampledFlatSubstrate(prob, n, D, c=c)
-        rc = make_round_compressor("randk", D, n, k=K, backend="sparse")
-        hp = Hyper.from_theory(
-            "dasha", sub.with_compressor(rc).effective_omega(), n,
-            L=float(jnp.mean(jnp.sum(prob.features ** 2, -1)) * 2),
-            gamma_mult=8)
-        up, down = _links()
-        vec = VecFedSim("dasha", rc, sub, hp, uplink=up, downlink=down,
-                        seed=SEED)
-        st = vec.init(jnp.zeros(D), jax.random.PRNGKey(1))
-        metric = lambda s: jnp.sum(jnp.square(s.g))  # noqa: E731
+        vec, st, metric = _sampled_sim(n, c)
         t0 = time.perf_counter()
         res = vec.run(st, rounds, metric_fn=metric)
         wall = time.perf_counter() - t0
@@ -215,6 +222,40 @@ def sampled_campaigns() -> List[Dict]:
               f"{rows[-1]['xla_temp_bytes']}B vs state "
               f"{rows[-1]['state_bytes_n_d']}B")
     return rows
+
+
+def obs_overhead() -> Dict:
+    """Experiment 6 (DESIGN.md §17 gate): attaching a metrics-only
+    observability handle to a warmed sampled campaign must add ZERO
+    backend compiles (obs never touches traced code) and < 3%
+    wall-clock on the gated case (n = 10^4 in full mode).
+
+    Both arms time the identical warmed campaign (best of ``reps``), so
+    the fraction isolates the host-side cost of the ``if h`` guards plus
+    the per-chunk/per-campaign metric recording."""
+    from repro.obs import MemorySink, Obs
+
+    n, c, rounds = SAMPLED_RUNS[0]
+    vec, st, metric = _sampled_sim(n, c)
+    vec.run(st, rounds, metric_fn=metric)     # warm the chunk cache
+    reps = max(2, REPS)
+    plain_s = _best(lambda: vec.run(st, rounds, metric_fn=metric), reps)
+    with recompile.watch(f"obs_n{n}") as region:
+        obs_s = _best(
+            lambda: vec.run(st, rounds, metric_fn=metric,
+                            obs=Obs.metrics_only(MemorySink())), reps)
+    frac = max(0.0, obs_s / plain_s - 1.0)
+    row = {
+        "n": n, "c": c, "rounds": rounds,
+        "plain_best_s": round(plain_s, 4),
+        "obs_best_s": round(obs_s, 4),
+        "obs_overhead_frac": round(frac, 4),
+        "obs_steady_state_compiles": region.count,
+        "ok_lt_3pct": bool(frac < 0.03),
+    }
+    print(f"[fed_scale] obs overhead n={n}: plain {plain_s:.2f}s obs "
+          f"{obs_s:.2f}s frac {frac:.4f} compiles {region.count}")
+    return row
 
 
 def carry_floor() -> Dict:
@@ -389,6 +430,11 @@ def run() -> List[Dict]:
     rows.append(dict(blank, bench="fed_scale_no_sync",
                      n=report["no_sync"]["n"],
                      ok=report["no_sync"]["no_sync_advantage_ok"]))
+    rows.append(dict(blank, bench="fed_scale_obs_overhead",
+                     n=report["obs_overhead"]["n"],
+                     c=report["obs_overhead"]["c"],
+                     ok=report["obs_overhead_lt_3pct"]
+                     and report["obs_steady_state_compile_free"]))
     rows.append(dict(blank, bench="fed_scale_payload",
                      ok=report["payload"]["payload_reconciles"]))
     return rows
@@ -398,6 +444,7 @@ def report_dict() -> Dict:
     jax.config.update("jax_platforms", "cpu")
     thr = sim_throughput()
     sampled = sampled_campaigns()
+    ovh = obs_overhead()
     floor = carry_floor()
     adv = no_sync_advantage()
     payload = payload_reconciliation()
@@ -427,6 +474,10 @@ def report_dict() -> Dict:
         "sampled_campaigns": sampled,
         "sampled_temp_memory_scales_in_c": bool(sampled_ok),
         "sampled_steady_state_recompile_free": bool(recompile_free),
+        "obs_overhead": ovh,
+        "obs_overhead_lt_3pct": ovh["ok_lt_3pct"],
+        "obs_steady_state_compile_free":
+            ovh["obs_steady_state_compiles"] == 0,
         "carry_floor": floor,
         "no_sync": adv,
         "payload": payload,
@@ -446,6 +497,10 @@ def report_dict() -> Dict:
             "warmed sampled campaign triggered backend compiles"
         assert floor["recompile_free"], \
             "warmed slab campaign triggered backend compiles"
+        assert report["obs_steady_state_compile_free"], \
+            "obs-enabled campaign triggered backend compiles"
+        assert ovh["ok_lt_3pct"], \
+            f"obs overhead {ovh['obs_overhead_frac']} >= 3% wall-clock"
     return report
 
 

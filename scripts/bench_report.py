@@ -1,0 +1,290 @@
+#!/usr/bin/env python
+"""Bench trajectory report + regression gate (DESIGN.md §17).
+
+Loads every checked-in ``BENCH_*.json`` produced by ``benchmarks/``,
+extracts a declarative set of headline metrics and claim gates, and
+
+* renders a markdown trend table (current vs the recorded baseline),
+* writes the machine-readable snapshot ``BENCH_trajectory.json``,
+* in ``--check`` mode exits nonzero when a gate that was recorded True
+  is now False (a paper claim regressed) or a tracked metric moved past
+  its slack in the losing direction.
+
+The SPEC below is the single source of truth for what "the benches got
+worse" means: each metric names one JSON path, a direction, and a
+relative slack (None = informational, never gated — used for
+timer-noisy or environment-bound numbers we still want plotted).
+Simulated-time quantities are deterministic under the recorded seeds,
+so their slacks are tight; host wall-clock throughputs get wide slacks
+because CI containers differ.
+
+Usage::
+
+    python scripts/bench_report.py                # report + check
+    python scripts/bench_report.py --write        # refresh the baseline
+    python scripts/bench_report.py --check        # CI: exit 1 on regress
+    python scripts/bench_report.py --markdown BENCH_TREND.md
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+TRAJECTORY = "BENCH_trajectory.json"
+SCHEMA_VERSION = 1
+
+#: (name, file, path, direction, relative slack | None=informational)
+SPEC: Sequence[Tuple[str, str, Tuple, str, Optional[float]]] = (
+    # host wall-clock throughputs: wide slack, containers differ
+    ("fed_scale.transport_speedup@nmax", "BENCH_fed_scale.json",
+     ("sim_throughput", -1, "transport_speedup"), "higher", 0.5),
+    ("fed_scale.campaign_speedup@nmax", "BENCH_fed_scale.json",
+     ("sim_throughput", -1, "campaign_speedup"), "higher", 0.5),
+    ("fed_scale.sampled_rounds_per_s@n0", "BENCH_fed_scale.json",
+     ("sampled_campaigns", 0, "rounds_per_s"), "higher", 0.5),
+    ("fed_scale.carry_floor_rounds_per_s@nmax", "BENCH_fed_scale.json",
+     ("carry_floor", "runs", -1, "rounds_per_s"), "higher", 0.5),
+    ("fed_scale.obs_overhead_frac", "BENCH_fed_scale.json",
+     ("obs_overhead", "obs_overhead_frac"), "lower", None),
+    ("driver.speedup@case0", "BENCH_driver.json",
+     ("cases", 0, "speedup"), "higher", 0.5),
+    # simulated-time quantities: deterministic under the recorded seed
+    ("fed.no_sync_gap_s@sigma_max", "BENCH_fed.json",
+     ("straggler", "marina_minus_dasha_s", -1), "higher", 0.05),
+    ("async.wall_clock_s@tau_max", "BENCH_async.json",
+     ("tau_sweep", "wall_clock_s", -1), "lower", 0.05),
+    ("async.advantage_gap_s@sigma_max", "BENCH_async.json",
+     ("severity", "advantage_gap_s", "dasha", -1), "higher", 0.05),
+)
+
+#: claim gates: booleans that, once recorded True, must stay True
+GATES: Sequence[Tuple[str, str, Tuple]] = (
+    ("fed_scale.transport_ge_10x", "BENCH_fed_scale.json",
+     ("transport_speedup_ge_10x_at_n_ge_1024",)),
+    ("fed_scale.sampled_temp_memory_scales_in_c", "BENCH_fed_scale.json",
+     ("sampled_temp_memory_scales_in_c",)),
+    ("fed_scale.sampled_recompile_free", "BENCH_fed_scale.json",
+     ("sampled_steady_state_recompile_free",)),
+    ("fed_scale.obs_overhead_lt_3pct", "BENCH_fed_scale.json",
+     ("obs_overhead_lt_3pct",)),
+    ("fed_scale.obs_compile_free", "BENCH_fed_scale.json",
+     ("obs_steady_state_compile_free",)),
+    ("fed_scale.carry_floor_recompile_free", "BENCH_fed_scale.json",
+     ("carry_floor", "recompile_free")),
+    ("fed_scale.carry_floor_n1e5_ge_4x_scatter", "BENCH_fed_scale.json",
+     ("carry_floor", "n1e5_ge_4x_recorded_scatter")),
+    ("fed_scale.carry_floor_n1e5_within_2x_n1e4", "BENCH_fed_scale.json",
+     ("carry_floor", "n1e5_within_2x_of_recorded_n1e4")),
+    ("fed_scale.no_sync_advantage", "BENCH_fed_scale.json",
+     ("no_sync", "no_sync_advantage_ok")),
+    ("fed_scale.payload_reconciles", "BENCH_fed_scale.json",
+     ("payload", "payload_reconciles")),
+    ("fed.no_sync_advantage", "BENCH_fed.json",
+     ("straggler", "no_sync_advantage_ok")),
+    ("fed.payload_reconciles", "BENCH_fed.json", ("payload_reconciles",)),
+    ("async.dasha_async_strictly_faster", "BENCH_async.json",
+     ("severity", "dasha_async_strictly_faster")),
+    ("async.advantage_widens_with_severity", "BENCH_async.json",
+     ("severity", "advantage_widens_with_severity")),
+    ("async.bytes_bit_identical_vs_barrier", "BENCH_async.json",
+     ("severity", "bytes_up_bit_identical_async_vs_barrier")),
+    ("async.tau_monotone_nonincreasing", "BENCH_async.json",
+     ("tau_sweep", "monotone_nonincreasing")),
+    ("async.equivalence", "BENCH_async.json", ("equivalence", "ok")),
+    ("async.advantage", "BENCH_async.json", ("async_advantage_ok",)),
+    ("async.payload_reconciles", "BENCH_async.json",
+     ("payload_reconciles",)),
+    ("driver.steady_state_recompile_free", "BENCH_driver.json",
+     ("steady_state_recompile_free",)),
+)
+
+
+def _get(obj: Any, path: Tuple) -> Any:
+    for p in path:
+        obj = obj[p]
+    return obj
+
+
+def collect(dirpath: str) -> Dict[str, Any]:
+    """Extract every SPEC metric and GATES boolean from the BENCH jsons
+    under ``dirpath``.  Absent files or paths are recorded under
+    ``missing`` rather than raising — a partial bench refresh (e.g. a
+    CI smoke that only re-ran one bench) still reports."""
+    cache: Dict[str, Any] = {}
+
+    def load(fname: str) -> Optional[Any]:
+        if fname not in cache:
+            path = os.path.join(dirpath, fname)
+            try:
+                with open(path) as f:
+                    cache[fname] = json.load(f)
+            except (OSError, json.JSONDecodeError):
+                cache[fname] = None
+        return cache[fname]
+
+    out: Dict[str, Any] = {"schema": SCHEMA_VERSION, "metrics": {},
+                           "gates": {}, "missing": []}
+    for name, fname, path, direction, slack in SPEC:
+        doc = load(fname)
+        try:
+            val = float(_get(doc, path))
+        except (TypeError, KeyError, IndexError, ValueError):
+            out["missing"].append(name)
+            continue
+        out["metrics"][name] = {"value": val, "direction": direction,
+                                "slack": slack, "file": fname}
+    for name, fname, path in GATES:
+        doc = load(fname)
+        try:
+            val = bool(_get(doc, path))
+        except (TypeError, KeyError, IndexError):
+            out["missing"].append(name)
+            continue
+        out["gates"][name] = {"value": val, "file": fname}
+    summary = load("BENCH_summary.json")
+    if summary is not None:
+        out["bench_summary"] = summary
+    return out
+
+
+def check(current: Dict, baseline: Dict) -> List[str]:
+    """Regressions of ``current`` against the recorded ``baseline``:
+    gates that flipped True->False (or vanished), and gated metrics
+    that moved past their slack in the losing direction."""
+    failures = []
+    for name, rec in baseline.get("gates", {}).items():
+        if not rec["value"]:
+            continue    # never recorded as holding: nothing to protect
+        cur = current.get("gates", {}).get(name)
+        if cur is None:
+            failures.append(f"gate {name}: recorded True, now MISSING "
+                            f"({rec['file']})")
+        elif not cur["value"]:
+            failures.append(f"gate {name}: recorded True, now False "
+                            f"({rec['file']})")
+    for name, rec in baseline.get("metrics", {}).items():
+        slack = rec.get("slack")
+        if slack is None:
+            continue    # informational
+        cur = current.get("metrics", {}).get(name)
+        if cur is None:
+            failures.append(f"metric {name}: recorded "
+                            f"{rec['value']}, now MISSING ({rec['file']})")
+            continue
+        base, now = rec["value"], cur["value"]
+        if rec["direction"] == "higher":
+            floor = base * (1.0 - slack)
+            if now < floor:
+                failures.append(
+                    f"metric {name}: {now:g} < floor {floor:g} "
+                    f"(recorded {base:g}, slack {slack:.0%})")
+        else:
+            ceil = base * (1.0 + slack)
+            if now > ceil:
+                failures.append(
+                    f"metric {name}: {now:g} > ceiling {ceil:g} "
+                    f"(recorded {base:g}, slack {slack:.0%})")
+    return failures
+
+
+def _delta(direction: str, base: float, now: float) -> str:
+    if base == 0:
+        return "n/a"
+    pct = (now - base) / abs(base) * 100.0
+    good = pct >= 0 if direction == "higher" else pct <= 0
+    return f"{pct:+.1f}%" + ("" if good else " (worse)")
+
+
+def render_markdown(current: Dict, baseline: Optional[Dict],
+                    failures: Sequence[str]) -> str:
+    lines = ["# Bench trajectory", ""]
+    summary = current.get("bench_summary")
+    if summary:
+        ran = [b["name"] for b in summary.get("benches", [])]
+        bad = [b["name"] for b in summary.get("benches", [])
+               if not b.get("ok", True)]
+        lines += [f"Last `benchmarks/run.py`: {len(ran)} benches"
+                  + (f", FAILED: {', '.join(bad)}" if bad else ", all ok"),
+                  ""]
+    lines += ["| metric | recorded | current | delta | gated |",
+              "|---|---|---|---|---|"]
+    base_m = (baseline or {}).get("metrics", {})
+    for name, cur in sorted(current.get("metrics", {}).items()):
+        rec = base_m.get(name)
+        gated = "—" if cur["slack"] is None else f"±{cur['slack']:.0%}"
+        if rec is None:
+            lines.append(f"| {name} | — | {cur['value']:g} | new | "
+                         f"{gated} |")
+        else:
+            lines.append(
+                f"| {name} | {rec['value']:g} | {cur['value']:g} | "
+                f"{_delta(cur['direction'], rec['value'], cur['value'])} "
+                f"| {gated} |")
+    lines += ["", "| gate | recorded | current |", "|---|---|---|"]
+    base_g = (baseline or {}).get("gates", {})
+    for name, cur in sorted(current.get("gates", {}).items()):
+        rec = base_g.get(name)
+        lines.append(f"| {name} | "
+                     f"{'—' if rec is None else rec['value']} | "
+                     f"{cur['value']} |")
+    if current.get("missing"):
+        lines += ["", "Missing (file absent or path not found): "
+                  + ", ".join(sorted(set(current["missing"])))]
+    lines += ["", ("**REGRESSIONS:**\n" + "\n".join(
+        f"- {f}" for f in failures)) if failures else "No regressions."]
+    return "\n".join(lines) + "\n"
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--dir", default=ROOT,
+                    help="directory holding BENCH_*.json (default: repo)")
+    ap.add_argument("--baseline", default=None,
+                    help=f"baseline path (default: <dir>/{TRAJECTORY})")
+    ap.add_argument("--write", action="store_true",
+                    help="refresh the baseline from the current jsons")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 on regression vs the baseline")
+    ap.add_argument("--markdown", default=None,
+                    help="also write the trend table to this path")
+    args = ap.parse_args(argv)
+
+    base_path = args.baseline or os.path.join(args.dir, TRAJECTORY)
+    current = collect(args.dir)
+    baseline = None
+    if os.path.exists(base_path):
+        with open(base_path) as f:
+            baseline = json.load(f)
+
+    failures = check(current, baseline) if baseline is not None else []
+    md = render_markdown(current, baseline, failures)
+    if args.markdown:
+        with open(args.markdown, "w") as f:
+            f.write(md)
+    print(md, end="")
+
+    if args.write:
+        with open(base_path, "w") as f:
+            json.dump(current, f, indent=2)
+            f.write("\n")
+        print(f"[bench_report] wrote baseline {base_path} "
+              f"({len(current['metrics'])} metrics, "
+              f"{len(current['gates'])} gates)")
+        return 0
+    if baseline is None:
+        print(f"[bench_report] no baseline at {base_path}; run with "
+              f"--write to record one", file=sys.stderr)
+        return 1 if args.check else 0
+    if failures:
+        print(f"[bench_report] {len(failures)} regression(s)",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -30,11 +30,30 @@ _COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
 
 _EVENTS: List[str] = []      # append-only log of compile events
 _INSTALLED = False
+#: external observers of compile events — ``repro.obs`` subscribes a
+#: timeline recorder here so campaigns get a compiler track for free
+_SUBSCRIBERS: List[Callable[[str, float], None]] = []
 
 
 def _listener(event: str, duration: float = 0.0, **kwargs: Any) -> None:
     if event == _COMPILE_EVENT:
         _EVENTS.append(event)
+        for fn in list(_SUBSCRIBERS):
+            fn(event, duration)
+
+
+def subscribe(fn: Callable[[str, float], None]) -> Callable[[str, float],
+                                                            None]:
+    """Register ``fn(event, duration_s)`` to run on every backend
+    compile; returns ``fn`` (pass it to :func:`unsubscribe`)."""
+    _install()
+    _SUBSCRIBERS.append(fn)
+    return fn
+
+
+def unsubscribe(fn: Callable[[str, float], None]) -> None:
+    if fn in _SUBSCRIBERS:
+        _SUBSCRIBERS.remove(fn)
 
 
 def _install() -> None:

@@ -66,6 +66,9 @@ from repro.methods.accounting import downlink_receivers
 from repro.methods.engine import Hyper, Method
 from repro.methods.rules import get_rule
 from repro.methods.substrates import gather_slab_rows, slab_layout
+from repro.obs import timeline as obs_timeline
+from repro.obs.handle import maybe as _obs_scope
+from repro.obs.timeline import record_fed_round
 
 X_BYTES_PER_COORD = 4                  # the server broadcast is dense fp32
 
@@ -87,6 +90,29 @@ class SimResult(NamedTuple):
     traces: Dict[str, np.ndarray]      # driver-style named metric traces
     events: Optional[List[FedEvent]]
     summary: Dict[str, float]
+
+
+def _obs_fed_metrics(h, tr, summary) -> None:
+    """Flush one finished campaign's aggregates into the obs metrics
+    registry (no-op on a metrics-less handle).  Shared with
+    :class:`repro.fed.vecsim.VecFedSim` so both engines emit the same
+    instrument names: ``fed.rounds`` / ``fed.bytes_up`` /
+    ``fed.bytes_down`` / ``fed.sync_rounds`` counters, the
+    ``fed.round_wall_s`` histogram (per-round barrier span, completion
+    minus broadcast), and ``fed.sim_wall_clock_s`` /
+    ``fed.mean_participants`` gauges."""
+    if h.metrics is None:
+        return
+    m = h.metrics
+    m.counter("fed.rounds").inc(summary["rounds"])
+    m.counter("fed.bytes_up").inc(summary["bytes_up"])
+    m.counter("fed.bytes_down").inc(summary["bytes_down"])
+    m.counter("fed.sync_rounds").inc(summary["sync_rounds"])
+    hist = m.histogram("fed.round_wall_s")
+    for w in tr["sim_wall_clock"] - tr["bcast_clock"]:
+        hist.observe(float(w))
+    m.gauge("fed.sim_wall_clock_s").set(summary["wall_clock_s"])
+    m.gauge("fed.mean_participants").set(summary["mean_participants"])
 
 
 def _expand_cohort(arr: np.ndarray, sel: np.ndarray, n: int) -> np.ndarray:
@@ -263,25 +289,36 @@ class FedSim:
         self._compiled[("slab", length, metric_fn)] = fn
         return fn
 
-    def _slab_enter(self, state, uniq_pad: np.ndarray):
+    def _slab_enter(self, state, uniq_pad: np.ndarray, tl=None):
         """Swap the (n, d) store out of the carry: gather the chunk's
         touched rows into the slab; the full arrays wait on the side for
-        :meth:`_slab_exit`'s once-per-chunk writeback."""
+        :meth:`_slab_exit`'s once-per-chunk writeback.  A live timeline
+        (``tl``) gets the gather as a HOST-track wall span."""
         idx = jnp.asarray(uniq_pad)
+        t0 = None if tl is None else tl.now()
         st = state._replace(h_local=gather_slab_rows(state.h_local, idx),
                             g_local=gather_slab_rows(state.g_local, idx))
+        if tl is not None:
+            tl.span(obs_timeline.HOST, "slab_gather", t0, tl.now(),
+                    rows=int(uniq_pad.size))
         return st, state.h_local, state.g_local
 
-    def _slab_exit(self, state, uniq_pad: np.ndarray, full_h, full_g):
+    def _slab_exit(self, state, uniq_pad: np.ndarray, full_h, full_g,
+                   tl=None):
         """Per-chunk writeback: one O(U·d) scatter into the store (the
         aliased Pallas kernel on compiled backends, XLA drop-scatter
         under interpret — :func:`repro.kernels.ops.slab_writeback`)."""
         idx = jnp.asarray(uniq_pad)
-        return state._replace(
+        t0 = None if tl is None else tl.now()
+        out = state._replace(
             h_local=ops.slab_writeback(full_h, idx, state.h_local),
             g_local=ops.slab_writeback(full_g, idx, state.g_local))
+        if tl is not None:
+            tl.span(obs_timeline.HOST, "slab_writeback", t0, tl.now(),
+                    rows=int(uniq_pad.size))
+        return out
 
-    def _run_chunk(self, state, length: int, metric_fn):
+    def _run_chunk(self, state, length: int, metric_fn, tl=None):
         """One engine chunk on the active store: the slab path precomputes
         the cohort schedule from ``state.key`` (the same stateless key
         chain the engine folds in-jit), gathers the touched rows, scans
@@ -290,10 +327,10 @@ class FedSim:
         if self.slab:
             sels = self.substrate.cohort_schedule(state.key, length)
             uniq, loc = slab_layout(sels, self.n)
-            st, full_h, full_g = self._slab_enter(state, uniq)
+            st, full_h, full_g = self._slab_enter(state, uniq, tl)
             st, ys = self._chunk_fn_slab(length, metric_fn)(
                 st, jnp.asarray(sels), jnp.asarray(loc))
-            state = self._slab_exit(st, uniq, full_h, full_g)
+            state = self._slab_exit(st, uniq, full_h, full_g, tl)
         else:
             state, ys = self._chunk_fn(length, metric_fn)(state)
         return state, ys
@@ -378,12 +415,23 @@ class FedSim:
 
     def run(self, state, rounds: int, *,
             metric_fn: Optional[Callable] = None,
-            log_events: bool = False, max_events: int = 100_000
-            ) -> SimResult:
+            log_events: bool = False, max_events: int = 100_000,
+            obs=None) -> SimResult:
+        """``obs`` is an optional :class:`repro.obs.Obs` handle: a live
+        timeline gets every round's per-client message lifetimes
+        (DESIGN.md §17) and a metrics registry gets the campaign
+        counters — both recorded by THIS host loop on arrays it already
+        holds, so observability changes no traced code."""
         metric_fn = self._metric_fn(metric_fn)
-        if self.tau is not None:
-            return self._run_async(state, rounds, metric_fn, log_events,
-                                   max_events)
+        with _obs_scope(obs) as h:
+            if self.tau is not None:
+                return self._run_async(state, rounds, metric_fn,
+                                       log_events, max_events, h)
+            return self._run_barrier(state, rounds, metric_fn,
+                                     log_events, max_events, h)
+
+    def _run_barrier(self, state, rounds: int, metric_fn,
+                     log_events: bool, max_events: int, h) -> SimResult:
         rng = np.random.default_rng(self.seed)
         n = self.n
         d = int(self.comp.spec.d)
@@ -408,7 +456,8 @@ class FedSim:
         done = 0
         while done < rounds:
             length = min(self.chunk, rounds - done)
-            state, ys = self._run_chunk(state, length, metric_fn)
+            state, ys = self._run_chunk(state, length, metric_fn,
+                                        h.timeline)
             ys = jax.device_get(ys)                # ONE transfer per chunk
             for j in range(length):
                 t = done + j
@@ -443,6 +492,16 @@ class FedSim:
                 if log_events and len(events) < max_events:
                     events.append(FedEvent(completion, "round", -1, t,
                                            rb.total_bytes))
+                if h.timeline is not None:
+                    record_fed_round(
+                        h.timeline, round=t, bcast=now,
+                        completion=completion, active=active,
+                        arrivals=now + delay, t_down=t_down, t_up=t_up,
+                        per_node_bytes=np.asarray(rb.per_node),
+                        down_bytes=down_bytes, compute_s=self.compute_s,
+                        coin=coin, server_down_bytes=recv * x_bytes,
+                        cohort=np.asarray(ys["sel"][j])
+                        if self.sampled else None)
                 now = completion
 
                 bytes_up_total += rb.total_bytes
@@ -466,6 +525,7 @@ class FedSim:
             "mean_participants": float(tr["participants"].mean()),
             "mean_bytes_up_per_round": float(bytes_up_total) / rounds,
         }
+        _obs_fed_metrics(h, tr, summary)
         return SimResult(state=state, traces=tr,
                          events=events if log_events else None,
                          summary=summary)
@@ -508,7 +568,7 @@ class FedSim:
         return fn
 
     def _run_async(self, state, rounds: int, metric_fn,
-                   log_events: bool, max_events: int) -> SimResult:
+                   log_events: bool, max_events: int, h) -> SimResult:
         """Asynchronous pipelined replay (DESIGN.md §14): per-client
         next-free-time clocks, cross-round in-flight messages, and a
         staleness-bounded broadcast gate.
@@ -580,7 +640,8 @@ class FedSim:
                 # chunked scan — bit-identical jaxpr, bit-identical states
                 if buf_off == buf_len:
                     buf_len = min(self.chunk, rounds - t)
-                    state, buf = self._run_chunk(state, buf_len, metric_fn)
+                    state, buf = self._run_chunk(state, buf_len, metric_fn,
+                                                 h.timeline)
                     buf = jax.device_get(buf)
                     buf_off = 0
                 ys, j = buf, buf_off
@@ -628,6 +689,18 @@ class FedSim:
                 if len(events) < max_events:
                     events.append(FedEvent(floor_t, "round", -1, t,
                                            rb.total_bytes))
+            if h.timeline is not None:
+                # async rounds interleave in wall time; the per-track
+                # ROUND ids still advance monotonically, which is the
+                # invariant Timeline.validate() checks
+                record_fed_round(
+                    h.timeline, round=t, bcast=T_new, completion=floor_t,
+                    active=active, arrivals=arr, t_down=t_down, t_up=t_up,
+                    per_node_bytes=np.asarray(rb.per_node),
+                    down_bytes=down_bytes, compute_s=self.compute_s,
+                    coin=coin, server_down_bytes=recv * x_bytes,
+                    cohort=np.asarray(ys["sel"][j])
+                    if self.sampled else None)
 
             ring.popleft()
             if coin and flush_rule:
@@ -669,6 +742,7 @@ class FedSim:
                 float(bytes_up_total) / max(rounds, 1),
             "tau": float(tau),
         }
+        _obs_fed_metrics(h, tr, summary)
         return SimResult(state=state, traces=tr,
                          events=events if log_events else None,
                          summary=summary)
@@ -688,7 +762,7 @@ def simulate(variant: str, comp, substrate, hyper: Hyper, x0, key, *,
              seed: int = 0, init_kw: Optional[dict] = None,
              metric_fn=None, log_events: bool = False,
              engine: str = "heap", tau: Optional[int] = None,
-             store: str = "auto") -> SimResult:
+             store: str = "auto", obs=None) -> SimResult:
     """One-shot convenience: build the sim, init the method, run it.
 
     ``engine="heap"`` (default) is this module's event-driven reference;
@@ -711,4 +785,4 @@ def simulate(variant: str, comp, substrate, hyper: Hyper, x0, key, *,
               seed=seed, tau=tau, store=store)
     state = sim.init(x0, key, **(init_kw or {}))
     kw = {} if engine == "vec" else {"log_events": log_events}
-    return sim.run(state, rounds, metric_fn=metric_fn, **kw)
+    return sim.run(state, rounds, metric_fn=metric_fn, obs=obs, **kw)

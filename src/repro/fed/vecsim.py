@@ -37,6 +37,7 @@ Throughput: >= 10x the heap reference at n >= 1024
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable, Dict, Optional
 
 import jax
@@ -45,13 +46,16 @@ import numpy as np
 
 from repro.fed import wire
 from repro.fed.net import LinkModel, campaign_streams, round_multipliers
-from repro.fed.sim import DEFAULT_CHUNK, X_BYTES_PER_COORD, SimResult
+from repro.fed.sim import (DEFAULT_CHUNK, X_BYTES_PER_COORD, SimResult,
+                           _obs_fed_metrics)
 from repro.kernels import ops
 from repro.methods.accounting import downlink_receivers
 from repro.methods.engine import Hyper, Method
 from repro.methods.rules import get_rule
 from repro.methods.substrates import gather_slab_rows as _gather_rows
 from repro.methods.substrates import slab_layout
+from repro.obs.handle import maybe as _obs_scope
+from repro.obs.timeline import HOST
 
 
 @dataclasses.dataclass
@@ -260,31 +264,67 @@ class VecFedSim:
         mu_c = np.take_along_axis(mu, sels, axis=1)
         return sels, uniq_pad, loc, md_c, mu_c
 
-    def _slab_enter(self, state, uniq_pad: np.ndarray):
+    def _slab_enter(self, state, uniq_pad: np.ndarray, tl=None):
         """Swap the (n, d) store out of the carry: gather the chunk's
         touched rows into the slab.  Returns (slab_state, full_h, full_g)
         — the full arrays stay on host/device UNTOUCHED until
-        :meth:`_slab_exit` scatters the slab back once per chunk."""
+        :meth:`_slab_exit` scatters the slab back once per chunk.  A live
+        timeline (``tl``) gets the gather as a HOST-track wall span."""
         idx = jnp.asarray(uniq_pad)
+        t0 = None if tl is None else tl.now()
         st = state._replace(h_local=_gather_rows(state.h_local, idx),
                             g_local=_gather_rows(state.g_local, idx))
+        if tl is not None:
+            tl.span(HOST, "slab_gather", t0, tl.now(),
+                    rows=int(uniq_pad.size))
         return st, state.h_local, state.g_local
 
-    def _slab_exit(self, state, uniq_pad: np.ndarray, full_h, full_g):
+    def _slab_exit(self, state, uniq_pad: np.ndarray, full_h, full_g,
+                   tl=None):
         """Per-chunk writeback: one O(U·d) scatter into the store (the
         aliased Pallas kernel on compiled backends, XLA drop-scatter under
         interpret — :func:`repro.kernels.ops.slab_writeback`)."""
         idx = jnp.asarray(uniq_pad)
-        return state._replace(
+        t0 = None if tl is None else tl.now()
+        out = state._replace(
             h_local=ops.slab_writeback(full_h, idx, state.h_local),
             g_local=ops.slab_writeback(full_g, idx, state.g_local))
+        if tl is not None:
+            tl.span(HOST, "slab_writeback", t0, tl.now(),
+                    rows=int(uniq_pad.size))
+        return out
+
+    def _obs_chunk(self, h, t0: float, done: int, length: int) -> None:
+        """Per-chunk host record: a HOST-track wall span + a chunk
+        duration histogram (callers guard with ``if h`` — a disabled
+        handle costs one falsy check per chunk)."""
+        dt = time.perf_counter() - t0
+        tl = h.timeline
+        if tl is not None:
+            end = tl.now()
+            tl.span(HOST, "chunk", end - dt, end,
+                    start_round=int(done), rounds=int(length))
+        hist = h.histogram("vec.chunk_s")
+        if hist is not None:
+            hist.observe(dt)
 
     def run(self, state, rounds: int, *,
-            metric_fn: Optional[Callable] = None) -> SimResult:
+            metric_fn: Optional[Callable] = None, obs=None) -> SimResult:
+        """``obs`` is an optional :class:`repro.obs.Obs` handle.  The
+        scan emits per-round scalars only, so a live timeline here gets
+        HOST-track chunk / slab spans (wall time) plus compile spans; the
+        per-client simulated-time view is reconstructed post hoc by
+        :func:`repro.obs.reconstruct_vec_timeline` from this run's
+        result.  A metrics registry gets the same campaign aggregates
+        the heap sim emits."""
         metric_fn = self._metric_fn(metric_fn)
-        if self.tau is not None and rounds > 0:
-            return self._run_async(state, rounds, metric_fn)
-        n, d = self.n, int(self.comp.spec.d)
+        with _obs_scope(obs) as h:
+            if self.tau is not None and rounds > 0:
+                return self._run_async(state, rounds, metric_fn, h)
+            return self._run_barrier(state, rounds, metric_fn, h)
+
+    def _run_barrier(self, state, rounds: int, metric_fn, h) -> SimResult:
+        n = self.n
         rng = np.random.default_rng(self.seed)
         streams = campaign_streams(rng, rounds)
         if rounds <= 0:
@@ -304,23 +344,43 @@ class VecFedSim:
             for j in range(length):
                 md[j], mu[j] = round_multipliers(
                     streams[done + j], self.downlink, self.uplink, n)
+            t0 = time.perf_counter() if h else 0.0
             if self.slab:
                 sels, uniq, loc, md_c, mu_c = self._slab_chunk_xs(
                     state, length, md, mu)
-                st, full_h, full_g = self._slab_enter(state, uniq)
+                st, full_h, full_g = self._slab_enter(state, uniq,
+                                                      h.timeline)
                 st, ys = self._chunk_fn_slab(length, metric_fn)(
                     st, jnp.asarray(md_c), jnp.asarray(mu_c),
                     jnp.asarray(sels), jnp.asarray(loc))
-                state = self._slab_exit(st, uniq, full_h, full_g)
+                state = self._slab_exit(st, uniq, full_h, full_g,
+                                        h.timeline)
             else:
                 state, ys = self._chunk_fn(length, metric_fn)(
                     state, jnp.asarray(md), jnp.asarray(mu))
             parts.append(jax.device_get(ys))       # ONE transfer per chunk
+            if h:
+                self._obs_chunk(h, t0, done, length)
             done += length
         ys = {k: np.concatenate([p[k] for p in parts]) for k in parts[0]}
 
-        # exact byte traces from the per-round integers (int64 on host —
-        # immune to the in-scan int32/f32 ranges)
+        wall = np.cumsum(ys["round_t"].astype(np.float64))
+        bcast = np.concatenate([[0.0], wall[:-1]])
+        traces, summary = self._bill_round_bytes(
+            ys, rounds, wall, bcast,
+            wall_clock_s=float(wall[-1]) if rounds else 0.0)
+        _obs_fed_metrics(h, traces, summary)
+        return SimResult(state=state, traces=traces, events=None,
+                         summary=summary)
+
+    def _bill_round_bytes(self, ys, rounds: int, wall: np.ndarray,
+                          bcast: np.ndarray, wall_clock_s: float):
+        """Exact byte billing + trace/summary assembly from one campaign's
+        stacked per-round scan outputs — shared by the barrier and async
+        paths (the clocks differ; the BYTES are the same integer
+        functions of the same engine randomness).  Totals are int64 on
+        host, immune to the in-scan int32/f32 ranges."""
+        n, d = self.n, int(self.comp.spec.d)
         coin = ys["coin"].astype(bool)
         part = ys["participants"].astype(np.int64)
         csum = ys["counts_sum"].astype(np.int64)
@@ -335,9 +395,6 @@ class VecFedSim:
                                   else None)
         bytes_down = np.full(rounds, X_BYTES_PER_COORD * d * recv,
                              np.int64)
-        wall = np.cumsum(ys["round_t"].astype(np.float64))
-        bcast = np.concatenate([[0.0], wall[:-1]])
-
         traces = {
             "metric": ys["metric"].astype(np.float64),
             "bits_sent": ys["bits"].astype(np.float64),
@@ -351,15 +408,14 @@ class VecFedSim:
         }
         summary = {
             "rounds": float(rounds),
-            "wall_clock_s": float(wall[-1]) if rounds else 0.0,
+            "wall_clock_s": wall_clock_s,
             "bytes_up": float(bytes_up.sum()),
             "bytes_down": float(bytes_down.sum()),
             "sync_rounds": float(coin.sum()),
             "mean_participants": float(part.mean()),
             "mean_bytes_up_per_round": float(bytes_up.sum()) / rounds,
         }
-        return SimResult(state=state, traces=traces, events=None,
-                         summary=summary)
+        return traces, summary
 
     # ------------------------------------------------------------------
     # asynchronous pipelined rounds (DESIGN.md §14)
@@ -609,7 +665,7 @@ class VecFedSim:
         self._compiled[("slab-async", length, metric_fn)] = fn
         return fn
 
-    def _run_async(self, state, rounds: int, metric_fn) -> SimResult:
+    def _run_async(self, state, rounds: int, metric_fn, h) -> SimResult:
         n, d = self.n, int(self.comp.spec.d)
         tau = int(self.tau)
         rng = np.random.default_rng(self.seed)
@@ -639,10 +695,12 @@ class VecFedSim:
             for j in range(length):
                 md[j], mu[j] = round_multipliers(
                     streams[done + j], self.downlink, self.uplink, n)
+            t0 = time.perf_counter() if h else 0.0
             if self.slab:
                 sels, uniq, loc, md_c, mu_c = self._slab_chunk_xs(
                     state, length, md, mu)
-                st, full_h, full_g = self._slab_enter(state, uniq)
+                st, full_h, full_g = self._slab_enter(state, uniq,
+                                                      h.timeline)
                 if tau >= 1:
                     carry = (st, free, ring_a, ring_floor, ring_m,
                              ring_sel, flush)
@@ -656,7 +714,8 @@ class VecFedSim:
                         flush = carry
                 else:
                     st, free, ring_a, ring_floor, flush = carry
-                state = self._slab_exit(st, uniq, full_h, full_g)
+                state = self._slab_exit(st, uniq, full_h, full_g,
+                                        h.timeline)
             else:
                 if tau >= 1:
                     carry = (state, free, ring_a, ring_floor, ring_m,
@@ -670,47 +729,20 @@ class VecFedSim:
                 else:
                     state, free, ring_a, ring_floor, flush = carry
             parts.append(jax.device_get(ys))       # ONE transfer per chunk
+            if h:
+                self._obs_chunk(h, t0, done, length)
             done += length
         ys = {k: np.concatenate([p[k] for p in parts]) for k in parts[0]}
 
-        coin = ys["coin"].astype(bool)
-        part = ys["participants"].astype(np.int64)
-        csum = ys["counts_sum"].astype(np.int64)
-        head, bpv = self.schema.header_bytes, self.schema.bytes_per_value
-        dense_total = n * (wire.HEADER_BYTES + 4 * d)
-        bytes_up = np.where(coin, dense_total, head * part + bpv * csum)
-        value_bytes = np.where(coin, n * 4 * d, 4 * csum)
-        recv = downlink_receivers(n, self.substrate.c if self.sampled
-                                  else None)
-        bytes_down = np.full(rounds, X_BYTES_PER_COORD * d * recv,
-                             np.int64)
         # absolute clocks: broadcast times are the f64 cumsum of the
         # per-round advances; a round's own uploads land land_rel later.
         # (At tau=0 bcast_rel[t] == land_rel[t-1] exactly, so sim_wall_
         # clock reproduces the barrier's cumsum bit for bit.)
         bcast = np.cumsum(ys["bcast_rel"].astype(np.float64))
         wall = bcast + ys["land_rel"].astype(np.float64)
-
-        traces = {
-            "metric": ys["metric"].astype(np.float64),
-            "bits_sent": ys["bits"].astype(np.float64),
-            "bytes_up": bytes_up.astype(np.float64),
-            "value_bytes": value_bytes.astype(np.float64),
-            "bytes_down": bytes_down.astype(np.float64),
-            "sim_wall_clock": wall,
-            "bcast_clock": bcast,
-            "sync_round": coin.astype(np.float64),
-            "participants": part.astype(np.float64),
-        }
-        summary = {
-            "rounds": float(rounds),
-            "wall_clock_s": float(wall.max()),
-            "bytes_up": float(bytes_up.sum()),
-            "bytes_down": float(bytes_down.sum()),
-            "sync_rounds": float(coin.sum()),
-            "mean_participants": float(part.mean()),
-            "mean_bytes_up_per_round": float(bytes_up.sum()) / rounds,
-            "tau": float(tau),
-        }
+        traces, summary = self._bill_round_bytes(
+            ys, rounds, wall, bcast, wall_clock_s=float(wall.max()))
+        summary["tau"] = float(tau)
+        _obs_fed_metrics(h, traces, summary)
         return SimResult(state=state, traces=traces, events=None,
                          summary=summary)

@@ -33,9 +33,14 @@ from __future__ import annotations
 
 from typing import Any, Callable, Dict, Optional, Tuple
 
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.obs.handle import maybe as _obs_scope
+from repro.obs.timeline import HOST
 
 PyTree = Any
 MetricFn = Callable[[Any, Any], jax.Array]       # (state, data) -> scalar
@@ -124,6 +129,28 @@ def _empty_traces(metrics, state, data_template, bits: bool):
     return tr
 
 
+def _obs_driver_chunk(h, t0: float, start_round: int,
+                      length: int) -> None:
+    """Per-chunk host record for the driver loops: a HOST-track wall span
+    plus the ``driver.chunk_s`` histogram (callers guard with ``if h`` —
+    disabled observability is one falsy check per chunk)."""
+    dt = time.perf_counter() - t0
+    tl = h.timeline
+    if tl is not None:
+        end = tl.now()
+        tl.span(HOST, "chunk", end - dt, end,
+                start_round=int(start_round), rounds=int(length))
+    hist = h.histogram("driver.chunk_s")
+    if hist is not None:
+        hist.observe(dt)
+
+
+def _obs_driver_done(h, rounds: int) -> None:
+    c = h.counter("driver.rounds")
+    if c is not None:
+        c.inc(int(rounds))
+
+
 class Driver:
     """Reusable compiled runner for one (method, data, metrics) config.
 
@@ -169,13 +196,16 @@ class Driver:
 
     def run(self, state, rounds: int, *, data_key: Optional[jax.Array] = None,
             checkpoint: Optional[Callable] = None,
-            checkpoint_every: int = 1):
+            checkpoint_every: int = 1, obs=None):
         """Drive ``rounds`` rounds; returns ``(final_state, traces)`` with
         ``traces`` a dict of length-``rounds`` arrays (named metrics plus
         ``bits_sent`` when the state carries it).
 
         ``checkpoint(state, rounds_done, chunk_traces)`` fires after every
-        ``checkpoint_every``-th chunk and after the final one.
+        ``checkpoint_every``-th chunk and after the final one.  ``obs`` is
+        an optional :class:`repro.obs.Obs` handle: per-chunk HOST-track
+        wall spans, compile spans and ``driver.*`` metrics — recorded
+        between chunks, never inside traced code.
         """
         if self.data_fn is not None and data_key is None:
             raise ValueError("data_fn requires an explicit data_key")
@@ -193,18 +223,26 @@ class Driver:
         carry = (state, jnp.zeros((), jnp.int32),
                  _metric_zeros(self.metrics, state, template))
         done, n_chunk, parts = 0, 0, []
-        while done < rounds:
-            length = min(chunk, rounds - done)
-            carry, tr = self._chunk_fn(length)(carry, data_key)
-            done += length
-            n_chunk += 1
-            # one transfer per chunk (CPU default): the traces leave the
-            # device as they stream, so finishing a run never dispatches a
-            # many-operand XLA concatenate over live chunk buffers
-            parts.append(jax.device_get(tr) if self.host_traces else tr)
-            if checkpoint is not None and \
-                    (done >= rounds or n_chunk % checkpoint_every == 0):
-                checkpoint(carry[0], done, tr)
+        with _obs_scope(obs) as h:
+            while done < rounds:
+                length = min(chunk, rounds - done)
+                t0 = time.perf_counter() if h else 0.0
+                carry, tr = self._chunk_fn(length)(carry, data_key)
+                done += length
+                n_chunk += 1
+                # one transfer per chunk (CPU default): the traces leave
+                # the device as they stream, so finishing a run never
+                # dispatches a many-operand XLA concatenate over live
+                # chunk buffers
+                parts.append(jax.device_get(tr) if self.host_traces
+                             else tr)
+                if h:
+                    _obs_driver_chunk(h, t0, done - length, length)
+                if checkpoint is not None and \
+                        (done >= rounds or n_chunk % checkpoint_every == 0):
+                    checkpoint(carry[0], done, tr)
+            if h:
+                _obs_driver_done(h, rounds)
         cat = np.concatenate if self.host_traces else jnp.concatenate
         traces = {k: cat([p[k] for p in parts]) for k in parts[0]}
         return carry[0], traces
@@ -273,10 +311,11 @@ class Sweeper:
         return fn
 
     def run(self, values, state, rounds: int, *,
-            data_key: Optional[jax.Array] = None):
+            data_key: Optional[jax.Array] = None, obs=None):
         """Run ``rounds`` rounds of every lane; returns ``(final_states,
         traces)`` with a leading (G,) axis on every state leaf and
-        (G, rounds) traces."""
+        (G, rounds) traces.  ``obs`` as in :meth:`Driver.run` (the
+        ``driver.rounds`` counter bills rounds x lanes)."""
         values = jax.tree_util.tree_map(jnp.asarray, values)
         leaves = jax.tree_util.tree_leaves(values)
         if not leaves:
@@ -294,11 +333,18 @@ class Sweeper:
                  _metric_zeros(self.metrics, state, template,
                                batch_shape=(G,)))
         done, parts = 0, []
-        while done < rounds:
-            length = min(chunk, rounds - done)
-            carry, tr = self._chunk_fn(length)(values, carry, data_key)
-            done += length
-            parts.append(jax.device_get(tr) if self.host_traces else tr)
+        with _obs_scope(obs) as h:
+            while done < rounds:
+                length = min(chunk, rounds - done)
+                t0 = time.perf_counter() if h else 0.0
+                carry, tr = self._chunk_fn(length)(values, carry, data_key)
+                done += length
+                parts.append(jax.device_get(tr) if self.host_traces
+                             else tr)
+                if h:
+                    _obs_driver_chunk(h, t0, done - length, length)
+            if h and rounds > 0:
+                _obs_driver_done(h, rounds * G)
         cat = np.concatenate if self.host_traces else jnp.concatenate
         traces = {k: cat([p[k] for p in parts], axis=1)
                   for k in parts[0]} if parts else {}

@@ -1,0 +1,145 @@
+"""Post-hoc timeline reconstruction for the vectorized simulator
+(DESIGN.md §17).
+
+:class:`repro.fed.vecsim.VecFedSim` never materializes per-arrival
+events — its scan emits per-round scalars only, which is exactly why it
+scales.  But every per-client quantity the heap oracle records is a
+DETERMINISTIC function of state the host already has:
+
+* straggler multipliers replay from the campaign's common-random-number
+  streams (:func:`repro.fed.net.campaign_multipliers` under the sim's
+  seed — the same draws the scan consumed, in the same order);
+* per-client wire bytes come from the static wire schema (uniform
+  counts), or — for Bernoulli compressors, whose realized counts are
+  engine randomness — from replaying the engine's stateless
+  ``split(key, 4)`` chain from the INITIAL state and re-asking the
+  substrate for each round's counts;
+* coin rounds and participation come from the result traces
+  (``sync_round``; a sampled cohort replays from the key chain via
+  :meth:`~repro.methods.substrates.SampledFlatSubstrate.cohort_schedule`);
+* arrival times re-run the heap oracle's own float64 expressions on
+  those inputs, so the reconstructed timestamps are BIT-equal to what
+  :class:`repro.fed.sim.FedSim` would have recorded — the reconcile
+  suite in tests/test_obs.py pins this event for event at small n.
+
+Limits (raise, never silently approximate): barrier campaigns only
+(``tau`` pipelining interleaves rounds — use the heap sim's live
+recorder there) and full-participation or sampled-cohort substrates
+(Appendix-D presence coins, ``p_participate < 1``, are per-client
+engine randomness that the round traces do not identify).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.fed.net import campaign_multipliers
+from repro.fed.wire import HEADER_BYTES
+from repro.obs.timeline import Timeline, record_fed_round
+
+
+def _state_key_chain(state_key, length: int) -> np.ndarray:
+    """The PRE-step state keys of ``length`` engine rounds, replayed from
+    the initial state key (the engine's ``key = split(key, 4)[0]``
+    chain) — what per-round observer APIs like ``round_wire_counts``
+    key on."""
+    def step(k, _):
+        return jax.random.split(k, 4)[0], k
+    return jax.device_get(
+        jax.lax.scan(step, state_key, None, length=int(length))[1])
+
+
+def reconstruct_vec_timeline(sim, init_state, result: Any,
+                             label: Optional[str] = None) -> Timeline:
+    """Rebuild the per-client event timeline of a finished
+    :class:`~repro.fed.vecsim.VecFedSim` barrier campaign.
+
+    ``init_state`` is the MethodState the campaign STARTED from (its
+    ``key`` anchors the replayed engine chain); ``result`` is the
+    campaign's :class:`~repro.fed.sim.SimResult`.  The reconstruction
+    self-checks against the result's byte traces per round — a mismatch
+    raises rather than exporting a timeline that disagrees with what
+    was billed."""
+    if sim.tau is not None:
+        raise NotImplementedError(
+            "vec timeline reconstruction covers barrier campaigns only: "
+            "pipelined (tau) rounds interleave in time — record live "
+            "through the heap sim's obs= handle instead")
+    if sim.comp.spec.p_participate < 1.0:
+        raise NotImplementedError(
+            "Appendix-D presence coins (p_participate < 1) are per-"
+            "client engine randomness the round traces do not identify; "
+            "use the heap sim for per-client timelines of those runs")
+    from repro.fed.sim import X_BYTES_PER_COORD    # lazy: sim imports obs
+    tr = result.traces
+    rounds = len(tr["sim_wall_clock"])
+    n, d = sim.n, int(sim.comp.spec.d)
+    schema = sim.schema
+    x_bytes = X_BYTES_PER_COORD * d
+    dense_up = HEADER_BYTES + 4 * d
+
+    rng = np.random.default_rng(sim.seed)
+    md_all, mu_all = campaign_multipliers(rng, rounds, sim.downlink,
+                                          sim.uplink, n)
+    sels = None
+    if sim.sampled:
+        sels = sim.substrate.cohort_schedule(init_state.key, rounds)
+    if schema.static_count is None:
+        # Bernoulli: realized counts are engine randomness — replay the
+        # key chain and re-ask the substrate (host loop; small-n tool)
+        keys = _state_key_chain(init_state.key, rounds)
+        counts_fn = jax.jit(sim.substrate.round_wire_counts)
+        counts_all = np.stack([
+            np.asarray(jax.device_get(counts_fn(keys[t])), np.int64)
+            for t in range(rounds)])
+    else:
+        counts_all = None
+
+    tl = Timeline(label or f"vec/{sim.variant}")
+    now = 0.0
+    for t in range(rounds):
+        coin = bool(tr["sync_round"][t])
+        active = np.zeros(n, bool)
+        if sels is not None:
+            active[sels[t]] = True
+        else:
+            active[:] = True
+        if coin:
+            per_node = np.where(active, dense_up, 0).astype(np.int64)
+        elif counts_all is not None:
+            per_node = np.where(
+                active,
+                schema.header_bytes
+                + schema.bytes_per_value * counts_all[t], 0)
+        else:
+            per_node = np.where(
+                active,
+                schema.header_bytes
+                + schema.bytes_per_value * schema.static_count, 0)
+        billed = int(tr["bytes_up"][t])
+        if int(per_node.sum()) != billed:
+            raise AssertionError(
+                f"vec timeline reconstruction drifted from the billed "
+                f"bytes at round {t}: rebuilt {int(per_node.sum())} vs "
+                f"traced {billed}")
+        down_bytes = np.where(active, x_bytes, 0)
+        # the heap oracle's own f64 arrival chain, term for term
+        t_down = sim.downlink.transfer_s(down_bytes.astype(np.float64),
+                                         md_all[t])
+        t_up = sim.uplink.transfer_s(per_node.astype(np.float64),
+                                     mu_all[t])
+        delay = t_down + sim.compute_s + t_up
+        arrivals = now + delay
+        completion = float(arrivals[active].max()) if active.any() \
+            else now + sim.downlink.latency_s
+        record_fed_round(
+            tl, round=t, bcast=now, completion=completion, active=active,
+            arrivals=arrivals, t_down=t_down, t_up=t_up,
+            per_node_bytes=per_node, down_bytes=down_bytes,
+            compute_s=sim.compute_s, coin=coin,
+            server_down_bytes=int(tr["bytes_down"][t]),
+            cohort=None if sels is None else sels[t])
+        now = completion
+    return tl

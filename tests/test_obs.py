@@ -1,0 +1,454 @@
+"""Campaign telemetry (DESIGN.md §17): the contracts of ``repro.obs``.
+
+What is pinned here, in dependency order:
+
+* the timeline schema self-validates (and catches seeded violations),
+  and its Perfetto export is structurally sound Chrome-trace JSON;
+* byte reconciliation — summing the recorded per-client ``up`` spans and
+  server round spans reproduces the heap simulator's traced
+  ``bytes_up`` / ``bytes_down`` EXACTLY, per round, for all five
+  variants, barrier and pipelined-async;
+* the vectorized simulator's post-hoc reconstruction
+  (:mod:`repro.obs.vecreplay`) matches the heap oracle's live recording
+  event for event — same tracks, names, byte args, and BIT-equal
+  float64 timestamps — dense and sampled, and refuses the cases it
+  cannot replay (tau, Appendix-D presence coins);
+* metrics instruments are typed (negative counter incs and kind clashes
+  raise) and the JSONL sink round-trips its stable line schema;
+* straggler attribution decomposes barrier time into per-client blame
+  that accounts for every round, and MARINA's coin rounds blame
+  non-participants while DASHA's never do;
+* observability is free when off and compile-free when on: an
+  obs-enabled warmed campaign triggers zero backend compiles
+  (the < 3% wall-clock half of the gate lives in
+  benchmarks/fed_scale_bench.py where timing is controlled);
+* scripts/bench_report.py gates: a seeded gate flip or metric
+  regression past slack fails --check, the clean case passes.
+"""
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks.common import (N_NODES, glm_problem, lipschitz_glm,
+                               theory_hyper)
+from repro.analysis import recompile
+from repro.compress import make_round_compressor
+from repro.core.oracles import FiniteSumProblem
+from repro.data.pipeline import synthetic_classification
+from repro.fed.net import Constant, LinkModel, Lognormal
+from repro.fed.sim import FedSim
+from repro.fed.vecsim import VecFedSim
+from repro.methods import FlatSubstrate, SampledFlatSubstrate
+from repro.obs import (NULL, Obs, Timeline, attribute, client_track,
+                       merge, read_jsonl, reconstruct_vec_timeline,
+                       report)
+from repro.obs.metrics import JsonlSink, MemorySink, MetricsRegistry
+from repro.obs.timeline import COMPILER, HOST, SERVER
+
+D, K, N = 40, 6, N_NODES
+ROUNDS = 12
+
+
+def _problem(n, m=4, d=D):
+    feats, labels = synthetic_classification(jax.random.PRNGKey(0), n, m, d)
+
+    def loss(x, a, y):
+        return (1.0 - 1.0 / (1.0 + jnp.exp(y * jnp.dot(a, x)))) ** 2
+
+    return FiniteSumProblem(loss=loss, features=feats, labels=labels)
+
+
+def _links(sigma=0.8):
+    strag = Lognormal(sigma) if sigma > 0 else Constant()
+    return dict(
+        uplink=LinkModel(latency_s=1e-3, bandwidth_Bps=1e6,
+                         straggler=strag),
+        downlink=LinkModel(latency_s=1e-3, bandwidth_Bps=1e8))
+
+
+def _dense_sim(cls, variant, *, tau=None, p_participate=1.0, seed=7):
+    prob = glm_problem(d=D, m=32)
+    sub = FlatSubstrate(prob, N, D)
+    rc = make_round_compressor("randk", D, N, k=K, backend="sparse",
+                               p_participate=p_participate)
+    hp = theory_hyper(variant, rc.omega, lipschitz_glm(prob), d=D, k=K,
+                      n=N, m=32)
+    kw = {} if tau is None else {"tau": tau}
+    return cls(variant, rc, sub, hp, seed=seed, **kw, **_links())
+
+
+def _sampled_sim(cls, variant, n, c, *, seed=7):
+    prob = _problem(n)
+    sub = SampledFlatSubstrate(prob, n, D, c=c)
+    rc = make_round_compressor("randk", D, n, k=K, backend="sparse")
+    hp = theory_hyper(variant, rc.omega, lipschitz_glm(prob), d=D, k=K,
+                      n=n, m=4)
+    return cls(variant, rc, sub, hp, seed=seed, chunk=5, **_links())
+
+
+def _run_obs(sim, rounds=ROUNDS):
+    st = sim.init(jnp.zeros(D), jax.random.PRNGKey(1))
+    obs = Obs.full(label=sim.variant)
+    res = sim.run(st, rounds, obs=obs)
+    return st, res, obs.timeline
+
+
+# ---------------------------------------------------------------------------
+# timeline schema + export
+# ---------------------------------------------------------------------------
+
+def test_timeline_validates_and_catches_seeded_violations():
+    tl = Timeline("t")
+    tl.span(SERVER, "round", 0.0, 1.0, round=0)
+    tl.instant(SERVER, "cohort_draw", 0.0, round=0)
+    tl.counter(HOST, "q", 0.5, 3.0)
+    tl.begin(HOST, "chunk", 0.0)
+    tl.end(HOST, 0.25)
+    assert tl.validate() == []
+    assert tl.assert_valid() is tl
+
+    bad = Timeline("bad")
+    bad.span(SERVER, "round", 1.0, 0.5, round=0)        # ends before start
+    bad.span(SERVER, "round", 1.0, 2.0, round=5)
+    bad.span(SERVER, "round", 2.0, 3.0, round=3)        # round backwards
+    bad.events.append(bad.events[0]._replace(kind="nope"))
+    bad.begin(HOST, "chunk", 0.0)                        # never ended
+    probs = bad.validate()
+    assert any("ends before it starts" in p for p in probs)
+    assert any("round ran backwards" in p for p in probs)
+    assert any("unknown kind" in p for p in probs)
+    assert any("unclosed begin" in p for p in probs)
+    with pytest.raises(AssertionError):
+        bad.assert_valid()
+    with pytest.raises(ValueError):
+        bad.end(SERVER, 1.0)                             # end w/o begin
+
+
+def test_perfetto_export_structure(tmp_path):
+    sim = _dense_sim(FedSim, "dasha")
+    _, res, tl = _run_obs(sim)
+    path = tmp_path / "trace.json"
+    doc = tl.to_perfetto(str(path))
+    with open(path) as f:
+        assert json.load(f) == doc
+    evs = doc["traceEvents"]
+    # thread-name metadata for server + every client track
+    names = {e["args"]["name"]: e["tid"] for e in evs
+             if e.get("ph") == "M" and e["name"] == "thread_name"}
+    assert names[SERVER] == 0
+    for i in range(N):
+        assert names[client_track(i)] == 10 + i
+    spans = [e for e in evs if e.get("ph") == "X"]
+    assert all(e["dur"] >= 0 and "ts" in e for e in spans)
+    # microsecond timestamps: the last server span ends at sim wall clock
+    wall = float(res.traces["sim_wall_clock"][-1])
+    srv_end = max(e["ts"] + e["dur"] for e in spans if e["tid"] == 0)
+    assert srv_end == pytest.approx(wall * 1e6, rel=1e-9)
+    # non-metadata events are time-sorted
+    ts = [e["ts"] for e in evs if e.get("ph") != "M"]
+    assert ts == sorted(ts)
+
+
+def test_merge_combines_tracks():
+    a, b = Timeline("a"), Timeline("b")
+    a.span(SERVER, "round", 0.0, 1.0)
+    b.span(HOST, "chunk", 0.0, 0.5)
+    m = merge([a, b], "both")
+    assert set(m.tracks()) == {SERVER, HOST}
+    assert len(m.events) == 2
+
+
+# ---------------------------------------------------------------------------
+# byte reconciliation: events vs traced bytes (heap, all five variants)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("variant", ["dasha", "page", "mvr", "sync_mvr",
+                                     "marina"])
+def test_heap_timeline_bytes_reconcile(variant):
+    sim = _dense_sim(FedSim, variant)
+    _, res, tl = _run_obs(sim)
+    tl.assert_valid()
+    sums = tl.round_byte_sums()
+    assert sums["round"].tolist() == list(range(ROUNDS))
+    np.testing.assert_array_equal(
+        sums["bytes_up"], res.traces["bytes_up"].astype(np.int64))
+    np.testing.assert_array_equal(
+        sums["bytes_down"], res.traces["bytes_down"].astype(np.int64))
+    # coin rounds are recorded as sync_round server spans, 1:1 with traces
+    coins = sorted(int((e.args or {})["round"]) for e in tl.events
+                   if e.track == SERVER and e.name == "sync_round")
+    assert coins == np.nonzero(res.traces["sync_round"])[0].tolist()
+
+
+def test_heap_async_timeline_reconciles_and_validates():
+    sim = _dense_sim(FedSim, "dasha", tau=2)
+    _, res, tl = _run_obs(sim, rounds=20)
+    tl.assert_valid()                 # round ids monotone per track
+    sums = tl.round_byte_sums()
+    np.testing.assert_array_equal(
+        sums["bytes_up"], res.traces["bytes_up"].astype(np.int64))
+    np.testing.assert_array_equal(
+        sums["bytes_down"], res.traces["bytes_down"].astype(np.int64))
+
+
+def test_sampled_heap_timeline_marks_cohorts():
+    sim = _sampled_sim(FedSim, "dasha", n=48, c=8)
+    _, res, tl = _run_obs(sim)
+    tl.assert_valid()
+    draws = [e for e in tl.events
+             if e.track == SERVER and e.name == "cohort_draw"]
+    assert len(draws) == ROUNDS
+    assert all((e.args or {})["c"] == 8 for e in draws)
+    sums = tl.round_byte_sums()
+    np.testing.assert_array_equal(
+        sums["bytes_up"], res.traces["bytes_up"].astype(np.int64))
+
+
+# ---------------------------------------------------------------------------
+# vec reconstruction == heap live recording (bit-equal timestamps)
+# ---------------------------------------------------------------------------
+
+def _sim_events(tl):
+    """Simulated-time events only (client/server tracks) — the part of a
+    live heap timeline the vec reconstruction must reproduce."""
+    return [e for e in tl.events if e.track not in (HOST, COMPILER)]
+
+
+def _assert_timelines_equal(heap_tl, vec_tl):
+    he, ve = _sim_events(heap_tl), vec_tl.events
+    assert len(he) == len(ve)
+    for a, b in zip(he, ve):
+        assert (a.track, a.name, a.kind) == (b.track, b.name, b.kind)
+        assert a.t0 == b.t0 and a.t1 == b.t1     # bit-equal f64
+        assert (a.args or {}) == (b.args or {})
+
+
+@pytest.mark.parametrize("variant", ["dasha", "marina"])
+def test_vec_reconstruction_matches_heap_dense(variant):
+    heap = _dense_sim(FedSim, variant)
+    _, _, heap_tl = _run_obs(heap)
+    vec = _dense_sim(VecFedSim, variant)
+    st = vec.init(jnp.zeros(D), jax.random.PRNGKey(1))
+    res = vec.run(st, ROUNDS)
+    vec_tl = reconstruct_vec_timeline(vec, st, res)
+    vec_tl.assert_valid()
+    _assert_timelines_equal(heap_tl, vec_tl)
+
+
+def test_vec_reconstruction_matches_heap_sampled():
+    heap = _sampled_sim(FedSim, "dasha", n=64, c=8)
+    _, _, heap_tl = _run_obs(heap)
+    vec = _sampled_sim(VecFedSim, "dasha", n=64, c=8)
+    st = vec.init(jnp.zeros(D), jax.random.PRNGKey(1))
+    res = vec.run(st, ROUNDS)
+    vec_tl = reconstruct_vec_timeline(vec, st, res)
+    _assert_timelines_equal(heap_tl, vec_tl)
+
+
+def test_vec_reconstruction_refuses_unreplayable_cases():
+    tau_sim = _dense_sim(VecFedSim, "dasha", tau=1)
+    st = tau_sim.init(jnp.zeros(D), jax.random.PRNGKey(1))
+    res = tau_sim.run(st, 6)
+    with pytest.raises(NotImplementedError, match="barrier"):
+        reconstruct_vec_timeline(tau_sim, st, res)
+
+    pp = _dense_sim(VecFedSim, "dasha", p_participate=0.5)
+    st = pp.init(jnp.zeros(D), jax.random.PRNGKey(1))
+    res = pp.run(st, 6)
+    with pytest.raises(NotImplementedError, match="p_participate"):
+        reconstruct_vec_timeline(pp, st, res)
+
+
+# ---------------------------------------------------------------------------
+# metrics + sinks
+# ---------------------------------------------------------------------------
+
+def test_metrics_typed_instruments():
+    reg = MetricsRegistry()
+    c = reg.counter("c")
+    c.inc(3)
+    with pytest.raises(ValueError):
+        c.inc(-1)
+    with pytest.raises(TypeError):
+        reg.gauge("c")                # kind clash
+    h = reg.histogram("h")
+    for v in (0.0, 0.3, 1.5, 1.5, 100.0):
+        h.observe(v)
+    snap = reg.snapshot()
+    assert snap["c"]["value"] == 3
+    assert snap["h"]["count"] == 5
+    assert snap["h"]["min"] == 0.0 and snap["h"]["max"] == 100.0
+    assert snap["h"]["buckets"]["0"] == 1      # zero bucket
+    assert snap["h"]["buckets"]["2.0"] == 2    # (1, 2] holds both 1.5s
+    assert reg.counter("c") is c               # get-or-create
+
+
+def test_jsonl_sink_round_trip(tmp_path):
+    path = str(tmp_path / "metrics.jsonl")
+    reg = MetricsRegistry(JsonlSink(path), labels={"engine": "heap", "n": N})
+    reg.counter("fed.rounds").inc(ROUNDS)
+    reg.gauge("never_set")                     # NaN -> null, not dropped
+    reg.histogram("w").observe(0.5)
+    reg.flush()
+    reg.counter("fed.rounds").inc(1)
+    reg.close()                                # final flush + close
+    recs = read_jsonl(path)
+    assert all(r["labels"] == {"engine": "heap", "n": N} for r in recs)
+    assert [r["seq"] for r in recs] == sorted(r["seq"] for r in recs)
+    last = {r["name"]: r for r in recs}        # cumulative: keep last
+    assert last["fed.rounds"]["value"] == ROUNDS + 1
+    assert last["never_set"]["value"] is None
+    assert last["w"]["count"] == 1 and last["w"]["buckets"] == {"0.5": 1}
+
+
+def test_campaign_metrics_through_run(tmp_path):
+    sim = _dense_sim(FedSim, "dasha")
+    st = sim.init(jnp.zeros(D), jax.random.PRNGKey(1))
+    path = str(tmp_path / "campaign.jsonl")
+    obs = Obs.to_jsonl(path)
+    res = sim.run(st, ROUNDS, obs=obs)
+    obs.close()
+    last = {r["name"]: r for r in read_jsonl(path)}
+    assert last["fed.rounds"]["value"] == ROUNDS
+    assert last["fed.bytes_up"]["value"] == res.summary["bytes_up"]
+    assert last["fed.round_wall_s"]["count"] == ROUNDS
+
+
+# ---------------------------------------------------------------------------
+# straggler attribution
+# ---------------------------------------------------------------------------
+
+def test_attribution_accounts_every_round():
+    sim = _dense_sim(FedSim, "marina")
+    _, res, tl = _run_obs(sim, rounds=30)
+    at = attribute(tl)
+    assert at.rounds == 30
+    assert at.sync_rounds == int(res.traces["sync_round"].sum())
+    assert len(at.critical_path) == 30
+    assert sum(c.blamed for c in at.clients.values()) == 30
+    assert sum(c.blamed_sync for c in at.clients.values()) == at.sync_rounds
+    # barrier time is the traced wall clock (rounds are back to back)
+    assert at.barrier_s == pytest.approx(
+        float(res.traces["sim_wall_clock"][-1]), rel=1e-9)
+    # the blamed client never waits in its round: wait_s uses completion
+    for c in at.clients.values():
+        assert c.rounds == 30                  # dense: all participate
+        assert c.blame_s >= 0 and c.wait_s >= 0
+        q = c.wait_quantiles()
+        assert q["p50"] <= q["p95"]
+
+
+def test_attribution_report_renders(tmp_path):
+    d = _dense_sim(FedSim, "dasha")
+    m = _dense_sim(FedSim, "marina")
+    _, _, tl_d = _run_obs(d)
+    _, _, tl_m = _run_obs(m)
+    path = str(tmp_path / "stragglers.md")
+    md = report({"dasha": tl_d, "marina": tl_m}, top=3, path=path)
+    with open(path) as f:
+        assert f.read() == md
+    assert "## dasha" in md and "## marina" in md
+    assert "| client |" in md
+    # marina's section reports its sync barriers; dasha has none
+    assert "(0 sync barriers)" in md.split("## marina")[0]
+
+
+# ---------------------------------------------------------------------------
+# zero-compile gate (the wall-clock half lives in fed_scale_bench)
+# ---------------------------------------------------------------------------
+
+def test_obs_adds_zero_steady_state_compiles():
+    sim = _sampled_sim(VecFedSim, "dasha", n=64, c=8)
+    st = sim.init(jnp.zeros(D), jax.random.PRNGKey(1))
+    sim.run(st, ROUNDS)                        # warm the chunk cache
+    with recompile.watch("obs_on") as region:
+        sim.run(st, ROUNDS, obs=Obs.metrics_only(MemorySink()))
+    assert region.count == 0
+    # heap sim too: obs recording is pure host-side numpy
+    heap = _dense_sim(FedSim, "dasha")
+    hst = heap.init(jnp.zeros(D), jax.random.PRNGKey(1))
+    heap.run(hst, ROUNDS)
+    with recompile.watch("obs_on_heap") as region:
+        heap.run(hst, ROUNDS, obs=Obs.full())
+    assert region.count == 0
+
+
+def test_null_obs_is_falsy_and_inert():
+    assert not NULL and not Obs()
+    assert Obs(timeline=Timeline())
+    assert NULL.counter("x") is None and NULL.histogram("x") is None
+    NULL.flush(), NULL.close()                 # no-ops
+
+
+# ---------------------------------------------------------------------------
+# bench_report regression gate
+# ---------------------------------------------------------------------------
+
+def _bench_report():
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir,
+                                    "scripts"))
+    try:
+        import bench_report
+    finally:
+        sys.path.pop(0)
+    return bench_report
+
+
+def _fake_bench_dir(tmp_path, *, gap=2.0, advantage=True):
+    d = tmp_path / "bench"
+    d.mkdir(exist_ok=True)
+    with open(d / "BENCH_fed.json", "w") as f:
+        json.dump({"straggler": {"marina_minus_dasha_s": [0.1, gap],
+                                 "no_sync_advantage_ok": advantage},
+                   "payload_reconciles": True}, f)
+    return str(d)
+
+
+def test_bench_report_write_then_clean_check(tmp_path):
+    br = _bench_report()
+    d = _fake_bench_dir(tmp_path)
+    assert br.main(["--dir", d, "--write"]) == 0
+    traj = json.load(open(os.path.join(d, "BENCH_trajectory.json")))
+    assert traj["gates"]["fed.no_sync_advantage"]["value"] is True
+    assert traj["metrics"]["fed.no_sync_gap_s@sigma_max"]["value"] == 2.0
+    # unchanged numbers pass --check
+    assert br.main(["--dir", d, "--check"]) == 0
+    # improvement passes too
+    _fake_bench_dir(tmp_path, gap=3.0)
+    assert br.main(["--dir", d, "--check"]) == 0
+
+
+def test_bench_report_fails_on_seeded_regression(tmp_path):
+    br = _bench_report()
+    d = _fake_bench_dir(tmp_path)
+    assert br.main(["--dir", d, "--write"]) == 0
+    # a paper-claim gate flips False -> --check exits nonzero
+    _fake_bench_dir(tmp_path, advantage=False)
+    assert br.main(["--dir", d, "--check"]) == 1
+    # metric slides past its slack (5% on sim-time metrics) -> nonzero
+    _fake_bench_dir(tmp_path, gap=1.0, advantage=True)
+    assert br.main(["--dir", d, "--check"]) == 1
+    # missing baseline is an error only under --check
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    assert br.main(["--dir", str(empty), "--check"]) == 1
+    assert br.main(["--dir", str(empty)]) == 0
+
+
+def test_bench_report_against_checked_in_jsons(tmp_path):
+    """The CI smoke: the repo's own BENCH jsons + trajectory must be
+    internally consistent (no regression at rest)."""
+    br = _bench_report()
+    root = os.path.join(os.path.dirname(__file__), os.pardir)
+    if not os.path.exists(os.path.join(root, "BENCH_trajectory.json")):
+        pytest.skip("no checked-in trajectory baseline")
+    md = tmp_path / "trend.md"
+    assert br.main(["--dir", root, "--check",
+                    "--markdown", str(md)]) == 0
+    text = md.read_text()
+    assert "| metric |" in text and "No regressions." in text
