@@ -48,6 +48,7 @@ from benchmarks.common import glm_problem, lipschitz_glm, theory_hyper
 from repro.compress import make_round_compressor
 from repro.core.oracles import FiniteSumProblem
 from repro.data.pipeline import synthetic_classification
+from repro.fed import wire
 from repro.fed.net import Constant, LinkModel, Lognormal
 from repro.fed.sim import FedSim
 from repro.fed.vecsim import VecFedSim
@@ -161,7 +162,7 @@ def severity_sweep() -> Dict:
     for v, hp in variants.items():
         ra = runs[v]["async"][-1]
         measured = float(ra.traces["bytes_up"].mean() / N) \
-            - 16.0  # HEADER_BYTES
+            - wire.HEADER_BYTES
         rule = get_rule(v)
         p = hp.p if rule.has_sync else 0.0
         expected = 4 * expected_wire_coords(rule, hp, wire_coords,

@@ -1,0 +1,304 @@
+"""Fault-tolerance bench: graceful degradation vs sync-barrier retry
+amplification (DESIGN.md §18).
+
+Three experiments, emitted to ``BENCH_faults.json``:
+
+1. **Degradation sweep.** DASHA (graceful: the server re-closes each
+   round with whoever delivered) and MARINA (sync barrier: missing
+   clients are re-requested with exponential backoff) run the SAME
+   seeded fault campaign — a drop-rate grid 0 -> 20% on the uplink plus
+   a fixed crash process — through the vectorized simulator.  Gates
+   (``graceful_degradation_ok``):
+
+   * DASHA's math stays finite and its final metric lands within a
+     small factor of the fault-free run at every drop rate;
+   * DASHA's wall-clock inflation is bounded by the deadline policy
+     (a cut round costs ``deadline_mult`` x nominal, never more);
+   * MARINA's iterates are bit-identical at every drop rate (retries
+     recover every message — the math cannot degrade) but its
+     wall-clock and uplink bytes blow past DASHA's at the top of the
+     grid: the cost of the barrier is paid in time, not accuracy.
+
+2. **Implementation equivalence.** At small n the heap oracle and the
+   compiled scan realize the same faulted campaign: every integer byte
+   and fault-mask trace bit-exact, clocks to carry tolerance.
+
+3. **Obs overhead under faults.** A metrics-attached faulted campaign
+   recompiles nothing in steady state (the fault masks ride the scan as
+   data, observability stays host-side).
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.run --only fed_faults
+    PYTHONPATH=src python -m benchmarks.fed_faults_bench [--smoke]
+
+Env: ``REPRO_BENCH_QUICK=1`` (or ``--smoke``) shrinks sizes for CI and
+ASSERTS the gates (the CI fed-faults job runs this mode).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import lipschitz_glm, theory_hyper
+from repro.analysis import recompile
+from repro.compress import make_round_compressor
+from repro.core.oracles import FiniteSumProblem
+from repro.data.pipeline import synthetic_classification
+from repro.fed.faults import FaultModel
+from repro.fed.net import LinkModel
+from repro.fed.sim import FAULT_TRACES, FedSim
+from repro.fed.vecsim import VecFedSim
+from repro.methods import FlatSubstrate
+from repro.obs import MemorySink, Obs
+
+QUICK = bool(os.environ.get("REPRO_BENCH_QUICK"))
+
+D = 256 if QUICK else 1024
+N = 20
+K = max(D // 64, 8)
+M = 8
+ROUNDS = 96 if QUICK else 240
+DROP_GRID = (0.0, 0.05, 0.1, 0.2)
+P_CRASH, CRASH_ROUNDS = 0.02, 2
+DEADLINE_MULT = 3.0
+SEED = 7
+#: DASHA's accuracy under 20% loss must stay within this factor of the
+#: fault-free final metric — "degrades smoothly", not "diverges"
+METRIC_FACTOR = 10.0
+
+UP_BW, DOWN_BW, LATENCY = 1e6, 1e8, 1e-3
+
+
+def _problem():
+    feats, labels = synthetic_classification(jax.random.PRNGKey(0), N, M, D)
+
+    def loss(x, a, y):
+        return (1.0 - 1.0 / (1.0 + jnp.exp(y * jnp.dot(a, x)))) ** 2
+
+    prob = FiniteSumProblem(loss=loss, features=feats, labels=labels)
+    return prob, FlatSubstrate(prob, N, D), lipschitz_glm(prob)
+
+
+def _fault_model(p_drop: float) -> FaultModel:
+    return FaultModel(p_crash=P_CRASH, crash_rounds=CRASH_ROUNDS,
+                      p_drop_up=p_drop, deadline_mult=DEADLINE_MULT,
+                      seed=SEED)
+
+
+def _run(variant, rc, sub, hp, fm, rounds=ROUNDS, cls=VecFedSim,
+         seed=3, obs=None):
+    sim = cls(variant, rc, sub, hp,
+              uplink=LinkModel(latency_s=LATENCY, bandwidth_Bps=UP_BW),
+              downlink=LinkModel(latency_s=LATENCY,
+                                 bandwidth_Bps=DOWN_BW),
+              compute_s=0.0, seed=seed, faults=fm)
+    st = sim.init(jnp.zeros(D), jax.random.PRNGKey(1))
+    return sim.run(st, rounds, obs=obs)
+
+
+def degradation_sweep() -> Dict:
+    """Experiment 1: the drop-rate grid and the degradation gates."""
+    prob, sub, L = _problem()
+    rc = make_round_compressor("randk", D, N, k=K, backend="sparse")
+    hp = {v: theory_hyper(v, rc.omega, L, d=D, k=K, n=N, m=M)
+          for v in ("dasha", "marina")}
+
+    grid: List[Dict] = []
+    runs = {"dasha": [], "marina": []}
+    for p in DROP_GRID:
+        fm = _fault_model(p)
+        row = {"p_drop_up": p, "p_crash": P_CRASH}
+        for v in ("dasha", "marina"):
+            r = _run(v, rc, sub, hp[v], fm)
+            runs[v].append(r)
+            row[v] = {
+                "final_metric": float(r.traces["metric"][-1]),
+                "wall_clock_s": float(r.summary["wall_clock_s"]),
+                "bytes_up": int(r.summary["bytes_up"]),
+                "wasted_bytes_up": int(r.summary["wasted_bytes_up"]),
+                "dropped_rounds": int(r.summary["dropped_rounds"]),
+                "retries": int(r.summary["retries"]),
+                "retry_capped": int(r.summary["retry_capped"]),
+                "mean_participants": float(
+                    r.traces["participants"].mean()),
+            }
+        grid.append(row)
+
+    base = {v: runs[v][0] for v in runs}
+    top = DROP_GRID.index(max(DROP_GRID))
+
+    # MARINA's barrier: faults re-schedule its rounds, never re-price
+    # its math — iterates and metric bit-identical across the grid
+    marina_invariant = all(
+        np.array_equal(base["marina"].traces["metric"],
+                       r.traces["metric"])
+        and np.array_equal(np.asarray(base["marina"].state.x),
+                           np.asarray(r.state.x))
+        for r in runs["marina"][1:])
+
+    # DASHA: finite everywhere, final metric within METRIC_FACTOR of
+    # fault-free, wall-clock inflation bounded by the deadline policy
+    d0 = float(base["dasha"].traces["metric"][-1])
+    dasha_finite = all(np.isfinite(r.traces["metric"]).all()
+                       for r in runs["dasha"])
+    dasha_metric_ok = all(
+        float(r.traces["metric"][-1]) <= METRIC_FACTOR * d0
+        for r in runs["dasha"])
+    wall = {v: [float(r.summary["wall_clock_s"]) for r in runs[v]]
+            for v in runs}
+    dasha_ratio = [w / wall["dasha"][0] for w in wall["dasha"]]
+    marina_ratio = [w / wall["marina"][0] for w in wall["marina"]]
+    # a cut round costs deadline_mult x nominal; un-cut rounds cost
+    # nominal — the campaign can never inflate past the multiplier
+    dasha_wall_bounded = all(r <= DEADLINE_MULT + 1e-6
+                             for r in dasha_ratio)
+    # the barrier pays in time AND bytes at the top of the grid
+    marina_pays = (marina_ratio[top] > dasha_ratio[top]
+                   and grid[top]["marina"]["bytes_up"]
+                   > grid[0]["marina"]["bytes_up"]
+                   and grid[top]["marina"]["retries"] > 0)
+    ok = bool(marina_invariant and dasha_finite and dasha_metric_ok
+              and dasha_wall_bounded and marina_pays)
+    return {
+        "drop_grid": list(DROP_GRID), "rounds": ROUNDS,
+        "deadline_mult": DEADLINE_MULT, "metric_factor": METRIC_FACTOR,
+        "grid": grid,
+        "wall_inflation": {"dasha": dasha_ratio, "marina": marina_ratio},
+        "marina_math_invariant": bool(marina_invariant),
+        "dasha_metric_within_factor": bool(dasha_metric_ok
+                                           and dasha_finite),
+        "dasha_wall_bounded_by_deadline": bool(dasha_wall_bounded),
+        "marina_pays_in_time_and_bytes": bool(marina_pays),
+        "graceful_degradation_ok": ok,
+    }
+
+
+def equivalence_check() -> Dict:
+    """Experiment 2: heap == vec on one faulted campaign at small n."""
+    n, d, k, m, rounds = 5, 64, 8, 8, 40
+    feats, labels = synthetic_classification(jax.random.PRNGKey(0),
+                                             n, m, d)
+
+    def loss(x, a, y):
+        return (1.0 - 1.0 / (1.0 + jnp.exp(y * jnp.dot(a, x)))) ** 2
+
+    prob = FiniteSumProblem(loss=loss, features=feats, labels=labels)
+    sub = FlatSubstrate(prob, n, d)
+    rc = make_round_compressor("randk", d, n, k=k, backend="sparse")
+    L = lipschitz_glm(prob)
+    out = {}
+    for variant, fm in (
+            ("dasha", FaultModel(p_crash=0.08, crash_rounds=2,
+                                 p_drop_up=0.1, p_drop_down=0.05,
+                                 p_corrupt=0.05, deadline_mult=3.0,
+                                 rejoin="reset", seed=7)),
+            ("marina", FaultModel(p_crash=0.08, crash_rounds=2,
+                                  p_drop_up=0.1, p_corrupt=0.05,
+                                  deadline_mult=3.0, seed=7))):
+        hp = theory_hyper(variant, rc.omega, L, d=d, k=k, n=n, m=m)
+
+        def run(cls):
+            sim = cls(variant, rc, sub, hp, faults=fm, seed=3,
+                      compute_s=0.002)
+            st = sim.init(jnp.zeros(d), jax.random.PRNGKey(1))
+            return sim.run(st, rounds)
+
+        rh, rv = run(FedSim), run(VecFedSim)
+        ints = ("bytes_up", "value_bytes", "bytes_down", "sync_round",
+                "participants") + FAULT_TRACES
+        traces_ok = all(np.array_equal(rh.traces[t], rv.traces[t])
+                        for t in ints)
+        wall_ok = bool(np.allclose(rv.traces["sim_wall_clock"],
+                                   rh.traces["sim_wall_clock"],
+                                   rtol=2e-5))
+        out[variant] = {"integer_traces_bit_exact": bool(traces_ok),
+                        "wall_clock_close": wall_ok,
+                        "dropped_rounds": int(
+                            rh.summary["dropped_rounds"]),
+                        "ok": bool(traces_ok and wall_ok)}
+    out["ok"] = bool(all(out[v]["ok"] for v in ("dasha", "marina")))
+    return out
+
+
+def obs_compile_check() -> Dict:
+    """Experiment 3: a metrics-attached faulted campaign is steady-state
+    compile-free (second run, same shapes, zero backend compiles)."""
+    prob, sub, L = _problem()
+    rc = make_round_compressor("randk", D, N, k=K, backend="sparse")
+    hp = theory_hyper("dasha", rc.omega, L, d=D, k=K, n=N, m=M)
+    fm = _fault_model(0.1)
+    sim = VecFedSim("dasha", rc, sub, hp,
+                    uplink=LinkModel(latency_s=LATENCY,
+                                     bandwidth_Bps=UP_BW),
+                    downlink=LinkModel(latency_s=LATENCY,
+                                       bandwidth_Bps=DOWN_BW),
+                    compute_s=0.0, seed=3, faults=fm)
+    st = sim.init(jnp.zeros(D), jax.random.PRNGKey(1))
+    sim.run(st, ROUNDS, obs=Obs.metrics_only(MemorySink()))
+    # steady state: a second identical faulted campaign hits the
+    # per-chunk compile cache — zero backend compiles with obs attached
+    with recompile.watch("fed_faults_steady") as region:
+        sim.run(st, ROUNDS, obs=Obs.metrics_only(MemorySink()))
+    return {"steady_state_compiles": region.count,
+            "compile_free": bool(region.count == 0)}
+
+
+def run() -> List[Dict]:
+    jax.config.update("jax_platforms", "cpu")
+    sweep = degradation_sweep()
+    equiv = equivalence_check()
+    obs = obs_compile_check()
+    report = {
+        "config": {"d": D, "k": K, "n": N, "rounds": ROUNDS,
+                   "p_crash": P_CRASH, "crash_rounds": CRASH_ROUNDS,
+                   "deadline_mult": DEADLINE_MULT, "uplink_Bps": UP_BW,
+                   "downlink_Bps": DOWN_BW, "quick": QUICK},
+        "degradation": sweep, "equivalence": equiv, "obs": obs,
+        "graceful_degradation_ok": sweep["graceful_degradation_ok"],
+        "faulted_heap_vec_bit_exact": equiv["ok"],
+        "faulted_obs_compile_free": obs["compile_free"],
+    }
+    with open("BENCH_faults.json", "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"[fed_faults] graceful_degradation_ok="
+          f"{report['graceful_degradation_ok']} heap_vec="
+          f"{equiv['ok']} compile_free={obs['compile_free']} "
+          f"(wrote BENCH_faults.json)")
+    if QUICK:
+        assert report["graceful_degradation_ok"], \
+            "graceful degradation gate failed"
+        assert equiv["ok"], "faulted heap/vec equivalence failed"
+        assert obs["compile_free"], "faulted campaign recompiled"
+
+    cols = ["bench", "p_drop", "wall_dasha_s", "wall_marina_s",
+            "metric_dasha", "retries_marina", "ok"]
+    blank = {c: "" for c in cols}
+    rows = []
+    for i, p in enumerate(DROP_GRID):
+        g = sweep["grid"][i]
+        rows.append(dict(
+            blank, bench="fed_faults_grid", p_drop=p,
+            wall_dasha_s=round(g["dasha"]["wall_clock_s"], 4),
+            wall_marina_s=round(g["marina"]["wall_clock_s"], 4),
+            metric_dasha=float(f"{g['dasha']['final_metric']:.3e}"),
+            retries_marina=g["marina"]["retries"]))
+    rows.append(dict(blank, bench="fed_faults_equiv", ok=equiv["ok"]))
+    rows.append(dict(blank, bench="fed_faults_obs",
+                     ok=obs["compile_free"]))
+    return rows
+
+
+if __name__ == "__main__":
+    if "--smoke" in sys.argv:
+        os.environ["REPRO_BENCH_QUICK"] = "1"
+        print("[fed_faults] --smoke: rerun under REPRO_BENCH_QUICK")
+        os.execv(sys.executable, [sys.executable, "-m",
+                                  "benchmarks.fed_faults_bench"])
+    from benchmarks.common import emit
+    emit(run())

@@ -23,7 +23,7 @@ BENCHES = ["fig1_gradient", "fig2_finite_sum", "fig3_stochastic",
            "fig4_dnn", "fig5_quadratic_pl", "table1_complexity",
            "kernel_bench", "compress_bench", "driver_bench",
            "fed_bench", "fed_scale_bench", "fed_async_bench",
-           "roofline_report"]
+           "fed_faults_bench", "roofline_report"]
 
 
 def _headline(rows) -> dict:

@@ -59,6 +59,10 @@ SPEC: Sequence[Tuple[str, str, Tuple, str, Optional[float]]] = (
      ("tau_sweep", "wall_clock_s", -1), "lower", 0.05),
     ("async.advantage_gap_s@sigma_max", "BENCH_async.json",
      ("severity", "advantage_gap_s", "dasha", -1), "higher", 0.05),
+    ("faults.dasha_wall_inflation@drop_max", "BENCH_faults.json",
+     ("degradation", "wall_inflation", "dasha", -1), "lower", 0.05),
+    ("faults.marina_wall_inflation@drop_max", "BENCH_faults.json",
+     ("degradation", "wall_inflation", "marina", -1), "higher", 0.05),
 )
 
 #: claim gates: booleans that, once recorded True, must stay True
@@ -100,6 +104,14 @@ GATES: Sequence[Tuple[str, str, Tuple]] = (
      ("payload_reconciles",)),
     ("driver.steady_state_recompile_free", "BENCH_driver.json",
      ("steady_state_recompile_free",)),
+    ("faults.graceful_degradation", "BENCH_faults.json",
+     ("graceful_degradation_ok",)),
+    ("faults.marina_math_invariant", "BENCH_faults.json",
+     ("degradation", "marina_math_invariant")),
+    ("faults.heap_vec_bit_exact", "BENCH_faults.json",
+     ("faulted_heap_vec_bit_exact",)),
+    ("faults.obs_compile_free", "BENCH_faults.json",
+     ("faulted_obs_compile_free",)),
 )
 
 

@@ -75,6 +75,21 @@ class LinkModel:
     bandwidth_Bps: float = 12.5e6
     straggler: Straggler = Constant()
 
+    def __post_init__(self):
+        # a zero/negative/NaN bandwidth silently turns every barrier into
+        # inf/NaN wall-clock; fail at construction, not mid-campaign
+        if not (float(self.bandwidth_Bps) > 0.0):
+            raise ValueError(
+                f"bandwidth_Bps must be positive and finite, got "
+                f"{self.bandwidth_Bps!r}")
+        if not np.isfinite(self.bandwidth_Bps):
+            raise ValueError(
+                f"bandwidth_Bps must be finite, got {self.bandwidth_Bps!r}")
+        if not (float(self.latency_s) >= 0.0):
+            raise ValueError(
+                f"latency_s must be >= 0 and finite, got "
+                f"{self.latency_s!r}")
+
     def delays(self, rng: np.random.Generator,
                nbytes: np.ndarray) -> np.ndarray:
         """Per-client transfer times for one round; ``nbytes`` is (n,)."""
@@ -87,6 +102,18 @@ class LinkModel:
         latency + bytes / bandwidth * slowdown."""
         return self.latency_s + np.asarray(nbytes, np.float64) \
             / self.bandwidth_Bps * mult
+
+
+def round_barrier(delays, active, empty: float = 0.0) -> float:
+    """Wall-clock of one barrier round: the slowest ACTIVE client, or
+    ``empty`` when the cohort is empty (C=0 after mass dropout — the
+    degenerate round must cost a finite constant, never the NaN/-inf a
+    bare masked max would produce)."""
+    delays = np.asarray(delays, np.float64)
+    active = np.asarray(active, bool)
+    if not active.any():
+        return float(empty)
+    return float(delays[active].max())
 
 
 def campaign_streams(rng: np.random.Generator, rounds: int):

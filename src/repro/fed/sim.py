@@ -60,19 +60,28 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.fed import wire
+from repro.fed import faults as faultslib
 from repro.fed.net import LinkModel, campaign_multipliers
 from repro.kernels import ops
 from repro.methods.accounting import downlink_receivers
-from repro.methods.engine import Hyper, Method
+from repro.methods.engine import FaultStep, Hyper, Method
 from repro.methods.rules import get_rule
 from repro.methods.substrates import gather_slab_rows, slab_layout
 from repro.obs import timeline as obs_timeline
 from repro.obs.handle import maybe as _obs_scope
-from repro.obs.timeline import record_fed_round
+from repro.obs.timeline import SERVER, client_track, record_fed_round
 
 X_BYTES_PER_COORD = 4                  # the server broadcast is dense fp32
 
 DEFAULT_CHUNK = 128                    # scan-segment length (memory knob)
+
+#: extra per-round traces emitted by FAULTED campaigns (DESIGN.md §18) —
+#: both simulators fill all of them (graceful rules keep the retry
+#: columns at zero; sync rules keep ``dropped`` = the pre-retry missing
+#: set, every member of which the retries then recover)
+FAULT_TRACES = ("senders", "dropped", "late", "lost", "offline",
+                "rejoins", "retries", "retry_bytes_up",
+                "retry_bytes_down", "wasted_bytes_up", "retry_capped")
 
 
 class FedEvent(NamedTuple):
@@ -90,6 +99,50 @@ class SimResult(NamedTuple):
     traces: Dict[str, np.ndarray]      # driver-style named metric traces
     events: Optional[List[FedEvent]]
     summary: Dict[str, float]
+
+
+def _obs_fault_metrics(h, tr) -> None:
+    """Flush a FAULTED campaign's event totals into the obs metrics
+    registry (shared with :class:`repro.fed.vecsim.VecFedSim`): counters
+    ``fed.faults.offline`` / ``dropped`` / ``late`` / ``lost`` /
+    ``rejoins`` / ``retries`` / ``retry_capped`` (client-round events)
+    and ``fed.faults.retry_bytes_up`` / ``wasted_bytes_up``."""
+    if h.metrics is None:
+        return
+    m = h.metrics
+    for name in ("offline", "dropped", "late", "lost", "rejoins",
+                 "retries", "retry_capped", "retry_bytes_up",
+                 "wasted_bytes_up"):
+        m.counter(f"fed.faults.{name}").inc(float(tr[name].sum()))
+
+
+def _record_fault_marks(tl, *, t, bcast, completion, arrivals,
+                        crash_start, rejoin, rejoin_mode, drop_down,
+                        lost, late, miss=None, retries=None,
+                        retry_capped=None) -> None:
+    """One faulted round's timeline marks (heap oracle only — the vec
+    engine's per-client view is reconstructed post hoc): ``crash`` /
+    ``rejoin`` instants at the broadcast, ``drop_down`` at the broadcast
+    (the client never heard it), ``drop_up`` at the would-have-landed
+    arrival, ``deadline_cut`` at the round close, and — for sync rules —
+    one SERVER ``retries`` span over the backoff window."""
+    for i in np.nonzero(crash_start)[0]:
+        tl.instant(client_track(i), "crash", bcast, round=t)
+    for i in np.nonzero(rejoin)[0]:
+        tl.instant(client_track(i), "rejoin", bcast, round=t,
+                   mode=rejoin_mode)
+    for i in np.nonzero(drop_down)[0]:
+        tl.instant(client_track(i), "drop_down", bcast, round=t)
+    for i in np.nonzero(lost)[0]:
+        tl.instant(client_track(i), "drop_up", float(arrivals[i]),
+                   round=t)
+    for i in np.nonzero(late)[0]:
+        tl.instant(client_track(i), "deadline_cut", completion, round=t)
+    if retries is not None and miss is not None and miss.any():
+        tl.span(SERVER, "retries", bcast, completion, round=t,
+                clients=int(miss.sum()),
+                attempts=int(retries[miss].sum()),
+                capped=int(retry_capped[miss].sum()))
 
 
 def _obs_fed_metrics(h, tr, summary) -> None:
@@ -161,6 +214,14 @@ class FedSim:
     #: the substrate samples clients.  Both stores are BIT-identical —
     #: same RNG chain, same traces, same wire bytes.
     store: str = "auto"
+    #: fault injection (DESIGN.md §18): a :class:`repro.fed.faults.
+    #: FaultModel` realizes seeded client crashes (with stale/reset
+    #: rejoin), lossy links, corruption (really flipped bytes, caught by
+    #: the wire checksum), a deadline and — for ``sync_requires_all``
+    #: rules — bounded-backoff retries.  None (default) leaves every
+    #: path untouched.  v1 scope: barrier only (``tau=None``) and dense
+    #: substrates (no client sampling).
+    faults: Optional[faultslib.FaultModel] = None
 
     def __post_init__(self):
         self.rule = get_rule(self.variant)
@@ -189,6 +250,24 @@ class FedSim:
                              "round; use store='auto'")
         self.slab = self.sampled and self.store != "scatter"
         self.n = int(getattr(self.substrate, "n", self.comp.n))
+        if self.faults is not None:
+            if self.tau is not None:
+                raise ValueError(
+                    "faults= does not compose with asynchronous "
+                    "pipelined rounds (tau) yet — the deadline/retry "
+                    "policies are defined against the round barrier "
+                    "(ROADMAP)")
+            if self.sampled:
+                raise ValueError(
+                    "faults= does not compose with sampled-client "
+                    "substrates yet — cohort sampling already models "
+                    "absence (ROADMAP)")
+            # Appendix-D participation replay for the fault masks: the
+            # bound substrate recomputes each round's coins from the SAME
+            # keys the scan consumes (jitted once; keys vary, shapes
+            # don't)
+            self._present_fn = jax.jit(
+                self.substrate.with_compressor(self.comp).round_present)
         self.method: Method = Method.build(self.variant, self.comp,
                                            self.substrate, self.hyper)
         # the engine's round keys: key, k_h, k_c, k_coin = split(key, 4);
@@ -253,6 +332,56 @@ class FedSim:
         fn = jax.jit(lambda st: jax.lax.scan(body, st, None, length=length))
         self._compiled[(length, metric_fn)] = fn
         return fn
+
+    def _chunk_fn_faulted(self, length: int, metric_fn,
+                          reset_mode: bool) -> Callable:
+        """The faulted chunk scan for GRACEFULLY-degrading rules: the
+        host-precomputed per-round fault masks arrive as scan inputs and
+        gate the commit via ``Method.step_full(..., faults=FaultStep)``
+        — the engine math up to the commit (and the whole RNG chain) is
+        the fault-free scan's."""
+        key = ("faulted", length, metric_fn, reset_mode)
+        fn = self._compiled.get(key)
+        if fn is not None:
+            return fn
+
+        def body(st, xs):
+            if reset_mode:
+                drop, reset = xs
+            else:
+                drop, reset = xs, None
+            ys = {"key": st.key}
+            new, info = self.method.step_full(
+                st, None, faults=FaultStep(drop=drop, reset=reset))
+            ys["metric"] = metric_fn(new)
+            ys["bits"] = new.bits_sent
+            ys["values"] = info.messages.values
+            if getattr(info.messages, "indices", None) is not None:
+                ys["indices"] = info.messages.indices
+            if info.present is not None:
+                ys["present"] = info.present
+            return new, ys
+
+        if reset_mode:
+            fn = jax.jit(lambda st, drops, resets:
+                         jax.lax.scan(body, st, (drops, resets)))
+        else:
+            fn = jax.jit(lambda st, drops:
+                         jax.lax.scan(body, st, drops))
+        self._compiled[key] = fn
+        return fn
+
+    def _key_chain(self, key, length: int) -> List[jax.Array]:
+        """Host replay of the engine's stateless key chain
+        (``k_{t+1} = split(k_t, 4)[0]``) for one chunk: the faulted path
+        derives each round's Appendix-D participation from the SAME keys
+        the scan is about to consume — the masks it hands the scan and
+        the coins the engine draws can never disagree."""
+        keys = []
+        for _ in range(length):
+            keys.append(key)
+            key = jax.random.split(key, 4)[0]
+        return keys
 
     def _chunk_fn_slab(self, length: int, metric_fn) -> Callable:
         """The chunk scan on the chunk-resident store (DESIGN.md §16):
@@ -356,18 +485,22 @@ class FedSim:
                 rep[field] = _expand_cohort(arr, sel, n)
         return plan._replace(**rep) if rep else plan
 
-    def _round_wire(self, ys, j: int, t: int):
+    def _round_wire(self, ys, j: int, t: int, sender_mask=None):
         """Decode round ``t``'s engine observables (chunk slot ``j``) into
-        its wire realization: (coin, active, RoundBytes, dense (n, d)
-        message rows).  Shared by the barrier and async paths, so both
-        bill the byte-exact codec identically."""
+        its wire realization: (coin, active, RoundBytes, raw buffers,
+        dense (n, d) message rows).  Shared by the barrier, async and
+        faulted paths, so all bill the byte-exact codec identically.
+        ``sender_mask`` (faulted graceful rounds) overrides the encoded
+        set: only the clients that actually upload get a record."""
         n = self.n
         coin = bool(ys["coin"][j]) if "coin" in ys else False
         if "present" in ys:
             present = np.asarray(ys["present"][j], bool)
         else:
             present = np.ones(n, bool)
-        if coin and self.rule.sync_requires_all:
+        if sender_mask is not None:
+            active = np.asarray(sender_mask, bool)
+        elif coin and self.rule.sync_requires_all:
             # the barrier: ALL clients answer the sync round
             active = np.ones(n, bool)
         else:
@@ -397,7 +530,7 @@ class FedSim:
             self.comp, plan, msgs, t, coin=coin,
             sync_values=ys["sync"][j] if "sync" in ys else None,
             present=active, slots=slots)
-        return coin, active, wire.round_bytes(bufs), (vals, idxs)
+        return coin, active, wire.round_bytes(bufs), bufs, (vals, idxs)
 
     def _dense_rows(self, vals, idxs) -> np.ndarray:
         """The (n, d) dense view of one round's messages (the async in-
@@ -416,22 +549,47 @@ class FedSim:
     def run(self, state, rounds: int, *,
             metric_fn: Optional[Callable] = None,
             log_events: bool = False, max_events: int = 100_000,
-            obs=None) -> SimResult:
+            obs=None, start_round: int = 0, clock0: float = 0.0,
+            checkpoint: Optional[Callable] = None) -> SimResult:
         """``obs`` is an optional :class:`repro.obs.Obs` handle: a live
         timeline gets every round's per-client message lifetimes
         (DESIGN.md §17) and a metrics registry gets the campaign
         counters — both recorded by THIS host loop on arrays it already
-        holds, so observability changes no traced code."""
+        holds, so observability changes no traced code.
+
+        ``start_round`` / ``clock0`` RESUME a barrier campaign mid-way:
+        rounds ``start_round..rounds-1`` run against the SAME seed-
+        derived per-round network and fault streams (they are keyed by
+        absolute round, so a killed-and-restored campaign replays the
+        exact tail an uninterrupted one would), starting the wall clock
+        at ``clock0``; traces cover the resumed segment only.
+        ``checkpoint(state, next_round, wall_clock)`` fires after every
+        chunk — save the MethodState there
+        (:func:`repro.checkpoint.io.save_method_state`) and a later run
+        can restore bit-identically."""
         metric_fn = self._metric_fn(metric_fn)
+        if not (0 <= int(start_round) <= rounds):
+            raise ValueError(f"start_round={start_round} outside "
+                             f"[0, {rounds}]")
         with _obs_scope(obs) as h:
             if self.tau is not None:
+                if start_round or clock0 or checkpoint is not None:
+                    raise ValueError("checkpoint/resume is barrier-only "
+                                     "(tau=None)")
                 return self._run_async(state, rounds, metric_fn,
                                        log_events, max_events, h)
+            if self.faults is not None:
+                return self._run_faulted(state, rounds, metric_fn,
+                                         log_events, max_events, h,
+                                         start_round, clock0, checkpoint)
             return self._run_barrier(state, rounds, metric_fn,
-                                     log_events, max_events, h)
+                                     log_events, max_events, h,
+                                     start_round, clock0, checkpoint)
 
     def _run_barrier(self, state, rounds: int, metric_fn,
-                     log_events: bool, max_events: int, h) -> SimResult:
+                     log_events: bool, max_events: int, h,
+                     start_round: int = 0, clock0: float = 0.0,
+                     checkpoint: Optional[Callable] = None) -> SimResult:
         rng = np.random.default_rng(self.seed)
         n = self.n
         d = int(self.comp.spec.d)
@@ -447,13 +605,14 @@ class FedSim:
         names = ("metric", "bits_sent", "bytes_up", "value_bytes",
                  "bytes_down", "sim_wall_clock", "bcast_clock",
                  "sync_round", "participants")
-        tr = {k: np.zeros(rounds) for k in names}
+        n_run = rounds - start_round
+        tr = {k: np.zeros(n_run) for k in names}
         events: List[FedEvent] = []
-        now = 0.0
+        now = float(clock0)
         bytes_up_total = 0
         sync_rounds = 0
 
-        done = 0
+        done = start_round
         while done < rounds:
             length = min(self.chunk, rounds - done)
             state, ys = self._run_chunk(state, length, metric_fn,
@@ -461,7 +620,8 @@ class FedSim:
             ys = jax.device_get(ys)                # ONE transfer per chunk
             for j in range(length):
                 t = done + j
-                coin, active, rb, _ = self._round_wire(ys, j, t)
+                rel = t - start_round
+                coin, active, rb, _bufs, _ = self._round_wire(ys, j, t)
                 up_bytes = np.asarray(rb.per_node, np.float64)
                 down_bytes = np.where(active, x_bytes, 0) \
                     .astype(np.float64)
@@ -472,7 +632,7 @@ class FedSim:
                 t_down = self.downlink.transfer_s(down_bytes, m_down)
                 t_up = self.uplink.transfer_s(up_bytes, m_up)
                 delay = t_down + self.compute_s + t_up
-                tr["bcast_clock"][t] = now
+                tr["bcast_clock"][rel] = now
                 heap = []
                 for i in range(n):
                     if not active[i]:
@@ -506,26 +666,297 @@ class FedSim:
 
                 bytes_up_total += rb.total_bytes
                 sync_rounds += int(coin)
-                tr["metric"][t] = float(ys["metric"][j])
-                tr["bits_sent"][t] = float(ys["bits"][j])
-                tr["bytes_up"][t] = rb.total_bytes
-                tr["value_bytes"][t] = rb.value_bytes
-                tr["bytes_down"][t] = recv * x_bytes
-                tr["sim_wall_clock"][t] = now
-                tr["sync_round"][t] = float(coin)
-                tr["participants"][t] = float(active.sum())
+                tr["metric"][rel] = float(ys["metric"][j])
+                tr["bits_sent"][rel] = float(ys["bits"][j])
+                tr["bytes_up"][rel] = rb.total_bytes
+                tr["value_bytes"][rel] = rb.value_bytes
+                tr["bytes_down"][rel] = recv * x_bytes
+                tr["sim_wall_clock"][rel] = now
+                tr["sync_round"][rel] = float(coin)
+                tr["participants"][rel] = float(active.sum())
             done += length
+            if checkpoint is not None:
+                checkpoint(state, done, now)
 
         summary = {
-            "rounds": float(rounds),
+            "rounds": float(n_run),
             "wall_clock_s": now,
             "bytes_up": float(bytes_up_total),
             "bytes_down": float(tr["bytes_down"].sum()),
             "sync_rounds": float(sync_rounds),
-            "mean_participants": float(tr["participants"].mean()),
-            "mean_bytes_up_per_round": float(bytes_up_total) / rounds,
+            "mean_participants": float(tr["participants"].mean())
+            if n_run else 0.0,
+            "mean_bytes_up_per_round":
+                float(bytes_up_total) / max(n_run, 1),
         }
         _obs_fed_metrics(h, tr, summary)
+        return SimResult(state=state, traces=tr,
+                         events=events if log_events else None,
+                         summary=summary)
+
+    def _verify_round_buffers(self, bufs, t: int, senders: np.ndarray,
+                              fc) -> None:
+        """The heap oracle's wire-integrity drill: every upload that
+        physically reaches the server is checksum-verified
+        (:func:`repro.fed.wire.verify`), and a corrupted one has a byte
+        REALLY flipped first (:func:`repro.fed.faults.corrupt_bytes`) —
+        proving the crc catches exactly the corrupt set and passes the
+        pristine set.  A miss either way is a simulator bug, not a fault:
+        RuntimeError."""
+        arrive = senders & ~fc.drop_up[t]
+        for i in np.nonzero(arrive)[0]:
+            buf = bufs[i]
+            if buf is None:                # header-only formats never are
+                raise RuntimeError(f"round {t}: sender {i} produced no "
+                                   "wire record")
+            if fc.corrupt[t, i]:
+                mangled = faultslib.corrupt_bytes(buf, t, int(i))
+                try:
+                    wire.verify(mangled)
+                except wire.WireDecodeError:
+                    continue               # caught — treated as dropped
+                raise RuntimeError(
+                    f"round {t}: corrupted record from client {i} passed "
+                    "wire.verify — the checksum missed a real bit flip")
+            wire.verify(buf)               # pristine must pass
+
+    def _run_faulted(self, state, rounds: int, metric_fn,
+                     log_events: bool, max_events: int, h,
+                     start_round: int = 0, clock0: float = 0.0,
+                     checkpoint: Optional[Callable] = None) -> SimResult:
+        """The FAULTED barrier replay (DESIGN.md §18).
+
+        The fault realization is host-precomputed for the FULL campaign
+        (:meth:`repro.fed.faults.FaultModel.draw_campaign` — keyed by
+        absolute round, so chunking and kill/restore cannot move it) and
+        split by rule family:
+
+        * gracefully-degrading rules (DASHA / PAGE / MVR): the per-round
+          drop mask — crashes, downlink losses, uplink losses, checksum-
+          caught corruption, deadline-cut stragglers — gates the engine
+          commit in-scan (``Method.step_full(..., faults=FaultStep)``);
+          the server proceeds with whatever was delivered.  Only actual
+          senders are encoded and billed; a short-handed round costs the
+          deadline.
+        * ``sync_requires_all`` rules (MARINA / SYNC-MVR): the METHOD
+          math never sees a fault — the server re-requests every missing
+          client with exponential backoff until its upload lands
+          (re-paying the downlink ``x`` and the uplink record per
+          attempt), so the state trace is bit-identical to the fault-free
+          run and the entire fault cost lands in bytes and wall-clock.
+          That asymmetry is the paper's robustness story, measured:
+          benchmarks/fed_faults_bench.py.
+
+        Fault masks are pure functions of pre-drawn booleans plus the
+        ``m_up > deadline_mult`` comparison (module docstring of
+        :mod:`repro.fed.faults`), so :class:`repro.fed.vecsim.VecFedSim`
+        realizes the IDENTICAL masks in-scan and the integer byte traces
+        match bit for bit."""
+        fm = self.faults
+        rng = np.random.default_rng(self.seed)
+        n = self.n
+        d = int(self.comp.spec.d)
+        x_bytes = X_BYTES_PER_COORD * d
+        md_all, mu_all = campaign_multipliers(
+            rng, rounds, self.downlink, self.uplink, n)
+        sync = self.rule.sync_requires_all
+        reset_mode = fm.rejoin == "reset"
+        fc = fm.draw_campaign(rounds, n, retries=sync)
+        cap = fm.late_cap()
+        deadline = fm.deadline_s(self.downlink, self.uplink,
+                                 self.compute_s, d)
+        cumbk = fm.backoff_cumsum() if sync else None
+        lat_d = self.downlink.latency_s
+
+        names = ("metric", "bits_sent", "bytes_up", "value_bytes",
+                 "bytes_down", "sim_wall_clock", "bcast_clock",
+                 "sync_round", "participants") + FAULT_TRACES
+        n_run = rounds - start_round
+        tr = {k: np.zeros(n_run) for k in names}
+        events: List[FedEvent] = []
+        now = float(clock0)
+        bytes_up_total = 0
+        bytes_down_total = 0
+        sync_rounds = 0
+
+        done = start_round
+        while done < rounds:
+            length = min(self.chunk, rounds - done)
+            sl = slice(done, done + length)
+            crash_off = fc.crashed[sl] | fc.drop_down[sl]
+            mu32 = mu_all[sl].astype(np.float32)
+            if sync:
+                # retries recover every message: the engine runs the
+                # fault-free scan, states bit-identical to no faults
+                state, ys = self._run_chunk(state, length, metric_fn,
+                                            h.timeline)
+            else:
+                keys = self._key_chain(state.key, length)
+                present = np.stack([np.asarray(self._present_fn(k), bool)
+                                    for k in keys])
+                senders_c = present & ~crash_off
+                late_c = senders_c & (mu32 > cap) if cap is not None \
+                    else np.zeros_like(senders_c)
+                lost_c = senders_c & (fc.drop_up[sl] | fc.corrupt[sl])
+                drop_c = crash_off | lost_c | late_c
+                fn = self._chunk_fn_faulted(length, metric_fn, reset_mode)
+                if reset_mode:
+                    state, ys = fn(state, jnp.asarray(drop_c),
+                                   jnp.asarray(fc.rejoin[sl]))
+                else:
+                    state, ys = fn(state, jnp.asarray(drop_c))
+            ys = jax.device_get(ys)
+            for j in range(length):
+                t = done + j
+                rel = t - start_round
+                if sync:
+                    coin, active, rb, bufs, _ = self._round_wire(ys, j, t)
+                    present_j = active          # all n answer
+                    senders = active & ~crash_off[j]
+                    late = senders & (mu32[j] > cap) if cap is not None \
+                        else np.zeros(n, bool)
+                    lost = senders & (fc.drop_up[t] | fc.corrupt[t])
+                else:
+                    present_j = present[j]
+                    senders = senders_c[j]
+                    late, lost = late_c[j], lost_c[j]
+                    coin, active, rb, bufs, _ = self._round_wire(
+                        ys, j, t, sender_mask=senders)
+                delivered = senders & ~lost & ~late
+                self._verify_round_buffers(bufs, t, senders, fc)
+
+                up_bytes = np.asarray(rb.per_node, np.float64)
+                down_bytes = np.where(senders, x_bytes, 0) \
+                    .astype(np.float64)
+                m_down, m_up = md_all[t], mu_all[t]
+                t_down = self.downlink.transfer_s(down_bytes, m_down)
+                t_up = self.uplink.transfer_s(up_bytes, m_up)
+                delay = t_down + self.compute_s + t_up
+                tr["bcast_clock"][rel] = now
+
+                if sync:
+                    miss = ~delivered           # ALL n must land
+                else:
+                    miss = present_j & ~delivered
+                any_miss = bool(miss.any())
+
+                # round close: the normal drain over what was delivered,
+                # or the deadline when the server had to cut someone
+                if delivered.any():
+                    base = max(now + delay[i]
+                               for i in np.nonzero(delivered)[0])
+                else:
+                    base = now + lat_d
+                if any_miss and deadline is not None:
+                    close = now + float(deadline)
+                else:
+                    close = base
+
+                retries_n = retry_up_n = capped_n = 0
+                retry_up_b = retry_down_b = 0
+                if sync and any_miss:
+                    # bounded-backoff re-requests: client i's recovered
+                    # upload lands at close + backoff(first_success) +
+                    # one nominal round trip of its own record
+                    land = close
+                    for i in np.nonzero(miss)[0]:
+                        fs = int(fc.first_success[t, i])
+                        ua = int(fc.up_attempts[t, i])
+                        nb = len(bufs[i])
+                        rt = self.downlink.latency_s \
+                            + x_bytes / self.downlink.bandwidth_Bps \
+                            + self.compute_s + self.uplink.latency_s \
+                            + nb / self.uplink.bandwidth_Bps
+                        land = max(land, close + cumbk[fs] + rt)
+                        retries_n += fs
+                        retry_up_n += ua
+                        retry_up_b += ua * nb
+                        retry_down_b += fs * x_bytes
+                        capped_n += int(fc.capped[t, i])
+                    completion = land
+                else:
+                    completion = close
+
+                sent_b = int(up_bytes[senders].sum())
+                wasted_b = int(up_bytes[lost | late].sum())
+                round_up = sent_b + retry_up_b
+                round_down = n * x_bytes + retry_down_b
+
+                if log_events:
+                    for i in np.nonzero(delivered)[0]:
+                        if len(events) >= max_events:
+                            break
+                        events.append(FedEvent(float(now + delay[i]),
+                                               "apply", int(i), t,
+                                               rb.per_node[i]))
+                    if len(events) < max_events:
+                        events.append(FedEvent(completion, "round", -1,
+                                               t, round_up))
+                if h.timeline is not None:
+                    record_fed_round(
+                        h.timeline, round=t, bcast=now,
+                        completion=completion, active=senders,
+                        arrivals=now + delay, t_down=t_down, t_up=t_up,
+                        per_node_bytes=np.asarray(rb.per_node),
+                        down_bytes=down_bytes, compute_s=self.compute_s,
+                        coin=coin, server_down_bytes=n * x_bytes)
+                    _record_fault_marks(
+                        h.timeline, t=t, bcast=now, completion=completion,
+                        arrivals=now + delay,
+                        crash_start=fc.crash_start[t], rejoin=fc.rejoin[t],
+                        rejoin_mode=fm.rejoin, drop_down=fc.drop_down[t],
+                        lost=lost, late=late,
+                        miss=miss if sync else None,
+                        retries=fc.first_success[t] if sync else None,
+                        retry_capped=fc.capped[t] if sync else None)
+                now = completion
+
+                bytes_up_total += round_up
+                bytes_down_total += round_down
+                sync_rounds += int(coin)
+                tr["metric"][rel] = float(ys["metric"][j])
+                tr["bits_sent"][rel] = float(ys["bits"][j])
+                tr["bytes_up"][rel] = round_up
+                tr["value_bytes"][rel] = rb.value_bytes
+                tr["bytes_down"][rel] = round_down
+                tr["sim_wall_clock"][rel] = now
+                tr["sync_round"][rel] = float(coin)
+                tr["participants"][rel] = float(n if sync
+                                                else delivered.sum())
+                tr["senders"][rel] = float(senders.sum())
+                tr["dropped"][rel] = float(miss.sum()) if sync \
+                    else float((present_j & ~delivered).sum())
+                tr["late"][rel] = float(late.sum())
+                tr["lost"][rel] = float(lost.sum())
+                tr["offline"][rel] = float((present_j
+                                            & crash_off[j]).sum())
+                tr["rejoins"][rel] = float(fc.rejoin[t].sum())
+                tr["retries"][rel] = float(retries_n)
+                tr["retry_bytes_up"][rel] = float(retry_up_b)
+                tr["retry_bytes_down"][rel] = float(retry_down_b)
+                tr["wasted_bytes_up"][rel] = float(wasted_b)
+                tr["retry_capped"][rel] = float(capped_n)
+            done += length
+            if checkpoint is not None:
+                checkpoint(state, done, now)
+
+        summary = {
+            "rounds": float(n_run),
+            "wall_clock_s": now,
+            "bytes_up": float(bytes_up_total),
+            "bytes_down": float(bytes_down_total),
+            "sync_rounds": float(sync_rounds),
+            "mean_participants": float(tr["participants"].mean())
+            if n_run else 0.0,
+            "mean_bytes_up_per_round":
+                float(bytes_up_total) / max(n_run, 1),
+            "dropped_rounds": float((tr["dropped"] > 0).sum()),
+            "retries": float(tr["retries"].sum()),
+            "retry_capped": float(tr["retry_capped"].sum()),
+            "wasted_bytes_up": float(tr["wasted_bytes_up"].sum()),
+        }
+        _obs_fed_metrics(h, tr, summary)
+        _obs_fault_metrics(h, tr)
         return SimResult(state=state, traces=tr,
                          events=events if log_events else None,
                          summary=summary)
@@ -659,7 +1090,8 @@ class FedSim:
                 ys = {k: np.asarray(v)[None] for k, v in ys1.items()}
                 j = 0
 
-            coin, active, rb, (vals, idxs) = self._round_wire(ys, j, t)
+            coin, active, rb, _bufs, (vals, idxs) = self._round_wire(ys, j,
+                                                                     t)
             up_bytes = np.asarray(rb.per_node, np.float64)
             down_bytes = np.where(active, x_bytes, 0).astype(np.float64)
             m_down, m_up = md_all[t], mu_all[t]
@@ -762,7 +1194,8 @@ def simulate(variant: str, comp, substrate, hyper: Hyper, x0, key, *,
              seed: int = 0, init_kw: Optional[dict] = None,
              metric_fn=None, log_events: bool = False,
              engine: str = "heap", tau: Optional[int] = None,
-             store: str = "auto", obs=None) -> SimResult:
+             store: str = "auto", obs=None,
+             faults: Optional[faultslib.FaultModel] = None) -> SimResult:
     """One-shot convenience: build the sim, init the method, run it.
 
     ``engine="heap"`` (default) is this module's event-driven reference;
@@ -771,7 +1204,9 @@ def simulate(variant: str, comp, substrate, hyper: Hyper, x0, key, *,
     ``tau`` selects asynchronous pipelined rounds with that staleness
     bound (DESIGN.md §14); None keeps the round barrier.  ``store``
     picks the persistent client-state store on sampled substrates
-    (DESIGN.md §16): "slab" / "scatter" / "auto"."""
+    (DESIGN.md §16): "slab" / "scatter" / "auto".  ``faults`` injects a
+    seeded :class:`repro.fed.faults.FaultModel` — crashes, lossy links,
+    corruption, deadlines/retries (DESIGN.md §18)."""
     if engine == "vec":
         from repro.fed.vecsim import VecFedSim
         cls = VecFedSim
@@ -782,7 +1217,7 @@ def simulate(variant: str, comp, substrate, hyper: Hyper, x0, key, *,
     sim = cls(variant=variant, comp=comp, substrate=substrate,
               hyper=hyper, uplink=uplink or LinkModel(),
               downlink=downlink or LinkModel(), compute_s=compute_s,
-              seed=seed, tau=tau, store=store)
+              seed=seed, tau=tau, store=store, faults=faults)
     state = sim.init(x0, key, **(init_kw or {}))
     kw = {} if engine == "vec" else {"log_events": log_events}
     return sim.run(state, rounds, metric_fn=metric_fn, obs=obs, **kw)

@@ -45,12 +45,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.fed import wire
+from repro.fed import faults as faultslib
 from repro.fed.net import LinkModel, campaign_streams, round_multipliers
-from repro.fed.sim import (DEFAULT_CHUNK, X_BYTES_PER_COORD, SimResult,
-                           _obs_fed_metrics)
+from repro.fed.sim import (DEFAULT_CHUNK, FAULT_TRACES, X_BYTES_PER_COORD,
+                           SimResult, _obs_fault_metrics, _obs_fed_metrics)
 from repro.kernels import ops
 from repro.methods.accounting import downlink_receivers
-from repro.methods.engine import Hyper, Method
+from repro.methods.engine import FaultStep, Hyper, Method
 from repro.methods.rules import get_rule
 from repro.methods.substrates import gather_slab_rows as _gather_rows
 from repro.methods.substrates import slab_layout
@@ -94,6 +95,13 @@ class VecFedSim:
     #: samples clients (c < n).  Both stores are bit-identical — same RNG
     #: chain, traces and wire bytes (tests/test_slab_store.py).
     store: str = "auto"
+    #: fault injection (DESIGN.md §18): the same seeded
+    #: :class:`repro.fed.faults.FaultModel` the heap oracle consumes —
+    #: the campaign realization is host-precomputed and streamed into
+    #: the scan as per-round boolean xs, so both simulators face
+    #: bit-identical fault masks (and bit-identical byte traces).  v1
+    #: scope: barrier only (``tau=None``), dense substrates.
+    faults: Optional[faultslib.FaultModel] = None
 
     def __post_init__(self):
         self.rule = get_rule(self.variant)
@@ -119,6 +127,18 @@ class VecFedSim:
                              "store IS the degenerate slab")
         self.slab = self.sampled and self.store != "scatter"
         self.n = int(getattr(self.substrate, "n", self.comp.n))
+        if self.faults is not None:
+            if self.tau is not None:
+                raise ValueError(
+                    "faults= does not compose with asynchronous "
+                    "pipelined rounds (tau) yet — the deadline/retry "
+                    "policies are defined against the round barrier "
+                    "(ROADMAP)")
+            if self.sampled:
+                raise ValueError(
+                    "faults= does not compose with sampled-client "
+                    "substrates yet — cohort sampling already models "
+                    "absence (ROADMAP)")
         self._bound = self.substrate.with_compressor(self.comp)
         self.schema = wire.wire_schema(
             self._bound.cohort_rc if self.sampled else self.comp,
@@ -309,31 +329,70 @@ class VecFedSim:
             hist.observe(dt)
 
     def run(self, state, rounds: int, *,
-            metric_fn: Optional[Callable] = None, obs=None) -> SimResult:
+            metric_fn: Optional[Callable] = None, obs=None,
+            start_round: int = 0, clock0: float = 0.0,
+            checkpoint: Optional[Callable] = None) -> SimResult:
         """``obs`` is an optional :class:`repro.obs.Obs` handle.  The
         scan emits per-round scalars only, so a live timeline here gets
         HOST-track chunk / slab spans (wall time) plus compile spans; the
         per-client simulated-time view is reconstructed post hoc by
         :func:`repro.obs.reconstruct_vec_timeline` from this run's
         result.  A metrics registry gets the same campaign aggregates
-        the heap sim emits."""
+        the heap sim emits.
+
+        ``start_round`` / ``clock0`` / ``checkpoint`` carry the same
+        kill-and-restore contract as :meth:`repro.fed.sim.FedSim.run`:
+        the per-round network and fault streams are keyed by absolute
+        round, the wall clock accumulates sequentially from ``clock0``
+        (bitwise the uninterrupted chain — never a rebased cumsum), and
+        ``checkpoint(state, next_round, wall_clock)`` fires after each
+        chunk."""
         metric_fn = self._metric_fn(metric_fn)
+        if not (0 <= int(start_round) <= rounds):
+            raise ValueError(f"start_round={start_round} outside "
+                             f"[0, {rounds}]")
         with _obs_scope(obs) as h:
             if self.tau is not None and rounds > 0:
+                if start_round or clock0 or checkpoint is not None:
+                    raise ValueError("checkpoint/resume is barrier-only "
+                                     "(tau=None)")
                 return self._run_async(state, rounds, metric_fn, h)
-            return self._run_barrier(state, rounds, metric_fn, h)
+            if self.faults is not None and rounds > 0:
+                return self._run_faulted(state, rounds, metric_fn, h,
+                                         start_round, clock0, checkpoint)
+            return self._run_barrier(state, rounds, metric_fn, h,
+                                     start_round, clock0, checkpoint)
 
-    def _run_barrier(self, state, rounds: int, metric_fn, h) -> SimResult:
+    @staticmethod
+    def _seq_wall(round_t: np.ndarray, clock0: float) -> np.ndarray:
+        """Per-round absolute wall clock by SEQUENTIAL f64 accumulation
+        from ``clock0`` — the exact fp chain an uninterrupted run (or the
+        heap oracle's ``now``) produces, so a campaign resumed from a
+        checkpointed ``(state, round, wall)`` continues bit-identically
+        (``np.cumsum`` is the clock0 == 0 special case; rebasing a cumsum
+        by addition would re-associate the chain)."""
+        out = np.empty(round_t.shape, np.float64)
+        c = float(clock0)
+        for i, r in enumerate(round_t.astype(np.float64)):
+            c = c + r
+            out[i] = c
+        return out
+
+    def _run_barrier(self, state, rounds: int, metric_fn, h,
+                     start_round: int = 0, clock0: float = 0.0,
+                     checkpoint: Optional[Callable] = None) -> SimResult:
         n = self.n
         rng = np.random.default_rng(self.seed)
         streams = campaign_streams(rng, rounds)
-        if rounds <= 0:
+        if rounds <= 0 or start_round >= rounds:
             return SimResult(state=state,
                              traces={}, events=None,
-                             summary={"rounds": 0.0, "wall_clock_s": 0.0})
+                             summary={"rounds": 0.0,
+                                      "wall_clock_s": float(clock0)})
 
         parts = []
-        done = 0
+        now = float(clock0)
+        done = start_round
         while done < rounds:
             length = min(self.chunk, rounds - done)
             # materialize only this chunk's (length, n) multiplier slices
@@ -358,17 +417,22 @@ class VecFedSim:
             else:
                 state, ys = self._chunk_fn(length, metric_fn)(
                     state, jnp.asarray(md), jnp.asarray(mu))
-            parts.append(jax.device_get(ys))       # ONE transfer per chunk
+            part = jax.device_get(ys)              # ONE transfer per chunk
+            parts.append(part)
             if h:
                 self._obs_chunk(h, t0, done, length)
             done += length
+            if checkpoint is not None:
+                now = float(self._seq_wall(part["round_t"], now)[-1])
+                checkpoint(state, done, now)
         ys = {k: np.concatenate([p[k] for p in parts]) for k in parts[0]}
 
-        wall = np.cumsum(ys["round_t"].astype(np.float64))
-        bcast = np.concatenate([[0.0], wall[:-1]])
+        n_run = rounds - start_round
+        wall = self._seq_wall(ys["round_t"], clock0)
+        bcast = np.concatenate([[clock0], wall[:-1]])
         traces, summary = self._bill_round_bytes(
-            ys, rounds, wall, bcast,
-            wall_clock_s=float(wall[-1]) if rounds else 0.0)
+            ys, n_run, wall, bcast,
+            wall_clock_s=float(wall[-1]) if n_run else float(clock0))
         _obs_fed_metrics(h, traces, summary)
         return SimResult(state=state, traces=traces, events=None,
                          summary=summary)
@@ -416,6 +480,358 @@ class VecFedSim:
             "mean_bytes_up_per_round": float(bytes_up.sum()) / rounds,
         }
         return traces, summary
+
+    # ------------------------------------------------------------------
+    # fault injection (DESIGN.md §18)
+    # ------------------------------------------------------------------
+
+    def _chunk_fn_graceful_faulted(self, length: int, metric_fn,
+                                   reset_mode: bool) -> Callable:
+        """The faulted barrier scan for gracefully-degrading rules: the
+        host-precomputed per-round fault booleans arrive as xs, the full
+        drop mask is assembled IN-scan from them plus the one float
+        comparison ``m_up > deadline_mult`` (pure functions of the same
+        inputs the heap oracle reads — bit-identical masks), and the
+        engine commit is gated via ``step_full(..., faults=FaultStep)``.
+        Emitted byte quantities are integer sums over the sender set; a
+        short-handed round costs the static f32 deadline."""
+        key_ = ("gfault", length, metric_fn, reset_mode)
+        fn = self._compiled.get(key_)
+        if fn is not None:
+            return fn
+        fm = self.faults
+        n, d = self.n, int(self.comp.spec.d)
+        schema = self.schema
+        x_bytes = X_BYTES_PER_COORD * d
+        lat_d = float(self.downlink.latency_s)
+        cap = fm.late_cap()
+        dl = fm.deadline_s(self.downlink, self.uplink, self.compute_s, d)
+
+        def body(st, xs):
+            if reset_mode:
+                m_down, m_up, crash_off, lostx, reset = xs
+            else:
+                m_down, m_up, crash_off, lostx = xs
+                reset = None
+            key = st.key                               # pre-step key
+            # the SAME Appendix-D plan the engine draws (pure + CSE)
+            present = self._bound.round_present(key)
+            senders = present & ~crash_off
+            if cap is not None:
+                late = senders & (m_up > cap)
+            else:
+                late = jnp.zeros((n,), bool)
+            lost = senders & lostx
+            drop = crash_off | lost | late
+            new, info = self.method.step_full(
+                st, None, faults=FaultStep(drop=drop, reset=reset))
+            delivered = senders & ~lost & ~late
+            miss = present & ~delivered
+
+            if schema.static_count is None:
+                counts = self._bound.round_wire_counts(key)
+            else:
+                counts = jnp.full((n,), schema.static_count, jnp.int32)
+            counts = counts * senders                  # only senders ship
+            comp_b = schema.header_bytes \
+                + schema.bytes_per_value * counts.astype(jnp.float32)
+            up_b = comp_b * senders.astype(jnp.float32)
+            down_b = x_bytes * senders.astype(jnp.float32)
+            delay = self.downlink.latency_s \
+                + down_b / self.downlink.bandwidth_Bps * m_down \
+                + self.compute_s \
+                + self.uplink.latency_s \
+                + up_b / self.uplink.bandwidth_Bps * m_up
+            masked = jnp.where(delivered, delay, -jnp.inf)
+            n_del = jnp.sum(delivered.astype(jnp.int32))
+            base = jnp.where(n_del > 0, jnp.max(masked),
+                             jnp.float32(lat_d))
+            any_miss = jnp.any(miss)
+            if dl is not None:
+                round_t = jnp.where(any_miss, jnp.float32(dl), base)
+            else:
+                round_t = base
+            waste = lost | late
+            i32 = jnp.int32
+            ys = {"metric": metric_fn(new), "bits": new.bits_sent,
+                  "coin": jnp.zeros((), bool),
+                  "participants": n_del,
+                  "counts_sum": jnp.sum(counts),
+                  "round_t": round_t,
+                  "senders": jnp.sum(senders.astype(i32)),
+                  "dropped": jnp.sum(miss.astype(i32)),
+                  "late": jnp.sum(late.astype(i32)),
+                  "lost": jnp.sum(lost.astype(i32)),
+                  "offline": jnp.sum((present & crash_off).astype(i32)),
+                  "wasted_n": jnp.sum(waste.astype(i32)),
+                  "wasted_counts": jnp.sum(counts * waste)}
+            return new, ys
+
+        fn = jax.jit(lambda st, *xs: jax.lax.scan(body, st, xs))
+        self._compiled[key_] = fn
+        return fn
+
+    def _chunk_fn_sync_faulted(self, length: int, metric_fn) -> Callable:
+        """The faulted barrier scan for ``sync_requires_all`` rules
+        (MARINA / SYNC-MVR): the engine step is the FAULT-FREE one — the
+        server's bounded-backoff re-requests recover every missing upload,
+        so the method math and state trace are bit-identical to a
+        fault-free campaign — and the faults land entirely in bytes and
+        wall-clock: the round closes at the deadline, then each missing
+        client's recovered upload lands after its backoff + one nominal
+        round trip, with every attempt billed (downlink ``x`` per
+        attempt, the uplink record per attempt reaching a live
+        client)."""
+        key_ = ("sfault", length, metric_fn)
+        fn = self._compiled.get(key_)
+        if fn is not None:
+            return fn
+        fm = self.faults
+        n, d = self.n, int(self.comp.spec.d)
+        rule, schema = self.rule, self.schema
+        x_bytes = X_BYTES_PER_COORD * d
+        dense_up = float(wire.HEADER_BYTES + 4 * d)
+        lat_d = float(self.downlink.latency_s)
+        cap = fm.late_cap()
+        dl = fm.deadline_s(self.downlink, self.uplink, self.compute_s, d)
+        cumbk = jnp.asarray(fm.backoff_cumsum(), jnp.float32)
+
+        def body(st, xs):
+            m_down, m_up, crash_off, lostx, fs, ua, capped = xs
+            key = st.key                               # pre-step key
+            new, info = self.method.step_full(st, None)
+            coin = info.coin if info.coin is not None \
+                else jnp.zeros((), bool)
+            present = info.present if info.present is not None \
+                else jnp.ones((n,), bool)
+            if rule.sync_requires_all and info.coin is not None:
+                active = jnp.logical_or(present, coin)  # the barrier
+            else:
+                active = present
+            if schema.static_count is None:
+                counts = self._bound.round_wire_counts(key)
+            else:
+                counts = jnp.full((n,), schema.static_count, jnp.int32)
+            counts = counts * active
+
+            senders = active & ~crash_off
+            if cap is not None:
+                late = senders & (m_up > cap)
+            else:
+                late = jnp.zeros((n,), bool)
+            lost = senders & lostx
+            delivered = senders & ~lost & ~late
+            miss = ~delivered                          # ALL n must land
+
+            comp_b = schema.header_bytes \
+                + schema.bytes_per_value * counts.astype(jnp.float32)
+            nb = jnp.where(coin, jnp.float32(dense_up), comp_b)
+            up_b = nb * senders.astype(jnp.float32)
+            down_b = x_bytes * senders.astype(jnp.float32)
+            delay = self.downlink.latency_s \
+                + down_b / self.downlink.bandwidth_Bps * m_down \
+                + self.compute_s \
+                + self.uplink.latency_s \
+                + up_b / self.uplink.bandwidth_Bps * m_up
+            masked = jnp.where(delivered, delay, -jnp.inf)
+            n_del = jnp.sum(delivered.astype(jnp.int32))
+            base = jnp.where(n_del > 0, jnp.max(masked),
+                             jnp.float32(lat_d))
+            any_miss = jnp.any(miss)
+            if dl is not None:
+                close = jnp.where(any_miss, jnp.float32(dl), base)
+            else:
+                close = base
+            # recovered upload of client i: close + backoff(first
+            # success) + one NOMINAL round trip of its own record
+            rt = jnp.float32(self.downlink.latency_s) \
+                + jnp.float32(x_bytes) \
+                / jnp.float32(self.downlink.bandwidth_Bps) \
+                + jnp.float32(self.compute_s) \
+                + jnp.float32(self.uplink.latency_s) \
+                + nb / jnp.float32(self.uplink.bandwidth_Bps)
+            land = jnp.where(miss, close + cumbk[fs] + rt, -jnp.inf)
+            round_t = jnp.where(any_miss,
+                                jnp.maximum(close, jnp.max(land)), close)
+
+            i32 = jnp.int32
+            mi = miss.astype(i32)
+            ys = {"metric": metric_fn(new), "bits": new.bits_sent,
+                  "coin": coin,
+                  "participants": jnp.sum(active.astype(i32)),
+                  "counts_sum": jnp.sum(counts),
+                  "round_t": round_t,
+                  "senders": jnp.sum(senders.astype(i32)),
+                  "counts_send": jnp.sum(counts * senders),
+                  "dropped": jnp.sum(mi),
+                  "late": jnp.sum(late.astype(i32)),
+                  "lost": jnp.sum(lost.astype(i32)),
+                  "offline": jnp.sum(crash_off.astype(i32)),
+                  "retries": jnp.sum(fs * mi),
+                  "retry_up_n": jnp.sum(ua * mi),
+                  "retry_counts": jnp.sum(counts * ua * mi),
+                  "capped": jnp.sum((capped & miss).astype(i32)),
+                  "wasted_n": jnp.sum((lost | late).astype(i32)),
+                  "wasted_counts": jnp.sum(counts * (lost | late))}
+            return new, ys
+
+        fn = jax.jit(lambda st, *xs: jax.lax.scan(body, st, xs))
+        self._compiled[key_] = fn
+        return fn
+
+    def _bill_round_bytes_faulted(self, ys, fc, sync: bool, n_run: int,
+                                  start_round: int, wall: np.ndarray,
+                                  bcast: np.ndarray, wall_clock_s: float):
+        """Faulted-campaign billing from the stacked scan outputs: the
+        same exact-integer formulas the heap oracle realizes from its raw
+        buffers — ``len(buf_i) = header + bytes_per_value * count_i``
+        (or the dense record on a coin round) — summed over the SENDER
+        set, plus the sync rules' retry re-payments.  Every operand is an
+        int64 host array of in-scan integer sums, so heap-vs-vec byte
+        traces are bit-exact."""
+        n, d = self.n, int(self.comp.spec.d)
+        x_bytes = X_BYTES_PER_COORD * d
+        head, bpv = self.schema.header_bytes, self.schema.bytes_per_value
+        dense_up = wire.HEADER_BYTES + 4 * d
+        i64 = np.int64
+        coin = ys["coin"].astype(bool)
+        part = ys["participants"].astype(i64)
+        senders = ys["senders"].astype(i64)
+        csum = ys["counts_sum"].astype(i64)
+        csend = ys["counts_send"].astype(i64) if sync else csum
+        wasted_n = ys["wasted_n"].astype(i64)
+        wasted_c = ys["wasted_counts"].astype(i64)
+        sl = slice(start_round, start_round + n_run)
+
+        if sync:
+            retries = ys["retries"].astype(i64)
+            retry_up_n = ys["retry_up_n"].astype(i64)
+            retry_c = ys["retry_counts"].astype(i64)
+            capped = ys["capped"].astype(i64)
+            sent = np.where(coin, dense_up * senders,
+                            head * senders + bpv * csend)
+            retry_up_b = np.where(coin, dense_up * retry_up_n,
+                                  head * retry_up_n + bpv * retry_c)
+            retry_down_b = retries * x_bytes
+            value_bytes = np.where(coin, n * 4 * d, 4 * csum)
+            wasted_b = np.where(coin, dense_up * wasted_n,
+                                head * wasted_n + bpv * wasted_c)
+        else:
+            retries = retry_up_n = capped = np.zeros(n_run, i64)
+            retry_up_b = retry_down_b = np.zeros(n_run, i64)
+            sent = head * senders + bpv * csend
+            value_bytes = 4 * csend
+            wasted_b = head * wasted_n + bpv * wasted_c
+        bytes_up = sent + retry_up_b
+        bytes_down = n * x_bytes + retry_down_b
+
+        traces = {
+            "metric": ys["metric"].astype(np.float64),
+            "bits_sent": ys["bits"].astype(np.float64),
+            "bytes_up": bytes_up.astype(np.float64),
+            "value_bytes": value_bytes.astype(np.float64),
+            "bytes_down": bytes_down.astype(np.float64),
+            "sim_wall_clock": wall,
+            "bcast_clock": bcast,
+            "sync_round": coin.astype(np.float64),
+            "participants": part.astype(np.float64),
+            "senders": senders.astype(np.float64),
+            "dropped": ys["dropped"].astype(np.float64),
+            "late": ys["late"].astype(np.float64),
+            "lost": ys["lost"].astype(np.float64),
+            "offline": ys["offline"].astype(np.float64),
+            "rejoins": fc.rejoin[sl].sum(axis=1).astype(np.float64),
+            "retries": retries.astype(np.float64),
+            "retry_bytes_up": retry_up_b.astype(np.float64),
+            "retry_bytes_down": retry_down_b.astype(np.float64),
+            "wasted_bytes_up": wasted_b.astype(np.float64),
+            "retry_capped": capped.astype(np.float64),
+        }
+        summary = {
+            "rounds": float(n_run),
+            "wall_clock_s": wall_clock_s,
+            "bytes_up": float(bytes_up.sum()),
+            "bytes_down": float(bytes_down.sum()),
+            "sync_rounds": float(coin.sum()),
+            "mean_participants": float(part.mean()) if n_run else 0.0,
+            "mean_bytes_up_per_round":
+                float(bytes_up.sum()) / max(n_run, 1),
+            "dropped_rounds": float((traces["dropped"] > 0).sum()),
+            "retries": float(retries.sum()),
+            "retry_capped": float(capped.sum()),
+            "wasted_bytes_up": float(wasted_b.sum()),
+        }
+        return traces, summary
+
+    def _run_faulted(self, state, rounds: int, metric_fn, h,
+                     start_round: int = 0, clock0: float = 0.0,
+                     checkpoint: Optional[Callable] = None) -> SimResult:
+        """The faulted barrier campaign, vectorized: the fault realization
+        is the heap oracle's own host-precomputed
+        :class:`repro.fed.faults.FaultCampaign` (absolute-round-keyed, so
+        chunking / kill-and-restore cannot move it), streamed into the
+        faulted scan bodies as per-round xs."""
+        fm = self.faults
+        n = self.n
+        rng = np.random.default_rng(self.seed)
+        streams = campaign_streams(rng, rounds)
+        if start_round >= rounds:
+            return SimResult(state=state, traces={}, events=None,
+                             summary={"rounds": 0.0,
+                                      "wall_clock_s": float(clock0)})
+        sync = self.rule.sync_requires_all
+        reset_mode = fm.rejoin == "reset"
+        fc = fm.draw_campaign(rounds, n, retries=sync)
+
+        parts = []
+        now = float(clock0)
+        done = start_round
+        while done < rounds:
+            length = min(self.chunk, rounds - done)
+            sl = slice(done, done + length)
+            md = np.empty((length, n), np.float32)
+            mu = np.empty((length, n), np.float32)
+            for j in range(length):
+                md[j], mu[j] = round_multipliers(
+                    streams[done + j], self.downlink, self.uplink, n)
+            crash_off = fc.crashed[sl] | fc.drop_down[sl]
+            lostx = fc.drop_up[sl] | fc.corrupt[sl]
+            t0 = time.perf_counter() if h else 0.0
+            if sync:
+                fn = self._chunk_fn_sync_faulted(length, metric_fn)
+                state, ys = fn(state, jnp.asarray(md), jnp.asarray(mu),
+                               jnp.asarray(crash_off), jnp.asarray(lostx),
+                               jnp.asarray(fc.first_success[sl]),
+                               jnp.asarray(fc.up_attempts[sl]),
+                               jnp.asarray(fc.capped[sl]))
+            else:
+                fn = self._chunk_fn_graceful_faulted(length, metric_fn,
+                                                     reset_mode)
+                args = (jnp.asarray(md), jnp.asarray(mu),
+                        jnp.asarray(crash_off), jnp.asarray(lostx))
+                if reset_mode:
+                    args += (jnp.asarray(fc.rejoin[sl]),)
+                state, ys = fn(state, *args)
+            part = jax.device_get(ys)              # ONE transfer per chunk
+            parts.append(part)
+            if h:
+                self._obs_chunk(h, t0, done, length)
+            done += length
+            if checkpoint is not None:
+                now = float(self._seq_wall(part["round_t"], now)[-1])
+                checkpoint(state, done, now)
+        ys = {k: np.concatenate([p[k] for p in parts]) for k in parts[0]}
+
+        n_run = rounds - start_round
+        wall = self._seq_wall(ys["round_t"], clock0)
+        bcast = np.concatenate([[clock0], wall[:-1]])
+        traces, summary = self._bill_round_bytes_faulted(
+            ys, fc, sync, n_run, start_round, wall, bcast,
+            wall_clock_s=float(wall[-1]))
+        _obs_fed_metrics(h, traces, summary)
+        _obs_fault_metrics(h, traces)
+        return SimResult(state=state, traces=traces, events=None,
+                         summary=summary)
 
     # ------------------------------------------------------------------
     # asynchronous pipelined rounds (DESIGN.md §14)

@@ -1,8 +1,8 @@
 """Layer 1 of the federated transport subsystem: the wire codec.
 
 Every compressed message the plan layer can emit has a byte-exact
-serialization here (DESIGN.md §12).  Five formats, one fixed 16-byte
-header (`<BBHIII`: version, fmt, node, round, d, count):
+serialization here (DESIGN.md §12).  Five formats, one fixed 20-byte
+header (`<BBHIIII`: version, fmt, node, round, d, count, crc32):
 
 =============  ==============================================  ============
 fmt            body                                            used by
@@ -46,17 +46,28 @@ Contracts (tested in tests/test_fed_wire.py):
   bytes = ``4 * wire_coords`` + fixed headers (DESIGN.md §6), which
   :func:`repro.methods.accounting.expected_wire_coords` predicts in
   expectation over sync coins.
+
+Wire v2 (DESIGN.md §18) grew the header 16 -> 20 bytes: a CRC32 over the
+first 16 header bytes plus the body sits at offset 16, so every field
+offset of the v1 layout is preserved and corruption anywhere in the
+record — header or body — fails :func:`decode` with
+:class:`WireCorruptionError`.  ``decode`` also rejects records whose
+buffer is shorter than the header-declared body
+(:class:`WireTruncatedError`) instead of silently mis-parsing a clipped
+buffer.  The server treats either failure as a dropped message
+(``src/repro/fed/faults.py``).
 """
 from __future__ import annotations
 
 import struct
+import zlib
 from typing import List, NamedTuple, Optional, Sequence
 
 import numpy as np
 
 from repro.compress.plan import Plan
 
-WIRE_VERSION = 1
+WIRE_VERSION = 2
 
 FMT_DENSE = 0
 FMT_SPARSE_IDX = 1
@@ -68,23 +79,39 @@ FMT_NAMES = {FMT_DENSE: "dense", FMT_SPARSE_IDX: "sparse_idx",
              FMT_SPARSE_SEED: "sparse_seed", FMT_PERMK: "permk",
              FMT_PERMK_SLOT: "permk_slot"}
 
-_HEADER = struct.Struct("<BBHIII")      # version, fmt, node, round, d, count
+_HEADER = struct.Struct("<BBHIIII")  # version, fmt, node, round, d, count, crc
+_HEAD16 = struct.Struct("<BBHIII")   # the CRC-covered field prefix (v1 layout)
+_CRC = struct.Struct("<I")           # crc32 at offset 16
 _PERMK_EXT = struct.Struct("<II")       # shift, period (= n * blk)
 _PERMK_SLOT_EXT = struct.Struct("<III")  # slot, shift, period (= C * blk)
-HEADER_BYTES = _HEADER.size             # 16
+HEADER_BYTES = _HEADER.size             # 20
+CRC_OFFSET = _HEAD16.size               # 16
 PERMK_EXT_BYTES = _PERMK_EXT.size       # 8
 PERMK_SLOT_EXT_BYTES = _PERMK_SLOT_EXT.size  # 12
 
 #: packed (uint32 idx, float32 val) record — the SPARSE_IDX body
 REC_DTYPE = np.dtype([("idx", "<u4"), ("val", "<f4")])
 
-#: the 16-byte header as a packed numpy dtype (== _HEADER's layout), used by
+#: the 20-byte header as a packed numpy dtype (== _HEADER's layout), used by
 #: the vectorized round encoder and asserted equal in tests/test_fed_wire.py
 HDR_DTYPE = np.dtype([("ver", "u1"), ("fmt", "u1"), ("node", "<u2"),
-                      ("round", "<u4"), ("d", "<u4"), ("count", "<u4")])
+                      ("round", "<u4"), ("d", "<u4"), ("count", "<u4"),
+                      ("crc", "<u4")])
 EXT_DTYPE = np.dtype([("shift", "<u4"), ("period", "<u4")])
 SLOT_EXT_DTYPE = np.dtype([("slot", "<u4"), ("shift", "<u4"),
                            ("period", "<u4")])
+
+
+class WireDecodeError(ValueError):
+    """A wire record failed to decode; the server drops the message."""
+
+
+class WireTruncatedError(WireDecodeError):
+    """The buffer is shorter than the header-declared record layout."""
+
+
+class WireCorruptionError(WireDecodeError):
+    """The header CRC32 does not match the record's bytes."""
 
 
 class WireSchema(NamedTuple):
@@ -93,7 +120,7 @@ class WireSchema(NamedTuple):
     (spot-checked byte-exact against :func:`encode_round` in
     tests/test_fed_scale.py):
 
-    * ``header_bytes``    — fixed per-message overhead (16, +8 for PERMK);
+    * ``header_bytes``    — fixed per-message overhead (20, +8 for PERMK);
     * ``bytes_per_value`` — 4 (values only) or 8 (a private support ships
       its packed uint32 index next to every float32 value);
     * ``static_count``    — shipped value scalars per message when the
@@ -168,11 +195,18 @@ def _f32(x) -> np.ndarray:
     return np.ascontiguousarray(np.asarray(x, np.float32))
 
 
+def _seal(head16: bytes, body: bytes) -> bytes:
+    """Assemble one record: the CRC32 of (16-byte field prefix + body)
+    lands at offset 16, between the fields and the body."""
+    crc = zlib.crc32(body, zlib.crc32(head16))
+    return head16 + _CRC.pack(crc) + body
+
+
 def encode_dense(node: int, t: int, values) -> bytes:
     values = _f32(values)
-    head = _HEADER.pack(WIRE_VERSION, FMT_DENSE, node, t,
+    head = _HEAD16.pack(WIRE_VERSION, FMT_DENSE, node, t,
                         values.size, values.size)
-    return head + values.tobytes()
+    return _seal(head, values.tobytes())
 
 
 def encode_sparse_idx(node: int, t: int, d: int, indices, values) -> bytes:
@@ -184,16 +218,16 @@ def encode_sparse_idx(node: int, t: int, d: int, indices, values) -> bytes:
     rec = np.empty(idx.size, REC_DTYPE)
     rec["idx"] = idx.astype(np.uint32)
     rec["val"] = val
-    head = _HEADER.pack(WIRE_VERSION, FMT_SPARSE_IDX, node, t, d, idx.size)
-    return head + rec.tobytes()
+    head = _HEAD16.pack(WIRE_VERSION, FMT_SPARSE_IDX, node, t, d, idx.size)
+    return _seal(head, rec.tobytes())
 
 
 def encode_sparse_seed(node: int, t: int, d: int, values) -> bytes:
     """Shared-support sparse message: values only — the index set follows
     from the shared round seed, which the receiver also holds."""
     val = _f32(values)
-    head = _HEADER.pack(WIRE_VERSION, FMT_SPARSE_SEED, node, t, d, val.size)
-    return head + val.tobytes()
+    head = _HEAD16.pack(WIRE_VERSION, FMT_SPARSE_SEED, node, t, d, val.size)
+    return _seal(head, val.tobytes())
 
 
 def encode_permk(node: int, t: int, d: int, shift: int, period: int,
@@ -202,9 +236,9 @@ def encode_permk(node: int, t: int, d: int, shift: int, period: int,
     ``values`` has blk = period / n slots; slots whose reconstructed index
     falls at or beyond d are padding and decode to nothing."""
     val = _f32(values)
-    head = _HEADER.pack(WIRE_VERSION, FMT_PERMK, node, t, d, val.size)
-    return head + _PERMK_EXT.pack(shift % max(period, 1), period) \
-        + val.tobytes()
+    head = _HEAD16.pack(WIRE_VERSION, FMT_PERMK, node, t, d, val.size)
+    return _seal(head, _PERMK_EXT.pack(shift % max(period, 1), period)
+                 + val.tobytes())
 
 
 def encode_permk_slot(node: int, t: int, d: int, slot: int, shift: int,
@@ -215,9 +249,9 @@ def encode_permk_slot(node: int, t: int, d: int, slot: int, shift: int,
     receiver reconstructs ``(slot*blk + j - shift) mod period`` without
     knowing the cohort draw."""
     val = _f32(values)
-    head = _HEADER.pack(WIRE_VERSION, FMT_PERMK_SLOT, node, t, d, val.size)
-    return head + _PERMK_SLOT_EXT.pack(slot, shift % max(period, 1),
-                                       period) + val.tobytes()
+    head = _HEAD16.pack(WIRE_VERSION, FMT_PERMK_SLOT, node, t, d, val.size)
+    return _seal(head, _PERMK_SLOT_EXT.pack(slot, shift % max(period, 1),
+                                            period) + val.tobytes())
 
 
 def permk_shift(idx_row: np.ndarray, node: int, n: int) -> int:
@@ -239,13 +273,55 @@ def permk_shift(idx_row: np.ndarray, node: int, n: int) -> int:
 # decode
 # ---------------------------------------------------------------------------
 
+def _expected_len(fmt: int, count: int) -> int:
+    """Record length the header declares — header + format ext + body."""
+    if fmt == FMT_PERMK:
+        return HEADER_BYTES + PERMK_EXT_BYTES + 4 * count
+    if fmt == FMT_PERMK_SLOT:
+        return HEADER_BYTES + PERMK_SLOT_EXT_BYTES + 4 * count
+    if fmt == FMT_SPARSE_IDX:
+        return HEADER_BYTES + REC_DTYPE.itemsize * count
+    return HEADER_BYTES + 4 * count      # DENSE / SPARSE_SEED
+
+
+def verify(buf: bytes) -> None:
+    """Integrity-check one record without decoding its body.
+
+    Raises :class:`WireTruncatedError` when the buffer cannot hold what
+    the header declares, :class:`WireDecodeError` on an unknown version
+    or format byte, and :class:`WireCorruptionError` when the CRC32 at
+    offset 16 disagrees with the record's bytes.  Any of these means the
+    server must treat the message as dropped."""
+    if len(buf) < HEADER_BYTES:
+        raise WireTruncatedError(
+            f"buffer of {len(buf)} bytes is shorter than the "
+            f"{HEADER_BYTES}-byte wire header")
+    ver, fmt, _, _, _, count, crc = _HEADER.unpack_from(buf, 0)
+    if ver != WIRE_VERSION:
+        raise WireDecodeError(f"wire version {ver} != {WIRE_VERSION}")
+    if fmt not in FMT_NAMES:
+        raise WireDecodeError(f"unknown wire fmt {fmt}")
+    need = _expected_len(fmt, count)
+    if len(buf) < need:
+        raise WireTruncatedError(
+            f"{FMT_NAMES[fmt]} record declares count={count} "
+            f"({need} bytes) but the buffer holds only {len(buf)}")
+    got = zlib.crc32(buf[HEADER_BYTES:], zlib.crc32(buf[:CRC_OFFSET]))
+    if got != crc:
+        raise WireCorruptionError(
+            f"crc32 mismatch on {FMT_NAMES[fmt]} record: header says "
+            f"{crc:#010x}, bytes hash to {got:#010x}")
+
+
 def decode(buf: bytes, *, shared_indices=None) -> WireMessage:
     """Decode one message.  ``shared_indices`` supplies the seed-derived
     support for ``SPARSE_SEED`` (the receiver recomputes it from the round
-    plan); PERMK is self-describing (count + slice header)."""
-    ver, fmt, node, t, d, count = _HEADER.unpack_from(buf, 0)
-    if ver != WIRE_VERSION:
-        raise ValueError(f"wire version {ver} != {WIRE_VERSION}")
+    plan); PERMK is self-describing (count + slice header).  Truncated or
+    corrupted records raise a :class:`WireDecodeError` subclass (see
+    :func:`verify`) instead of mis-parsing."""
+    buf = bytes(buf)
+    verify(buf)
+    ver, fmt, node, t, d, count, _crc = _HEADER.unpack_from(buf, 0)
     off = HEADER_BYTES
     if fmt == FMT_DENSE:
         values = np.frombuffer(buf, "<f4", count, off)
@@ -279,7 +355,7 @@ def decode(buf: bytes, *, shared_indices=None) -> WireMessage:
         keep = c < d
         return WireMessage(fmt, node, t, d, values[keep], c[keep],
                            shift=shift, period=period, slot=slot)
-    raise ValueError(f"unknown wire fmt {fmt}")
+    raise WireDecodeError(f"unknown wire fmt {fmt}")
 
 
 def measured_bytes(buf: Optional[bytes]) -> int:
@@ -308,7 +384,7 @@ def round_bytes(bufs: Sequence[Optional[bytes]]) -> RoundBytes:
         per_node.append(measured_bytes(buf))
         if buf is None:
             continue
-        ver, fmt, _, _, _, count = _HEADER.unpack_from(buf, 0)
+        ver, fmt, _, _, _, count, _crc = _HEADER.unpack_from(buf, 0)
         h = HEADER_BYTES
         if fmt == FMT_PERMK:
             h += PERMK_EXT_BYTES
@@ -340,8 +416,9 @@ def shared_support(plan: Plan) -> Optional[np.ndarray]:
 
 def _headers_u8(fmt: int, nodes: np.ndarray, t: int, d: int,
                 counts) -> np.ndarray:
-    """(rows, 16) uint8 header block for ``nodes`` — one vectorized fill of
-    :data:`HDR_DTYPE` instead of per-node ``struct.pack`` calls."""
+    """(rows, 20) uint8 header block for ``nodes`` — one vectorized fill of
+    :data:`HDR_DTYPE` instead of per-node ``struct.pack`` calls.  The crc
+    field is left zero; :func:`_emit_rows` seals each finished record."""
     if nodes.size and int(nodes.max()) > np.iinfo(np.uint16).max:
         # preserve struct.pack('<BBHIII')'s loud overflow instead of
         # silently wrapping client ids in the u16 node field — sampled
@@ -358,16 +435,19 @@ def _headers_u8(fmt: int, nodes: np.ndarray, t: int, d: int,
     h["round"] = t
     h["d"] = d
     h["count"] = counts
+    h["crc"] = 0
     return h.view(np.uint8).reshape(nodes.size, HEADER_BYTES)
 
 
 def _emit_rows(n: int, nodes: np.ndarray,
                packed: np.ndarray) -> List[Optional[bytes]]:
     """Scatter the (rows, L) uint8 matrix into the per-node buffer list
-    (absent nodes stay None — zero bytes on the wire)."""
+    (absent nodes stay None — zero bytes on the wire), sealing each row's
+    crc32 — byte-identical to the scalar encoders' :func:`_seal`."""
     out: List[Optional[bytes]] = [None] * n
     for pos, i in enumerate(nodes):
-        out[int(i)] = packed[pos].tobytes()
+        b = packed[pos].tobytes()
+        out[int(i)] = _seal(b[:CRC_OFFSET], b[HEADER_BYTES:])
     return out
 
 
@@ -498,8 +578,8 @@ def encode_round(rc, plan: Optional[Plan], msgs, t: int, *,
         hdr = _headers_u8(FMT_SPARSE_IDX, hdr_nodes, t, d, counts)
         out: List[Optional[bytes]] = [None] * n
         for pos, i in enumerate(nodes):
-            out[int(i)] = hdr[pos].tobytes() \
-                + rec[offs[pos]:offs[pos + 1]].tobytes()
+            out[int(i)] = _seal(hdr[pos].tobytes()[:CRC_OFFSET],
+                                rec[offs[pos]:offs[pos + 1]].tobytes())
         return out
 
     # passthrough / dither: dense fp32 rows

@@ -52,6 +52,38 @@ class StepInfo(NamedTuple):
     payload: Any = 0.0
 
 
+class FaultStep(NamedTuple):
+    """Per-round fault gating for ``Method.step_full`` (DESIGN.md §18),
+    realized host-side by :mod:`repro.fed.faults` and threaded through the
+    simulators' scans as (n,) boolean masks.
+
+    * ``drop``  — client i's round is DISCARDED end to end: its message
+      never reaches the server (``g`` loses the ``m_i / n`` term) and the
+      client keeps its pre-round ``(h_i, g_i)`` — crashes, lost/corrupted
+      uploads, missed broadcasts, and deadline cuts all land here.  The
+      gating runs AFTER the estimator, so the round's traced math — and
+      its RNG stream — is identical to the fault-free engine; only the
+      commit is masked.
+    * ``reset`` — client i rebooted with blank state THIS round
+      (rejoin="reset"): its ``(h_i, g_i)`` are zeroed BEFORE the
+      h-update, and the server subtracts the forgotten ``g_i / n``
+      (modeled as a reliable out-of-band reset notice) so the invariant
+      ``g = mean_i(g_local_i)`` survives.  None means rejoin="stale" —
+      the outage freezes state, nothing else.
+
+    ``faults=None`` (the default) keeps the traced body byte-identical to
+    the fault-free engine — the zero-fault bit-identity anchor the
+    simulators' parity tests rely on.  ``bits_sent`` intentionally still
+    counts dropped uploads: the client DID transmit; the wire lost it.
+    Only gracefully-degrading rules accept faults — ``sync_requires_all``
+    rules recover every message via simulator-billed retries, so their
+    math never sees a fault.
+    """
+
+    drop: jax.Array
+    reset: Optional[jax.Array] = None
+
+
 class MethodState(NamedTuple):
     """Unified method state; the substrate decides what each field holds
     ((n, d) arrays + a (d,) iterate, or node-axis pytrees + a params tree).
@@ -165,7 +197,8 @@ class Method(NamedTuple):
                                bits_sent=jnp.asarray(bits0, jnp.float32))
 
         def step_full(state: MethodState, data=None, *, deficit=None,
-                      window=None) -> Tuple[MethodState, StepInfo]:
+                      window=None, faults: Optional[FaultStep] = None
+                      ) -> Tuple[MethodState, StepInfo]:
             """One round, returning the wire-observable internals too
             (:class:`StepInfo`).  ``step`` is this with the info dropped —
             same traced body, so observers never fork the math.
@@ -191,7 +224,29 @@ class Method(NamedTuple):
             ``state.g_local`` then hold instead of the (n, d) store —
             k_c is still split off, so the RNG chain and every drawn
             plan are unchanged and the round stays bit-identical to
-            the scatter store."""
+            the scatter store.
+
+            ``faults`` is the fault-injection hook (DESIGN.md §18): a
+            :class:`FaultStep` of (n,) masks.  Reset rows are zeroed
+            before the h-update (with the matching server correction);
+            drop rows are reverted AFTER the estimator — the traced
+            math up to the commit is untouched, so a zero-mask
+            FaultStep is arithmetically (though not trace-) identical
+            to ``faults=None``, and ``faults=None`` is trace-identical
+            to the fault-free engine."""
+            if faults is not None:
+                if rule.sync_requires_all:
+                    raise ValueError(
+                        f"variant {rule.name!r} synchronizes all clients "
+                        "(sync_requires_all): the simulator recovers its "
+                        "missing messages via retries, so its math never "
+                        "sees a fault — faults= is for gracefully-"
+                        "degrading rules")
+                if samples or window is not None:
+                    raise ValueError(
+                        "faults= is not supported on sampled-client "
+                        "substrates (cohort sampling already models "
+                        "absence; composing both is future work)")
             key, k_h, k_c, k_coin = jax.random.split(state.key, 4)
             # line 4 (server) + broadcast
             g_vis = state.g if deficit is None \
@@ -217,6 +272,15 @@ class Method(NamedTuple):
             else:
                 h_prev = rsub.gather_nodes(state.h_local)
                 g_prev = rsub.gather_nodes(state.g_local)
+            reset_corr = None
+            if faults is not None and faults.reset is not None:
+                # rejoin="reset": the client reboots blank BEFORE this
+                # round's h-update, and the server forgets its g_i/n term
+                rmask = faults.reset[:, None]
+                reset_corr = sub.mean_nodes(
+                    jnp.where(rmask, g_prev, jnp.zeros_like(g_prev)))
+                h_prev = jnp.where(rmask, jnp.zeros_like(h_prev), h_prev)
+                g_prev = jnp.where(rmask, jnp.zeros_like(g_prev), g_prev)
             # line 8: THE variant-specific line
             h_new, aux = rule.h_update(rsub, k_h, hp, x_new, state.x,
                                        h_prev, data)
@@ -234,6 +298,22 @@ class Method(NamedTuple):
                 h_out = rsub.scatter_nodes(state.h_local, h_out)
                 g_local = rsub.scatter_nodes(state.g_local, g_local)
             g = sub.add_server(state.g, agg)                   # line 14
+            if faults is not None:
+                if msgs is None:
+                    raise ValueError(
+                        "faults= needs a substrate exposing per-node "
+                        "messages (estimator_update_full)")
+                # drop = discard the round: the server never receives
+                # m_i (un-add its mean term) and client i reverts to its
+                # pre-round — post-reset — (h_i, g_i).  bits_sent still
+                # charges the upload: the client DID transmit.
+                dmask = faults.drop[:, None]
+                g = g - sub.mean_nodes(
+                    jnp.where(dmask, msgs.dense(), 0.0))
+                h_out = jnp.where(dmask, h_prev, h_out)
+                g_local = jnp.where(dmask, g_prev, g_local)
+                if reset_corr is not None:
+                    g = g - reset_corr
             coin = h_sync = None
             if rule.has_sync:
                 # Alg. 2 lines 9-11 / MARINA: with prob p ALL nodes upload

@@ -177,6 +177,19 @@ class FlatSubstrate:
         return (msgs.mean(), h_out, gl, self.rc.payload_per_node, msgs,
                 present)
 
+    def round_present(self, state_key):
+        """(n,) Appendix-D participation for the round whose pre-step
+        MethodState key is ``state_key`` — the same plan derivation
+        ``estimator_update_full`` performs (``k_c = split(key, 4)[2]``),
+        recomputable by observers without running the step.  All-ones at
+        full participation.  The fault layer needs it to distinguish a
+        crashed-but-absent client (nothing expected, nothing lost) from a
+        crashed participant (the server waits, then degrades)."""
+        if self.rc.spec.p_participate >= 1.0:
+            return jnp.ones((self.n,), bool)
+        k_c = jax.random.split(state_key, 4)[2]
+        return jnp.ravel(self.rc.plan(k_c).scale) != 0
+
     def round_wire_counts(self, state_key):
         """Per-node shipped value-scalar counts for the round whose
         MethodState key is ``state_key`` (the engine derives

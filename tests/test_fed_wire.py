@@ -349,11 +349,16 @@ def test_vectorized_encode_matches_scalar_loop(name, mode, backend, kw):
 
 def test_header_dtype_matches_struct_layout():
     """HDR_DTYPE (the vectorized header fill) is byte-for-byte the packed
-    ``<BBHIII`` struct the scalar encoders write."""
+    ``<BBHIIII`` struct the scalar encoders write (v2: crc32 at offset
+    16, so the v1 ``<BBHIII`` field prefix is layout-preserved)."""
     h = np.zeros(1, wire.HDR_DTYPE)
-    h["ver"], h["fmt"], h["node"] = 1, 3, 517
+    h["ver"], h["fmt"], h["node"] = 2, 3, 517
     h["round"], h["d"], h["count"] = 123456, 40, 6
-    assert h.tobytes() == wire._HEADER.pack(1, 3, 517, 123456, 40, 6)
+    h["crc"] = 0xDEADBEEF
+    assert h.tobytes() == wire._HEADER.pack(2, 3, 517, 123456, 40, 6,
+                                            0xDEADBEEF)
+    assert h.tobytes()[:wire.CRC_OFFSET] \
+        == wire._HEAD16.pack(2, 3, 517, 123456, 40, 6)
 
 
 def test_golden_round_bytes():
@@ -422,16 +427,69 @@ def test_golden_round_bytes():
             rc_sparse, None, Msgs(vals, idx), 8, coin=True,
             sync_values=dense_vals)),
     }
+    # re-frozen for wire v2 (20-byte header with crc32 at offset 16 —
+    # DESIGN.md §18); the v1 digests died with the checksum-less header
     expected = {
-        "sparse_idx": "149a388e83da2e4c",
-        "sparse_idx_absent": "5508199f6702acf0",
-        "seed": "68e5204a62180698",
-        "dense": "7727e21c73665e2c",
-        "bernoulli": "ad82688a8ef65e87",
-        "permk": "69fd8500bb742e6a",
+        "sparse_idx": "8d3234d6d4239bf1",
+        "sparse_idx_absent": "051dc876eef2d07f",
+        "seed": "b0a0d14adff37bdd",
+        "dense": "f44e6b1fb18cf9ed",
+        "bernoulli": "77ea0cd221089c47",
+        "permk": "eaee3ce16b04d52d",
         # slot-keyed headers: node field = cohort slot (u16-safe at any
         # n); re-frozen when the global-id node field was retired
-        "permk_slot": "b9726eec76ba8ec2",
-        "coin": "9994ec026541d158",
+        "permk_slot": "107e5d9603de4a89",
+        "coin": "ce49eecd423c2623",
     }
     assert got == expected, got
+
+
+# ---------------------------------------------------------------------------
+# wire v2 integrity: truncation + corruption (DESIGN.md §18)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,mode,backend,kw", CASES)
+def test_decode_rejects_clipped_buffers(name, mode, backend, kw):
+    """Fuzz every prefix of every format's record: a clipped buffer must
+    raise a WireDecodeError (truncation), never mis-parse or crash with
+    an unrelated numpy error."""
+    rc, plan, msgs = _round(name, mode, backend, kw)
+    buf = next(b for b in wire.encode_round(rc, plan, msgs, t=2)
+               if b is not None)
+    for clip in range(len(buf)):
+        with pytest.raises(wire.WireDecodeError):
+            wire.decode(buf[:clip])
+
+
+@pytest.mark.parametrize("name,mode,backend,kw", CASES)
+def test_decode_detects_single_byte_corruption(name, mode, backend, kw):
+    """Flip each byte of the record in turn: CRC32 detects every single-
+    byte error (header fields included), so decode always raises."""
+    rc, plan, msgs = _round(name, mode, backend, kw)
+    buf = next(b for b in wire.encode_round(rc, plan, msgs, t=2)
+               if b is not None)
+    wire.verify(buf)                       # pristine record passes
+    for pos in range(len(buf)):
+        bad = bytearray(buf)
+        bad[pos] ^= 0x5A
+        with pytest.raises(wire.WireDecodeError):
+            wire.decode(bytes(bad))
+
+
+def test_corruption_error_taxonomy():
+    """The three failure classes are distinguishable and all ValueError."""
+    buf = wire.encode_dense(1, 4, np.ones(8, np.float32))
+    with pytest.raises(wire.WireTruncatedError):
+        wire.decode(buf[:10])              # shorter than the header
+    with pytest.raises(wire.WireTruncatedError):
+        wire.decode(buf[:-4])              # body shorter than count says
+    body_flip = bytearray(buf)
+    body_flip[-1] ^= 0xFF
+    with pytest.raises(wire.WireCorruptionError):
+        wire.decode(bytes(body_flip))      # crc catches a body flip
+    ver_flip = bytearray(buf)
+    ver_flip[0] = 9
+    with pytest.raises(wire.WireDecodeError):
+        wire.decode(bytes(ver_flip))       # unknown version
+    assert issubclass(wire.WireCorruptionError, ValueError)
+    assert issubclass(wire.WireTruncatedError, ValueError)
